@@ -1,0 +1,40 @@
+"""DHT scaling: iterative-lookup rounds vs network size (O(log N))."""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Generator, List
+
+from repro.core.fleet import make_fleet
+
+
+def main(report: List[str]) -> None:
+    report.append("# Kademlia lookup cost vs N (paper: O(log N))")
+    report.append(f"{'N':>5} {'avg_rounds':>10} {'avg_queries':>11} "
+                  f"{'avg_latency_s':>13}")
+    for n in (8, 16, 32, 64):
+        fleet = make_fleet(n, seed=31, same_region="us")
+        sim = fleet.sim
+        node = fleet.peers[0]
+        node.dht.stats.update({"rounds": 0, "queries": 0, "lookups": 0})
+        t_total = 0.0
+        n_lookups = 10
+        for i in range(n_lookups):
+            key = hashlib.sha256(f"key-{i}".encode()).digest()
+
+            def lookup(key=key) -> Generator:
+                t0 = sim.now
+                yield from node.dht.find_node(key)
+                return sim.now - t0
+
+            t_total += sim.run_process(lookup(), until=sim.now + 600)
+        s = node.dht.stats
+        report.append(f"{n:>5} {s['rounds']/n_lookups:>10.1f} "
+                      f"{s['queries']/n_lookups:>11.1f} "
+                      f"{t_total/n_lookups:>13.4f}")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    main(out)
+    print("\n".join(out))

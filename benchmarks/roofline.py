@@ -1,0 +1,104 @@
+"""Roofline terms per (arch × shape) from the dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOP/s      (197 TF/s bf16, v5e)
+    memory     = HLO_bytes_per_dev / HBM_bw           (819 GB/s)
+    collective = collective_bytes_per_dev / link_bw   (50 GB/s/link)
+
+Caveat recorded per row: XLA's cost_analysis counts while-loop bodies ONCE
+(scan over layers / microbatches / chunks), so HLO_FLOPs is a lower bound;
+MODEL_FLOPS (6·N·D train, 2·N·D inference, N=active params) is the analytic
+cross-check and the ratio column flags the undercount (ratio >> 1 ==> deep
+scan nesting; ratio << 1 ==> remat/redundant compute).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def analyze_record(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if "error" in rec or "skipped" in rec:
+        return None
+    n_dev = rec.get("n_devices", 256)
+    compute = rec["hlo_flops_per_dev"] / PEAK_FLOPS
+    memory = rec["hlo_bytes_per_dev"] / HBM_BW
+    collective = rec["collective_bytes_per_dev"] / LINK_BW
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    n_active = rec["active_params"]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    model_flops_per_dev = mult * n_active * tokens / n_dev
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    total = max(sum(terms.values()), 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "dominant_frac": terms[dominant] / total,
+        "model_flops_per_dev": model_flops_per_dev,
+        "hlo_flops_per_dev": rec["hlo_flops_per_dev"],
+        "flops_ratio": model_flops_per_dev / max(rec["hlo_flops_per_dev"], 1),
+        "mem_gib_per_dev": (rec["bytes_args_per_dev"]
+                            + rec["bytes_temp_per_dev"]
+                            + rec["bytes_out_per_dev"]) / 2**30,
+        "collectives": rec.get("collective_counts", {}),
+    }
+
+
+def suggest(row: Dict[str, Any]) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("reshard to cut the dominant collective (all-reduce -> "
+                "reduce-scatter, or keep activations sharded through the "
+                "boundary)")
+    if d == "memory":
+        return ("shrink the live set: smaller microbatch / tighter remat "
+                "policy / keep caches sharded; check for f32 upcasts of "
+                "bf16 stashes")
+    return ("compute-bound: raise MXU utilization (128-aligned tiles, "
+            "fused kernels) or shed redundant recompute")
+
+
+def load(path: str) -> List[Dict[str, Any]]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(report: List[str],
+         path: str = "dryrun_single_pod.json") -> List[Dict[str, Any]]:
+    if not os.path.exists(path):
+        report.append(f"# Roofline: {path} missing — run "
+                      "`python -m repro.launch.dryrun --all --out {path}`")
+        return []
+    rows = [r for r in (analyze_record(x) for x in load(path)) if r]
+    report.append("# Roofline terms per (arch × shape), single-pod 16×16 "
+                  "(seconds/step/device)")
+    report.append(
+        f"{'arch':<17}{'shape':<13}{'compute':>10}{'memory':>10}"
+        f"{'collect':>10} {'dominant':<11}{'mem_GiB':>8}{'MF/HF':>7}")
+    for r in rows:
+        report.append(
+            f"{r['arch']:<17}{r['shape']:<13}{r['compute_s']:>10.2e}"
+            f"{r['memory_s']:>10.2e}{r['collective_s']:>10.2e} "
+            f"{r['dominant']:<11}{r['mem_gib_per_dev']:>8.1f}"
+            f"{r['flops_ratio']:>7.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    main(out)
+    print("\n".join(out))

@@ -1,0 +1,90 @@
+"""Paper Table 1: RPC throughput at 1000 concurrent calls (QPS).
+
+Client and server are 4-core hosts on the four network scenarios; each
+worker issues sequential unary calls over the shared secured connection.
+The CPU-bound rows (Local, LAN) reproduce the paper's numbers from the
+calibrated per-message/per-byte costs; the WAN rows are latency/bandwidth
+bound (see EXPERIMENTS.md for the deviation analysis — the simulator omits
+TCP congestion dynamics, so small-payload WAN rows run faster than the
+paper's measurement).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Generator, List, Tuple
+
+from repro.core import LatticaNode, Network, Sim, call_unary
+from repro.core.rpc import RpcContext
+
+CONCURRENCY = 1000
+CALLS_PER_WORKER = 4
+
+#: scenario name -> (regions, zones, machine tags) for the two hosts
+SCENARIOS = {
+    "local_same_host": (("us", "us"), ("a", "a"), ("m1", "m1")),
+    "same_region_lan": (("us", "us"), ("a", "a"), (None, None)),
+    "same_region_wan": (("us", "us"), ("a", "b"), (None, None)),
+    "inter_continent": (("us", "ap"), ("a", "x"), (None, None)),
+}
+
+PAPER_TABLE1 = {  # scenario -> (qps @128B, qps @256KB)
+    "local_same_host": (10000, 850),
+    "same_region_lan": (8000, 600),
+    "same_region_wan": (3000, 280),
+    "inter_continent": (1200, 110),
+}
+
+
+def measure(scenario: str, payload: int, seed: int = 0) -> float:
+    regions, zones, machines = SCENARIOS[scenario]
+    sim = Sim(seed=seed)
+    net = Network(sim)
+    client = LatticaNode(net, "client", region=regions[0], zone=zones[0],
+                         machine=machines[0])
+    server = LatticaNode(net, "server", region=regions[1], zone=zones[1],
+                         machine=machines[1])
+
+    def handler(req, ctx: RpcContext):
+        # echo service: response carries the payload back
+        yield ctx.cpu(0)
+        return b"x", payload
+
+    server.router.register_unary("bench.echo", handler)
+
+    def run() -> Generator:
+        conn = yield from client.connect_info(server.info())
+        done = {"n": 0}
+
+        def worker() -> Generator:
+            for _ in range(CALLS_PER_WORKER):
+                # small request, `payload`-sized response (one-way payload,
+                # matching the paper's ping-style measurement)
+                yield from call_unary(client.host, conn, "bench.echo",
+                                      b"q", size=96, timeout=600.0)
+                done["n"] += 1
+
+        t0 = sim.now
+        procs = [sim.process(worker()) for _ in range(CONCURRENCY)]
+        yield sim.all_of(procs)
+        elapsed = sim.now - t0
+        return done["n"] / elapsed
+
+    return sim.run_process(run(), until=sim.now + 36000)
+
+
+def main(report: List[str]) -> None:
+    report.append("# Table 1 — RPC throughput, 1000 concurrent calls (QPS)")
+    report.append(f"{'scenario':<18} {'payload':>8} {'sim_qps':>9} "
+                  f"{'paper_qps':>9} {'ratio':>6}")
+    for scenario in SCENARIOS:
+        for payload, col in ((128, 0), (256 * 1024, 1)):
+            qps = measure(scenario, payload)
+            paper = PAPER_TABLE1[scenario][col]
+            report.append(f"{scenario:<18} {payload:>8} {qps:>9.0f} "
+                          f"{paper:>9} {qps / paper:>6.2f}")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    main(out)
+    print("\n".join(out))

@@ -1,0 +1,67 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip roofline,...]
+
+Sections:
+    table1      RPC throughput (paper Table 1)
+    nat         NAT traversal success rate (paper §4, ~70% direct)
+    dht         Kademlia lookup scaling (O(log N))
+    cdn         model dissemination via Bitswap (Fig. 1-2/3)
+    crdt        replicated-store convergence
+    shards      sharded inference + failover (Fig. 1-4)
+    roofline    arch × shape roofline terms from the dry-run artifacts
+
+Also emits a machine-readable ``name,us_per_call,derived`` CSV per section.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Callable, List, Tuple
+
+from . import (crdt_sync, dht_lookup, model_sync, nat_traversal, roofline,
+               rpc_throughput, sharded_inference)
+
+SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
+    ("table1", rpc_throughput.main),
+    ("nat", nat_traversal.main),
+    ("dht", dht_lookup.main),
+    ("cdn", model_sync.main),
+    ("crdt", crdt_sync.main),
+    ("shards", sharded_inference.main),
+    ("roofline", roofline.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", default="", help="comma-separated sections")
+    ap.add_argument("--only", default="", help="comma-separated sections")
+    args = ap.parse_args()
+    skip = set(filter(None, args.skip.split(",")))
+    only = set(filter(None, args.only.split(",")))
+
+    csv_lines = ["name,us_per_call,derived"]
+    for name, fn in SECTIONS:
+        if name in skip or (only and name not in only):
+            continue
+        report: List[str] = []
+        t0 = time.time()
+        try:
+            fn(report)
+            status = "ok"
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            report.append(f"!! section {name} failed: {e!r}")
+            status = "fail"
+        dt = time.time() - t0
+        print(f"\n===== [{name}] ({dt:.1f}s wall) =====")
+        print("\n".join(report))
+        csv_lines.append(f"{name},{dt * 1e6:.0f},{status}")
+    print("\n===== CSV =====")
+    print("\n".join(csv_lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver — the paper's RL pipeline (Fig. 1, Scenario 3).
+
+A training cluster trains a language model on the synthetic corpus and
+periodically publishes model versions into the Lattica mesh as
+content-addressed chunks; two inference clusters behind NATs discover each
+version via the CRDT registry + pubsub and swarm-fetch it with Bitswap.
+
+    PYTHONPATH=src python examples/rl_fleet_sync.py               # ~10M model
+    PYTHONPATH=src python examples/rl_fleet_sync.py --size 100m --steps 300
+
+The default runs a reduced model so CPU wall-time stays in minutes; --size
+100m is the full-scale variant of the same driver (same code path).
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.checkpoint.lattica_ckpt import CheckpointRegistry
+from repro.configs import get_config
+from repro.core.fleet import make_fleet
+from repro.data import make_batch_iterator
+from repro.optim import wsd_schedule
+from repro.train import train_state_init
+from repro.train.trainer import LatticaSyncTrainer, ModelSubscriber
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=["small", "100m"], default="small")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--publish-every", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.size == "100m":
+        cfg = get_config("minicpm-2b").reduced(
+            n_layers=10, d_model=768, vocab=32768)
+    else:
+        cfg = get_config("minicpm-2b").reduced(
+            n_layers=4, d_model=256, vocab=4096)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        train_state_init(cfg, jax.random.PRNGKey(0)).params))
+    print(f"model: {cfg.name}-family, {n_params/1e6:.1f}M params")
+
+    print("building mesh: 1 trainer cluster + 2 inference clusters "
+          "(NAT-mixed) ...")
+    fleet = make_fleet(8, seed=5)
+    sim = fleet.sim
+    trainer_node = fleet.peers[0]
+    edge_a, edge_b = fleet.peers[-2], fleet.peers[-1]
+
+    state = train_state_init(cfg, jax.random.PRNGKey(0))
+    data = make_batch_iterator(cfg.vocab, args.seq, args.batch, seed=0)
+    trainer = LatticaSyncTrainer(
+        cfg, state, wsd_schedule(3e-3, 10, args.steps - 30, 20), data,
+        node=trainer_node, fleet="rl-fleet",
+        publish_every=args.publish_every, step_seconds=0.5)
+
+    subs = [ModelSubscriber(n, cfg, "rl-fleet", like=state.params)
+            for n in (edge_a, edge_b)]
+    procs = [sim.process(trainer.run_mesh(args.steps))]
+    procs += [sim.process(s.follow(interval=3.0, until_step=args.steps - 1))
+              for s in subs]
+    sim.run(until=sim.now + 86400)
+
+    print(f"\ntrainer: loss {trainer.history[0]['loss']:.3f} -> "
+          f"{trainer.history[-1]['loss']:.3f} over {args.steps} steps, "
+          f"{len(trainer.published)} versions published")
+    for s, name in zip(subs, ("edge_a", "edge_b")):
+        log = s.fetch_log
+        total_mb = sum(1 for _ in log)
+        print(f"{name} ({s.node.host.name}, "
+              f"{s.node.transport.reachability}): followed to step "
+              f"{s.current_step}; {len(log)} fetches, last took "
+              f"{log[-1]['t_fetch']:.2f}s (sim)")
+        reg = CheckpointRegistry(s.node, "rl-fleet")
+        assert reg.latest() == CheckpointRegistry(
+            trainer_node, "rl-fleet").latest(), "registry diverged!"
+    import numpy as np
+    for s in subs:
+        for a, b in zip(jax.tree.leaves(trainer.state.params),
+                        jax.tree.leaves(s.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("edge clusters hold bit-identical latest params — "
+          "registry + CDN path verified.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Ad-hoc smoke: build a small mesh, exercise every core subsystem."""
+import sys
+
+from repro.core import (LatticaNode, NATBox, NATKind, Network, Sim)
+
+
+def main():
+    sim = Sim(seed=7)
+    net = Network(sim)
+    # two public bootstrap/relay nodes + a mix of NAT'd peers
+    boot1 = LatticaNode(net, "boot1", region="us", zone="a", serve_rendezvous=True)
+    boot2 = LatticaNode(net, "boot2", region="us", zone="b")
+    boot1.transport.enable_relay()
+    boot2.transport.enable_relay()
+    nodes = [boot1, boot2]
+    kinds = [NATKind.FULL_CONE, NATKind.RESTRICTED_CONE,
+             NATKind.PORT_RESTRICTED, NATKind.SYMMETRIC, None, None]
+    for i, kind in enumerate(kinds):
+        nat = NATBox(net, kind) if kind else None
+        n = LatticaNode(net, f"peer{i}", region="eu" if i % 2 else "us",
+                        zone="a", nat=nat)
+        nodes.append(n)
+
+    # bootstrap servers interconnect (needed for sound AutoNAT forwarding)
+    sim.run_process(boot2.connect_info(boot1.info()))
+    binfos = [boot1.info(), boot2.info()]
+
+    def join(n):
+        reach = yield from n.bootstrap(binfos)
+        return reach
+
+    for n in nodes[2:]:
+        reach = sim.run_process(join(n), until=sim.now + 60)
+        print(f"{n.host.name}: reachability={reach} rt_size={len(n.dht.table)}")
+
+    # DHT put/get across the mesh
+    def put_get():
+        key = b"k" * 32
+        yield from nodes[2].dht.put(key, "hello-lattica")
+        val = yield from nodes[-1].dht.get(key)
+        return val
+
+    print("dht get:", sim.run_process(put_get(), until=sim.now + 120))
+
+    # artifact publish + fetch (bitswap) between two NAT'd peers
+    def artifact():
+        data = bytes(range(256)) * 4096  # 1 MiB
+        root = yield from nodes[3].publish_artifact(data, announce_topic="models")
+        got = yield from nodes[5].fetch_artifact(root)
+        return root, got == data
+
+    root, ok = sim.run_process(artifact(), until=sim.now + 300)
+    print("bitswap fetch ok:", ok, root)
+
+    # CRDT sync
+    def crdt():
+        nodes[2].store.counter("steps").increment("peer0", 10)
+        nodes[4].store.counter("steps").increment("peer2", 5)
+        yield from nodes[2].sync_crdt_with(nodes[4].info())
+        return (nodes[2].store.counter("steps").value(),
+                nodes[4].store.counter("steps").value())
+
+    print("crdt:", sim.run_process(crdt(), until=sim.now + 60))
+
+    # hole punch stats
+    for n in nodes:
+        s = n.transport.stats
+        if any(s.values()):
+            print(n.host.name, s)
+    print("sim time:", round(sim.now, 3), "s")
+
+
+if __name__ == "__main__":
+    main()

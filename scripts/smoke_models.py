@@ -1,0 +1,55 @@
+"""Ad-hoc: run every reduced arch through forward/loss/prefill/decode."""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import ops_for
+
+
+def main():
+    only = sys.argv[1:] or ARCH_IDS
+    for arch in only:
+        t0 = time.time()
+        cfg = get_config(arch).reduced()
+        ops = ops_for(cfg)
+        key = jax.random.PRNGKey(0)
+        params = ops.init(cfg, key)
+        B, S = 2, 32
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        if cfg.arch == "vlm":
+            P = cfg.n_patches
+            batch["vision_embeds"] = jax.random.normal(key, (B, P, cfg.d_model))
+            batch["positions3"] = jnp.broadcast_to(
+                jnp.arange(S + P, dtype=jnp.int32)[None, None], (3, B, S + P))
+        if cfg.arch == "audio":
+            batch["frames"] = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_source))
+        logits, aux = ops.forward(params, cfg, batch)
+        assert logits.shape == (B, S, cfg.vocab), (arch, logits.shape)
+        assert np.isfinite(np.asarray(logits)).all(), arch
+        loss, metrics = ops.loss_fn(params, cfg, batch)
+        assert np.isfinite(float(loss)), arch
+
+        # prefill + 3 decode steps, compare against full forward
+        extra = cfg.n_patches if cfg.arch == "vlm" else 0
+        cache = ops.init_cache(cfg, B, S + 8 + extra)
+        pre = {k: (v[:, :S - 4] if k in ("tokens", "labels") else v)
+               for k, v in batch.items() if k != "labels"}
+        if cfg.arch == "vlm":
+            pre["positions3"] = batch["positions3"][:, :, :cfg.n_patches + S - 4]
+        lg, cache = ops.prefill(params, cfg, pre, cache)
+        errs = []
+        for t in range(S - 4, S - 1):
+            lg2, cache = ops.decode_step(params, cfg, batch["tokens"][:, t], cache)
+            full = logits[:, t + (cfg.n_patches if cfg.arch == 'vlm' else 0) * 0]
+            errs.append(float(jnp.max(jnp.abs(lg2 - logits[:, t]))))
+        print(f"{arch:18s} loss={float(loss):7.3f} "
+              f"decode-vs-forward maxerr={max(errs):.2e}  ({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .serial import params_from_bytes, params_to_bytes
+from .lattica_ckpt import (CheckpointRegistry, fetch_checkpoint,
+                           fetch_latest, publish_checkpoint)
+from .local import load_local, save_local
+
+__all__ = ["params_to_bytes", "params_from_bytes", "CheckpointRegistry",
+           "publish_checkpoint", "fetch_checkpoint", "fetch_latest",
+           "save_local", "load_local"]

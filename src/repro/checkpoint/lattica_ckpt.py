@@ -1,0 +1,95 @@
+"""Checkpoints over Lattica: publish/fetch model versions through the mesh.
+
+The paper's RL-pipeline scenario (Fig. 1-3): a training cluster publishes a
+new model version as CID-addressed chunks; inference clusters discover it
+(pubsub announcement or CRDT register) and swarm-fetch it via Bitswap.  The
+CRDT store is the *model version registry*:
+
+  * ``ckpt/<fleet>``            ORSet of (step, root-CID) — every version
+  * ``ckpt/<fleet>/latest``     LWW register → (step, root-CID)
+  * ``steps/<fleet>``           GCounter of total optimizer steps
+"""
+
+from __future__ import annotations
+
+import pickle
+from typing import Any, Generator, List, Optional, Tuple
+
+from repro.core.cid import CID
+from repro.core.dht import PeerInfo
+from repro.core.node import LatticaNode
+
+from .serial import params_from_bytes, params_to_bytes
+
+
+class CheckpointRegistry:
+    """Typed view over a node's CRDT store for one model fleet."""
+
+    def __init__(self, node: LatticaNode, fleet: str):
+        self.node = node
+        self.fleet = fleet
+
+    @property
+    def topic(self) -> str:
+        return f"{self.fleet}/models"
+
+    def record(self, step: int, root: CID) -> None:
+        """Publisher-side: new version + move the LWW 'latest' pointer."""
+        name = self.node.host.name
+        self.node.store.orset(f"ckpt/{self.fleet}").add(
+            (step, root.codec, root.digest), name)
+        self.node.store.register(f"ckpt/{self.fleet}/latest").set(
+            (step, root.codec, root.digest), self.node.sim.now, name)
+
+    def record_fetched(self, step: int, root: CID) -> None:
+        """Subscriber-side: note a version we hold WITHOUT touching the LWW
+        pointer — re-setting 'latest' with a fresh local timestamp would
+        let an old version win over a newer one after a merge."""
+        self.node.store.orset(f"ckpt/{self.fleet}").add(
+            (step, root.codec, root.digest), self.node.host.name)
+
+    def versions(self) -> List[Tuple[int, CID]]:
+        raw = self.node.store.orset(f"ckpt/{self.fleet}").value()
+        return sorted((s, CID(c, d)) for s, c, d in raw)
+
+    def latest(self) -> Optional[Tuple[int, CID]]:
+        val = self.node.store.register(f"ckpt/{self.fleet}/latest").value()
+        if val is None:
+            return None
+        s, c, d = val
+        return s, CID(c, d)
+
+
+def publish_checkpoint(node: LatticaNode, params: Any, step: int,
+                       fleet: str) -> Generator:
+    """Serialize → chunk → provide on the DHT → announce → record in CRDT.
+    Returns the root CID."""
+    reg = CheckpointRegistry(node, fleet)
+    data = params_to_bytes(params)
+    meta = pickle.dumps({"step": step, "fleet": fleet, "bytes": len(data)})
+    root = yield from node.publish_artifact(data, meta=meta,
+                                            announce_topic=reg.topic)
+    reg.record(step, root)
+    node.store.counter(f"steps/{fleet}").increment(node.host.name, 1)
+    return root
+
+
+def fetch_checkpoint(node: LatticaNode, root: CID, like: Any = None,
+                     hint_providers: Optional[List[PeerInfo]] = None,
+                     ) -> Generator:
+    """Swarm-fetch a model version; returns the params pytree."""
+    data = yield from node.fetch_artifact(root, hint_providers)
+    return params_from_bytes(data, like)
+
+
+def fetch_latest(node: LatticaNode, fleet: str, like: Any = None,
+                 ) -> Generator:
+    """Resolve the fleet's latest version from the CRDT registry and fetch.
+    Returns (step, params) or (None, None) when no version is known."""
+    reg = CheckpointRegistry(node, fleet)
+    latest = reg.latest()
+    if latest is None:
+        return None, None
+    step, root = latest
+    params = yield from fetch_checkpoint(node, root, like)
+    return step, params

@@ -1,0 +1,24 @@
+"""Plain local-disk checkpointing (same canonical blob as the mesh path)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+from .serial import params_from_bytes, params_to_bytes
+
+
+def save_local(path: str, params: Any) -> int:
+    data = params_to_bytes(params)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+    return len(data)
+
+
+def load_local(path: str, like: Any = None) -> Any:
+    with open(path, "rb") as f:
+        data = f.read()
+    return params_from_bytes(data, like)

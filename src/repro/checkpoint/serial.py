@@ -1,0 +1,71 @@
+"""Canonical pytree <-> bytes serialization for content addressing.
+
+Deterministic layout (sorted key-paths) so identical params always produce
+identical CIDs — the property that makes checkpoints deduplicate across the
+mesh and lets unchanged chunks skip re-transfer between model versions.
+"""
+
+from __future__ import annotations
+
+import pickle
+import struct
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+_MAGIC = b"LCK1"
+
+
+def _path_str(path: Tuple) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def params_to_bytes(params: Any) -> bytes:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    entries = sorted(
+        ((_path_str(path), np.asarray(leaf)) for path, leaf in leaves_with_paths),
+        key=lambda kv: kv[0])
+    index: List[Tuple[str, str, Tuple[int, ...], int]] = []
+    blobs: List[bytes] = []
+    off = 0
+    for name, arr in entries:
+        raw = np.ascontiguousarray(arr).tobytes()
+        index.append((name, str(arr.dtype), tuple(arr.shape), off))
+        blobs.append(raw)
+        off += len(raw)
+    head = pickle.dumps(index)
+    return b"".join([_MAGIC, struct.pack(">I", len(head)), head] + blobs)
+
+
+def params_from_bytes(data: bytes, like: Any = None) -> Any:
+    assert data[:4] == _MAGIC, "not a checkpoint blob"
+    (hlen,) = struct.unpack(">I", data[4:8])
+    index = pickle.loads(data[8:8 + hlen])
+    base = 8 + hlen
+    flat: Dict[str, np.ndarray] = {}
+    for name, dtype, shape, off in index:
+        arr = np.frombuffer(
+            data, dtype=np.dtype(dtype), offset=base + off,
+            count=int(np.prod(shape, dtype=np.int64)) if shape else 1,
+        ).reshape(shape)
+        flat[name] = arr
+    if like is None:
+        return flat
+    # restore into the structure of ``like``
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths_and_leaves[0]:
+        name = _path_str(path)
+        arr = flat[name]
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), (name, arr.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(paths_and_leaves[1], leaves)

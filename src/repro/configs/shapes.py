@@ -1,0 +1,124 @@
+"""Assigned input shapes + ShapeDtypeStruct specs for the dry-run.
+
+``input_specs`` builds weak-type-correct, shardable stand-ins for every
+model input — no device allocation, exactly what ``jax.jit(...).lower()``
+needs for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+#: Sliding window used when a full-attention arch runs long_500k via the
+#: implemented sliding-window variant (see DESIGN.md §5).
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is (arch, shape) runnable?  Returns (supported, reason)."""
+    if shape.name == "long_500k":
+        if cfg.arch == "audio":
+            return False, ("encoder-decoder ASR has no 500k-token decode use "
+                           "case (source is <=enc_seq frames); skipped per "
+                           "DESIGN.md carve-out")
+        # ssm/hybrid run natively; dense/moe/vlm run the sliding-window
+        # variant (cfg_for_shape swaps the window in)
+    return True, ""
+
+
+def cfg_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Variant selection: full-attention archs get a sliding window for
+    long_500k so decode memory is O(window), not O(seq)."""
+    if (shape.name == "long_500k" and cfg.window == 0
+            and cfg.arch in ("dense", "moe", "vlm")):
+        return replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape: Tuple[int, ...], dtype: Any) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype: Any = jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) step's data inputs.
+
+    train/prefill: the token batch (+ modality stubs).  decode: ONE new
+    token per sequence (the KV/state cache is built separately via
+    ``cache_specs``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.arch == "vlm":
+            P = cfg.n_patches
+            batch["tokens"] = _sds((B, S - P), jnp.int32)
+            batch["vision_embeds"] = _sds((B, P, cfg.d_model), dtype)
+            batch["positions3"] = _sds((3, B, S), jnp.int32)
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, S - P), jnp.int32)
+        elif cfg.arch == "audio":
+            batch["tokens"] = _sds((B, S), jnp.int32)
+            batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_source), dtype)
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, S), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+            if shape.kind == "train":
+                batch["labels"] = _sds((B, S), jnp.int32)
+        return batch
+    # decode: one token per sequence
+    return {"token": _sds((B,), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape,
+                dtype: Any = jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree matching ``ops.init_cache`` for decode."""
+    from repro.models import ops_for
+
+    ops = ops_for(cfg)
+    cache = jax.eval_shape(
+        lambda: ops.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+    return cache
+
+
+def concrete_batch(cfg: ModelConfig, shape: InputShape, seed: int = 0,
+                   dtype: Any = jnp.float32) -> Dict[str, Any]:
+    """Small-scale concrete inputs (smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    specs = input_specs(cfg, shape, dtype)
+    out: Dict[str, Any] = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32
+                                          ).astype(s.dtype)
+    return out

@@ -1,0 +1,34 @@
+"""Lattica core: decentralized cross-NAT communication substrate.
+
+The paper's contribution, as composable pieces:
+
+* :mod:`repro.core.simnet` — deterministic discrete-event network
+* :mod:`repro.core.nat` / :mod:`repro.core.traversal` — NAT models, dialer,
+  AutoNAT, circuit relay, DCUtR hole punching (Scenario 1)
+* :mod:`repro.core.cid` / :mod:`repro.core.blockstore` /
+  :mod:`repro.core.bitswap` — content addressing + block exchange (Scenario 2)
+* :mod:`repro.core.dht` — Kademlia discovery/provider records
+* :mod:`repro.core.crdt` — the decentralized replicated store
+* :mod:`repro.core.rpc` — dual-plane RPC (unary + backpressured streaming)
+* :mod:`repro.core.pubsub` / :mod:`repro.core.rendezvous` — announcement paths
+* :mod:`repro.core.node` — ``LatticaNode``, the composed SDK surface
+"""
+
+from .cid import CID, DAG, build_dag, chunk, decode_manifest, encode_manifest
+from .crdt import (GCounter, LWWRegister, MVRegister, ORSet, PNCounter,
+                   ReplicatedStore)
+from .dht import KademliaDHT, PeerInfo, RoutingTable
+from .nat import NATBox, NATKind
+from .node import LatticaNode
+from .peer import Multiaddr, PeerId
+from .rpc import RpcChannel, RpcError, RpcRouter, call_unary, open_channel
+from .simnet import Connection, DialError, Host, Network, Sim, Stream
+
+__all__ = [
+    "CID", "DAG", "build_dag", "chunk", "decode_manifest", "encode_manifest",
+    "GCounter", "LWWRegister", "MVRegister", "ORSet", "PNCounter",
+    "ReplicatedStore", "KademliaDHT", "PeerInfo", "RoutingTable",
+    "NATBox", "NATKind", "LatticaNode", "Multiaddr", "PeerId",
+    "RpcChannel", "RpcError", "RpcRouter", "call_unary", "open_channel",
+    "Connection", "DialError", "Host", "Network", "Sim", "Stream",
+]

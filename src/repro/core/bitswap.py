@@ -1,0 +1,221 @@
+"""Bitswap-style block exchange (the paper's decentralized-CDN layer).
+
+Wantlist-driven parallel block fetch: a session resolves providers via the
+DHT (or a rendezvous hint), pulls the manifest, then swarms the leaf blocks
+across every live provider with a bounded in-flight window.  Each block is
+hash-verified against its CID on arrival; fetched blocks are stored and
+re-provided, so popular artifacts gain seeders as they spread — this is what
+makes RL fleet-wide model dissemination scale in the paper's Scenario 3.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Dict, Generator, List, Optional, Set, TYPE_CHECKING
+
+from .cid import CID, decode_manifest
+from .dht import PeerInfo
+from .rpc import RpcChannel, RpcContext, RpcError, call_unary, open_channel
+from .simnet import DialError
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .node import LatticaNode
+
+MAX_IN_FLIGHT = 32
+BLOCK_REQ_SIZE = 96
+#: above this many wanted blocks per provider, use the streaming plane
+#: (one backpressured channel per provider) instead of per-block unary
+STREAM_FETCH_MIN = 4
+
+
+class FetchError(Exception):
+    pass
+
+
+class Bitswap:
+    def __init__(self, node: "LatticaNode"):
+        self.node = node
+        self.stats = {"blocks_served": 0, "blocks_fetched": 0,
+                      "bytes_served": 0, "bytes_fetched": 0, "retries": 0,
+                      "stream_sessions": 0}
+        node.router.register_unary("bs.get", self._h_get)
+        node.router.register_streaming("bs.fetch", self._h_fetch_stream)
+
+    # ------------------------------------------------------------- server
+    def _h_get(self, payload: Any, ctx: RpcContext) -> Generator:
+        cid: CID = payload
+        block = self.node.blockstore.get(cid)
+        yield ctx.cpu(8e-6)
+        if block is None:
+            return ("missing", None), 64
+        self.stats["blocks_served"] += 1
+        self.stats["bytes_served"] += len(block)
+        return ("block", block), max(len(block), 64)
+
+    def _h_fetch_stream(self, chan: RpcChannel, ctx: RpcContext) -> Generator:
+        """Streaming plane: receive a wantlist, stream the blocks back under
+        the channel's byte-credit backpressure (paper §2, streaming mode)."""
+        try:
+            wants = yield from chan.recv(timeout=60.0)
+        except RpcError:
+            return
+        self.stats["stream_sessions"] += 1
+        for cid in wants:
+            block = self.node.blockstore.get(cid)
+            yield ctx.cpu(8e-6)
+            if block is not None:
+                self.stats["blocks_served"] += 1
+                self.stats["bytes_served"] += len(block)
+            try:
+                yield from chan.send((cid, block),
+                                     len(block) if block else 64)
+            except RpcError:
+                return
+        chan.end()
+
+    # ------------------------------------------------------------- client
+    def _fetch_blocks_stream(self, info: PeerInfo,
+                             cids: List[CID]) -> Generator:
+        """Bulk fetch over one streaming channel; returns {cid: bytes} for
+        whatever verified blocks arrived (partial on provider failure)."""
+        got: Dict[CID, bytes] = {}
+        try:
+            conn = yield from self.node.connect_info(info)
+            chan = yield from open_channel(self.node.host, conn, "bs.fetch")
+            yield from chan.send(list(cids), 48 * len(cids))
+            for _ in range(len(cids)):
+                cid, block = yield from chan.recv(timeout=120.0)
+                if block is not None and cid.verify(block):
+                    got[cid] = block
+        except (DialError, RpcError):
+            pass
+        return got
+
+    def _fetch_block(self, info: PeerInfo, cid: CID) -> Generator:
+        """Fetch one block from one provider; returns bytes or None."""
+        try:
+            conn = yield from self.node.connect_info(info)
+            resp = yield from call_unary(self.node.host, conn, "bs.get", cid,
+                                         size=BLOCK_REQ_SIZE, timeout=120.0)
+        except (DialError, RpcError):
+            return None
+        kind, block = resp
+        if kind != "block" or block is None or not cid.verify(block):
+            return None
+        return block
+
+    def fetch_dag(self, root: CID,
+                  hint_providers: Optional[List[PeerInfo]] = None) -> Generator:
+        """Fetch a manifest-rooted DAG; returns the reassembled bytes.
+
+        Providers come from hints (rendezvous / pubsub announcement) plus the
+        DHT provider records.  Leaf blocks are swarmed across providers with
+        a bounded window; failed providers are dropped and their assigned
+        blocks requeued on survivors.
+        """
+        node = self.node
+        sim = node.sim
+        if node.blockstore.has(root):
+            manifest = node.blockstore.get(root)
+        else:
+            manifest = None
+        providers: List[PeerInfo] = list(hint_providers or [])
+        if not providers:
+            providers = yield from node.dht.find_providers(root.key)
+        providers = [p for p in providers if p.peer_id != node.peer_id]
+        if manifest is None:
+            if not providers:
+                raise FetchError(f"no providers for {root}")
+            for info in providers:
+                manifest = yield from self._fetch_block(info, root)
+                if manifest is not None:
+                    break
+            if manifest is None:
+                raise FetchError(f"all providers failed serving manifest {root}")
+            node.blockstore.put(root, manifest)
+            self.stats["blocks_fetched"] += 1
+            self.stats["bytes_fetched"] += len(manifest)
+
+        children, total_size, _meta = decode_manifest(manifest)
+        # dedup: repeated content (identical chunks) shares one CID and is
+        # fetched once — content addressing's free deduplication
+        missing = deque(dict.fromkeys(
+            c for c in children if not node.blockstore.has(c)))
+        if missing and not providers:
+            providers = yield from node.dht.find_providers(root.key)
+            providers = [p for p in providers if p.peer_id != node.peer_id]
+            if not providers:
+                raise FetchError(f"no providers for leaves of {root}")
+
+        live = list(providers)
+        failures: Dict[bytes, int] = {}
+
+        # ---- phase 1: bulk transfer over streaming channels --------------
+        # stripe the wantlist across providers; any block a provider fails
+        # to deliver falls through to the unary retry phase below
+        if len(missing) >= STREAM_FETCH_MIN * max(len(live), 1) and live:
+            stripes: List[List[CID]] = [[] for _ in live]
+            for i, cid in enumerate(missing):
+                stripes[i % len(live)].append(cid)
+
+            def stream_worker(idx: int) -> Generator:
+                got = yield from self._fetch_blocks_stream(
+                    live[idx], stripes[idx])
+                for cid, block in got.items():
+                    node.blockstore.put(cid, block)
+                    self.stats["blocks_fetched"] += 1
+                    self.stats["bytes_fetched"] += len(block)
+                self.stats["retries"] += len(stripes[idx]) - len(got)
+                return len(got)
+
+            procs = [sim.process(stream_worker(i)) for i in range(len(live))]
+            yield sim.all_of(procs)
+            missing = deque(dict.fromkeys(
+                c for c in children if not node.blockstore.has(c)))
+
+        # ---- phase 2: per-block unary with provider failover --------------
+        def worker(wid: int) -> Generator:
+            while missing:
+                cid = missing.popleft()
+                got = None
+                tries = 0
+                while got is None and live and tries < 2 * len(live) + 2:
+                    info = live[(wid + tries) % len(live)]
+                    got = yield from self._fetch_block(info, cid)
+                    tries += 1
+                    if got is None:
+                        self.stats["retries"] += 1
+                        failures[info.peer_id.digest] = \
+                            failures.get(info.peer_id.digest, 0) + 1
+                        if failures[info.peer_id.digest] >= 3 and info in live:
+                            live.remove(info)
+                if got is None:
+                    raise FetchError(f"block {cid} unavailable")
+                node.blockstore.put(cid, got)
+                self.stats["blocks_fetched"] += 1
+                self.stats["bytes_fetched"] += len(got)
+            return None
+
+        n_workers = min(MAX_IN_FLIGHT, max(len(live), 1), max(len(missing), 1))
+        procs = [sim.process(worker(i)) for i in range(n_workers)]
+        if procs:
+            yield sim.all_of(procs)
+
+        parts = []
+        for c in children:
+            blk = node.blockstore.get(c)
+            if blk is None:
+                raise FetchError(f"block {c} missing after fetch")
+            parts.append(blk)
+        data = b"".join(parts)
+        if len(data) != total_size:
+            raise FetchError("reassembled size mismatch")
+        return data
+
+    def publish_dag(self, dag_blocks: Dict[CID, bytes], root: CID,
+                    announce: bool = True) -> Generator:
+        """Store all blocks locally and announce the root on the DHT."""
+        self.node.blockstore.put_many(dag_blocks)
+        if announce:
+            yield from self.node.dht.provide(root.key)
+        return root

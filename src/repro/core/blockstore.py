@@ -1,0 +1,41 @@
+"""CID-indexed block storage with verification on put."""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+from .cid import CID
+
+
+class BlockStore:
+    def __init__(self) -> None:
+        self._blocks: Dict[CID, bytes] = {}
+        self.bytes_stored = 0
+
+    def put(self, cid: CID, data: bytes) -> None:
+        if not cid.verify(data):
+            raise ValueError(f"data does not match {cid}")
+        if cid not in self._blocks:
+            self.bytes_stored += len(data)
+        self._blocks[cid] = data
+
+    def put_many(self, blocks: Dict[CID, bytes]) -> None:
+        for cid, data in blocks.items():
+            self.put(cid, data)
+
+    def get(self, cid: CID) -> Optional[bytes]:
+        return self._blocks.get(cid)
+
+    def has(self, cid: CID) -> bool:
+        return cid in self._blocks
+
+    def delete(self, cid: CID) -> None:
+        data = self._blocks.pop(cid, None)
+        if data is not None:
+            self.bytes_stored -= len(data)
+
+    def cids(self) -> List[CID]:
+        return list(self._blocks.keys())
+
+    def __len__(self) -> int:
+        return len(self._blocks)

@@ -1,0 +1,122 @@
+"""Content identifiers, chunking, and Merkle DAGs.
+
+CIDs follow the multihash spirit: ``<version><codec><sha256 digest>``.  Large
+artifacts (model checkpoints) are split into fixed-size chunks, each chunk
+becoming a leaf block; a manifest block (codec ``dag``) lists the child CIDs
+in order so any peer can verify and reassemble the artifact.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import struct
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+CHUNK_SIZE = 256 * 1024  # 256 KiB, matching Bitswap-typical block size
+
+CODEC_RAW = 0x55
+CODEC_DAG = 0x70
+
+
+class CID:
+    __slots__ = ("codec", "digest")
+
+    def __init__(self, codec: int, digest: bytes):
+        assert len(digest) == 32
+        self.codec = codec
+        self.digest = digest
+
+    @classmethod
+    def for_data(cls, data: bytes, codec: int = CODEC_RAW) -> "CID":
+        return cls(codec, hashlib.sha256(data).digest())
+
+    def verify(self, data: bytes) -> bool:
+        return hashlib.sha256(data).digest() == self.digest
+
+    @property
+    def key(self) -> bytes:
+        """DHT key for this CID (the raw digest)."""
+        return self.digest
+
+    def __eq__(self, other: object) -> bool:
+        return (isinstance(other, CID) and other.codec == self.codec
+                and other.digest == self.digest)
+
+    def __hash__(self) -> int:
+        return hash((self.codec, self.digest))
+
+    def __repr__(self) -> str:
+        return f"CID({'raw' if self.codec == CODEC_RAW else 'dag'}:{self.digest.hex()[:12]})"
+
+
+def chunk(data: bytes, chunk_size: int = CHUNK_SIZE) -> List[bytes]:
+    if not data:
+        return [b""]
+    return [data[i:i + chunk_size] for i in range(0, len(data), chunk_size)]
+
+
+# -- Merkle DAG manifests ----------------------------------------------------
+
+_MAGIC = b"LDAG"
+
+
+def encode_manifest(children: Sequence[CID], total_size: int,
+                    meta: bytes = b"") -> bytes:
+    out = [_MAGIC, struct.pack(">QI", total_size, len(children))]
+    for c in children:
+        out.append(struct.pack(">B", c.codec))
+        out.append(c.digest)
+    out.append(struct.pack(">I", len(meta)))
+    out.append(meta)
+    return b"".join(out)
+
+
+def decode_manifest(data: bytes) -> Tuple[List[CID], int, bytes]:
+    assert data[:4] == _MAGIC, "not a manifest block"
+    total_size, n = struct.unpack(">QI", data[4:16])
+    off = 16
+    children = []
+    for _ in range(n):
+        codec = data[off]
+        digest = data[off + 1:off + 33]
+        children.append(CID(codec, digest))
+        off += 33
+    (meta_len,) = struct.unpack(">I", data[off:off + 4])
+    meta = data[off + 4:off + 4 + meta_len]
+    return children, total_size, meta
+
+
+@dataclass
+class DAG:
+    root: CID
+    blocks: Dict[CID, bytes]
+    total_size: int
+
+
+def build_dag(data: bytes, chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> DAG:
+    """Chunk ``data`` into leaf blocks + one manifest root block."""
+    leaves = chunk(data, chunk_size)
+    blocks: Dict[CID, bytes] = {}
+    children: List[CID] = []
+    for piece in leaves:
+        c = CID.for_data(piece, CODEC_RAW)
+        blocks[c] = piece
+        children.append(c)
+    manifest = encode_manifest(children, len(data), meta)
+    root = CID.for_data(manifest, CODEC_DAG)
+    blocks[root] = manifest
+    return DAG(root=root, blocks=blocks, total_size=len(data))
+
+
+def reassemble(root_block: bytes, fetch: Dict[CID, bytes]) -> bytes:
+    children, total_size, _meta = decode_manifest(root_block)
+    parts = []
+    for c in children:
+        blk = fetch[c]
+        if not c.verify(blk):
+            raise ValueError(f"block {c} failed verification")
+        parts.append(blk)
+    data = b"".join(parts)
+    assert len(data) == total_size
+    return data

@@ -1,0 +1,283 @@
+"""Conflict-free Replicated Data Types (Shapiro et al. 2011).
+
+State-based (CvRDT) implementations with join-semilattice ``merge``:
+merge is commutative, associative and idempotent, so replicas converge
+regardless of delivery order, duplication, or partitions — exactly the
+property Lattica's decentralized store relies on, and exactly what the
+hypothesis tests in ``tests/test_crdt.py`` verify.
+
+The ``ReplicatedStore`` composes named CRDTs into a document, exposes a
+digest for cheap anti-entropy ("are we synced?"), and serializes deltas for
+gossip over the Lattica mesh.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Optional, Set, Tuple
+
+
+class CRDT:
+    """Interface: value(), merge(other) -> changed(bool), copy()."""
+
+    def value(self) -> Any:
+        raise NotImplementedError
+
+    def merge(self, other: "CRDT") -> bool:
+        raise NotImplementedError
+
+    def copy(self) -> "CRDT":
+        import copy as _copy
+
+        return _copy.deepcopy(self)
+
+
+# ---------------------------------------------------------------- counters
+
+
+class GCounter(CRDT):
+    """Grow-only counter: per-replica max."""
+
+    def __init__(self) -> None:
+        self.counts: Dict[str, int] = {}
+
+    def increment(self, replica: str, n: int = 1) -> None:
+        if n < 0:
+            raise ValueError("GCounter cannot decrease")
+        self.counts[replica] = self.counts.get(replica, 0) + n
+
+    def value(self) -> int:
+        return sum(self.counts.values())
+
+    def merge(self, other: "GCounter") -> bool:
+        changed = False
+        for r, c in other.counts.items():
+            if c > self.counts.get(r, 0):
+                self.counts[r] = c
+                changed = True
+        return changed
+
+
+class PNCounter(CRDT):
+    """Increment/decrement counter as a pair of GCounters."""
+
+    def __init__(self) -> None:
+        self.p = GCounter()
+        self.n = GCounter()
+
+    def increment(self, replica: str, n: int = 1) -> None:
+        self.p.increment(replica, n)
+
+    def decrement(self, replica: str, n: int = 1) -> None:
+        self.n.increment(replica, n)
+
+    def value(self) -> int:
+        return self.p.value() - self.n.value()
+
+    def merge(self, other: "PNCounter") -> bool:
+        a = self.p.merge(other.p)
+        b = self.n.merge(other.n)
+        return a or b
+
+
+# ---------------------------------------------------------------- registers
+
+
+class LWWRegister(CRDT):
+    """Last-writer-wins register; ties broken by replica id (total order)."""
+
+    def __init__(self) -> None:
+        self.ts: Tuple[float, str] = (-1.0, "")
+        self._value: Any = None
+
+    def set(self, value: Any, timestamp: float, replica: str) -> None:
+        if (timestamp, replica) > self.ts:
+            self.ts = (timestamp, replica)
+            self._value = value
+
+    def value(self) -> Any:
+        return self._value
+
+    def merge(self, other: "LWWRegister") -> bool:
+        if other.ts > self.ts:
+            self.ts = other.ts
+            self._value = other._value
+            return True
+        return False
+
+
+class MVRegister(CRDT):
+    """Multi-value register with vector-clock causality (keeps siblings)."""
+
+    def __init__(self) -> None:
+        self.versions: Dict[FrozenSet[Tuple[str, int]], Any] = {}
+        self.clock: Dict[str, int] = {}
+
+    def set(self, value: Any, replica: str) -> None:
+        self.clock[replica] = self.clock.get(replica, 0) + 1
+        vc = frozenset(self.clock.items())
+        self.versions = {vc: value}
+
+    @staticmethod
+    def _dominates(a: FrozenSet[Tuple[str, int]], b: FrozenSet[Tuple[str, int]]) -> bool:
+        da, db = dict(a), dict(b)
+        keys = set(da) | set(db)
+        ge = all(da.get(k, 0) >= db.get(k, 0) for k in keys)
+        gt = any(da.get(k, 0) > db.get(k, 0) for k in keys)
+        return ge and gt
+
+    def value(self) -> Tuple[Any, ...]:
+        return tuple(self.versions[k] for k in sorted(self.versions, key=sorted))
+
+    def merge(self, other: "MVRegister") -> bool:
+        combined = dict(self.versions)
+        combined.update(other.versions)
+        keep = {}
+        for vc, val in combined.items():
+            if not any(self._dominates(o, vc) for o in combined if o != vc):
+                keep[vc] = val
+        changed = keep.keys() != self.versions.keys()
+        self.versions = keep
+        for r, c in other.clock.items():
+            self.clock[r] = max(self.clock.get(r, 0), c)
+        return changed
+
+
+# -------------------------------------------------------------------- sets
+
+
+class ORSet(CRDT):
+    """Observed-remove set: add wins over concurrent remove."""
+
+    def __init__(self) -> None:
+        self.adds: Dict[Any, Set[Tuple[str, int]]] = {}
+        self.tombstones: Set[Tuple[str, int]] = set()
+        self._tag_seq: Dict[str, int] = {}
+
+    def add(self, element: Any, replica: str) -> None:
+        self._tag_seq[replica] = self._tag_seq.get(replica, 0) + 1
+        tag = (replica, self._tag_seq[replica])
+        self.adds.setdefault(element, set()).add(tag)
+
+    def remove(self, element: Any) -> None:
+        tags = self.adds.get(element, set())
+        self.tombstones |= tags
+
+    def contains(self, element: Any) -> bool:
+        live = self.adds.get(element, set()) - self.tombstones
+        return bool(live)
+
+    def value(self) -> Set[Any]:
+        return {e for e, tags in self.adds.items() if tags - self.tombstones}
+
+    def merge(self, other: "ORSet") -> bool:
+        changed = False
+        for e, tags in other.adds.items():
+            mine = self.adds.setdefault(e, set())
+            if not tags <= mine:
+                mine |= tags
+                changed = True
+        if not other.tombstones <= self.tombstones:
+            self.tombstones |= other.tombstones
+            changed = True
+        for r, s in other._tag_seq.items():
+            self._tag_seq[r] = max(self._tag_seq.get(r, 0), s)
+        return changed
+
+
+# ----------------------------------------------------------- composed store
+
+
+_KINDS = {"g": GCounter, "pn": PNCounter, "lww": LWWRegister,
+          "mv": MVRegister, "orset": ORSet}
+
+
+class ReplicatedStore(CRDT):
+    """A named map of CRDTs — Lattica's decentralized data store.
+
+    Used as the model-version registry: an ORSet of published checkpoint
+    CIDs, an LWW pointer to the latest manifest, and G-Counters for global
+    step / sample counts.  ``digest()`` gives a cheap state fingerprint for
+    anti-entropy rounds; ``delta_since`` is full-state here (state-based
+    CRDTs tolerate that; gossip batches keep it amortized).
+    """
+
+    def __init__(self, replica: str = "") -> None:
+        self.replica = replica
+        self.entries: Dict[str, CRDT] = {}
+
+    # -- typed accessors ----------------------------------------------------
+    def _get(self, key: str, kind: str) -> CRDT:
+        if key not in self.entries:
+            self.entries[key] = _KINDS[kind]()
+        entry = self.entries[key]
+        if not isinstance(entry, _KINDS[kind]):
+            raise TypeError(f"{key} is {type(entry).__name__}, wanted {kind}")
+        return entry
+
+    def counter(self, key: str) -> GCounter:
+        return self._get(key, "g")  # type: ignore[return-value]
+
+    def pncounter(self, key: str) -> PNCounter:
+        return self._get(key, "pn")  # type: ignore[return-value]
+
+    def register(self, key: str) -> LWWRegister:
+        return self._get(key, "lww")  # type: ignore[return-value]
+
+    def orset(self, key: str) -> ORSet:
+        return self._get(key, "orset")  # type: ignore[return-value]
+
+    def mv(self, key: str) -> MVRegister:
+        return self._get(key, "mv")  # type: ignore[return-value]
+
+    # -- CRDT interface ------------------------------------------------------
+    def value(self) -> Dict[str, Any]:
+        return {k: v.value() for k, v in self.entries.items()}
+
+    def merge(self, other: "ReplicatedStore") -> bool:
+        changed = False
+        for k, v in other.entries.items():
+            if k in self.entries:
+                if self.entries[k].merge(v):  # type: ignore[arg-type]
+                    changed = True
+            else:
+                self.entries[k] = v.copy()
+                changed = True
+        return changed
+
+    # -- sync helpers ----------------------------------------------------------
+    def digest(self) -> bytes:
+        """Order-independent fingerprint of the full state."""
+        h = hashlib.sha256()
+        for k in sorted(self.entries):
+            h.update(k.encode())
+            h.update(hashlib.sha256(self._canonical(self.entries[k])).digest())
+        return h.digest()
+
+    @staticmethod
+    def _canonical(entry: CRDT) -> bytes:
+        if isinstance(entry, GCounter):
+            state: Any = sorted(entry.counts.items())
+        elif isinstance(entry, PNCounter):
+            state = (sorted(entry.p.counts.items()), sorted(entry.n.counts.items()))
+        elif isinstance(entry, LWWRegister):
+            state = (entry.ts, entry._value)
+        elif isinstance(entry, ORSet):
+            state = (sorted((repr(e), tuple(sorted(t))) for e, t in entry.adds.items()),
+                     tuple(sorted(entry.tombstones)))
+        elif isinstance(entry, MVRegister):
+            state = sorted((tuple(sorted(vc)), repr(v)) for vc, v in entry.versions.items())
+        else:  # pragma: no cover
+            state = entry
+        return pickle.dumps(state)
+
+    def serialize(self) -> bytes:
+        return pickle.dumps(self.entries)
+
+    @classmethod
+    def deserialize(cls, data: bytes, replica: str = "") -> "ReplicatedStore":
+        store = cls(replica)
+        store.entries = pickle.loads(data)
+        return store

@@ -1,0 +1,74 @@
+"""Node metrics & fleet dashboard.
+
+The paper's user study (§5) lists "improved monitoring dashboards" as the
+top feedback item.  Every subsystem already keeps counters; this module
+aggregates them into a per-node snapshot and renders a fleet-wide text
+dashboard (the kind of operational view an SRE would curl off a node).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .node import LatticaNode
+
+
+def node_snapshot(node: "LatticaNode") -> Dict[str, Any]:
+    """Flat metrics snapshot of one node (all subsystem counters)."""
+    t = node.transport
+    snap: Dict[str, Any] = {
+        "name": node.host.name,
+        "region": node.host.region,
+        "reachability": t.reachability,
+        "is_relay": t.is_relay,
+        "n_connections": sum(
+            1 for conns in node.host._connections.values()
+            for c in conns if not c.closed),
+        "n_relayed": sum(
+            1 for conns in node.host._connections.values()
+            for c in conns if not c.closed and c.relayed),
+        "peers_known": len(node.peers),
+        "dht_table": len(node.dht.table),
+        "dht_records": len(node.dht.records),
+        "dht_provider_keys": len(node.dht.providers),
+        "blocks": len(node.blockstore),
+        "bytes_stored": node.blockstore.bytes_stored,
+        "crdt_keys": len(node.store.entries),
+    }
+    for prefix, stats in (("transport", t.stats),
+                          ("rpc", node.router.stats),
+                          ("dht", node.dht.stats),
+                          ("pubsub", node.pubsub.stats),
+                          ("bitswap", node.bitswap.stats)):
+        for k, v in stats.items():
+            snap[f"{prefix}.{k}"] = v
+    return snap
+
+
+_DASH_COLS = [
+    ("name", 8), ("region", 6), ("reachability", 9), ("n_connections", 5),
+    ("dht_table", 6), ("blocks", 7), ("bytes_stored", 12),
+    ("bitswap.bytes_served", 12), ("bitswap.bytes_fetched", 12),
+    ("rpc.unary_served", 8),
+]
+
+
+def dashboard(nodes: Iterable["LatticaNode"]) -> str:
+    """Fleet-wide text dashboard."""
+    rows = [node_snapshot(n) for n in nodes]
+    head = " ".join(f"{name.split('.')[-1][:w]:>{w}}" for name, w in _DASH_COLS)
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        lines.append(" ".join(
+            f"{str(r.get(name, ''))[:w]:>{w}}" for name, w in _DASH_COLS))
+    totals = {
+        "direct_ok": sum(r.get("transport.punch_ok", 0) for r in rows),
+        "punch_fail": sum(r.get("transport.punch_fail", 0) for r in rows),
+        "bytes_moved": sum(r.get("bitswap.bytes_fetched", 0) for r in rows),
+        "rpc_served": sum(r.get("rpc.unary_served", 0) for r in rows),
+        "rpc_errors": sum(r.get("rpc.errors", 0) for r in rows),
+    }
+    lines.append("-" * len(head))
+    lines.append("fleet: " + "  ".join(f"{k}={v}" for k, v in totals.items()))
+    return "\n".join(lines)

@@ -1,0 +1,97 @@
+"""NAT box models (RFC 3489 / Ford et al. 2005 taxonomy).
+
+Four classical behaviours, driving the hole-punch success matrix that the
+paper's ~70 % direct-connectivity figure comes from:
+
+* FULL_CONE        endpoint-independent mapping, endpoint-independent filter
+* RESTRICTED_CONE  endpoint-independent mapping, address-restricted filter
+* PORT_RESTRICTED  endpoint-independent mapping, address+port-restricted filter
+* SYMMETRIC        endpoint-DEPENDENT mapping (new external port per dst),
+                   address+port-restricted filter
+
+Hole punching (simultaneous open coordinated over a relay) succeeds iff each
+side's punch packet passes the other side's filter given the externally
+*observed* address each peer advertised.  Symmetric NATs advertise a port that
+differs from the one they will actually use toward the peer, so punches into
+port-restricted or symmetric counterparts fail — exactly the pairs that fall
+back to relays in the paper.
+"""
+
+from __future__ import annotations
+
+import itertools
+from enum import Enum
+from typing import Dict, Optional, Set, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .simnet import Host, Network
+
+Addr = Tuple[str, int]
+
+
+class NATKind(Enum):
+    FULL_CONE = "full_cone"
+    RESTRICTED_CONE = "restricted_cone"
+    PORT_RESTRICTED = "port_restricted"
+    SYMMETRIC = "symmetric"
+
+
+class NATBox:
+    _ip_seq = itertools.count(1)
+
+    def __init__(self, net: "Network", kind: NATKind):
+        self.net = net
+        self.kind = kind
+        self.public_ip = f"198.51.{next(NATBox._ip_seq)}.1"
+        self._ext_seq = itertools.count(20000)
+        # cone NATs: (int_ip, int_port) -> ext_port
+        self._cone_map: Dict[Tuple[str, int], int] = {}
+        # symmetric NATs: (int_ip, int_port, dst) -> ext_port
+        self._sym_map: Dict[Tuple[str, int, Addr], int] = {}
+        # reverse: ext_port -> (host, int_port)
+        self._rev: Dict[int, Tuple["Host", int]] = {}
+        # filter state: ext_port -> set of remote addrs/ips sent to
+        self._sent_to: Dict[int, Set[Addr]] = {}
+        self._hosts: Dict[str, "Host"] = {}
+        net.register_nat(self)
+
+    def attach(self, host: "Host") -> None:
+        self._hosts[host.ip] = host
+
+    # -- outbound ------------------------------------------------------------
+    def map_outbound(self, host: "Host", int_port: int, dst: Addr) -> Addr:
+        if self.kind is NATKind.SYMMETRIC:
+            key = (host.ip, int_port, dst)
+            if key not in self._sym_map:
+                ext = next(self._ext_seq)
+                self._sym_map[key] = ext
+                self._rev[ext] = (host, int_port)
+                self._sent_to[ext] = set()
+            ext = self._sym_map[key]
+        else:
+            ckey = (host.ip, int_port)
+            if ckey not in self._cone_map:
+                ext = next(self._ext_seq)
+                self._cone_map[ckey] = ext
+                self._rev[ext] = (host, int_port)
+                self._sent_to[ext] = set()
+            ext = self._cone_map[ckey]
+        self._sent_to[ext].add(dst)
+        return (self.public_ip, ext)
+
+    # -- inbound -------------------------------------------------------------
+    def filter_inbound(self, ext_port: int, src: Addr) -> Optional[Tuple["Host", int]]:
+        entry = self._rev.get(ext_port)
+        if entry is None:
+            return None
+        sent = self._sent_to.get(ext_port, set())
+        if self.kind is NATKind.FULL_CONE:
+            return entry
+        if self.kind is NATKind.RESTRICTED_CONE:
+            if any(a[0] == src[0] for a in sent):
+                return entry
+            return None
+        # PORT_RESTRICTED and SYMMETRIC both filter on (ip, port)
+        if src in sent:
+            return entry
+        return None

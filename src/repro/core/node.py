@@ -1,0 +1,274 @@
+"""LatticaNode: the composed stack — what the paper's SDK exposes.
+
+identity + transport (dial/AutoNAT/relay/DCUtR) + RPC router + Kademlia DHT
++ pub/sub + CRDT replicated store + content-addressed blockstore + Bitswap.
+
+``connect_info`` implements the paper's connection policy:
+  1. reuse an existing connection;
+  2. try direct dial on advertised direct addrs;
+  3. fall back to a circuit relay;
+  4. attempt a DCUtR hole-punch upgrade, keeping the circuit if it fails.
+"""
+
+from __future__ import annotations
+
+import pickle
+from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
+
+from .bitswap import Bitswap
+from .blockstore import BlockStore
+from .cid import CID, build_dag
+from .crdt import ReplicatedStore
+from .dht import KademliaDHT, PeerInfo
+from .peer import Multiaddr, PeerId
+from .pubsub import PubSub
+from .rendezvous import RendezvousServer
+from .rpc import RpcContext, RpcError, RpcRouter, call_unary
+from .simnet import Connection, DialError, Host, Network, Sim
+from .traversal import MAIN_PORT, Transport
+
+
+class LatticaNode:
+    def __init__(self, net: Network, name: str, region: str = "us",
+                 zone: str = "a", nat: Optional[Any] = None, cores: int = 4,
+                 serve_rendezvous: bool = False,
+                 machine: Optional[str] = None):
+        self.net = net
+        self.sim: Sim = net.sim
+        self.host: Host = net.host(name, region=region, zone=zone, nat=nat,
+                                   cores=cores, machine=machine)
+        self.peer_id = PeerId.from_name(name)
+        self.transport = Transport(self.host, self.peer_id)
+        self.router = RpcRouter(self.host)
+        self.blockstore = BlockStore()
+        self.store = ReplicatedStore(replica=name)
+        self.peers: Dict[PeerId, PeerInfo] = {}
+        self.infos_by_host: Dict[str, PeerInfo] = {}
+        self.dht = KademliaDHT(self)
+        self.pubsub = PubSub(self)
+        self.bitswap = Bitswap(self)
+        self.relay_info: Optional[PeerInfo] = None
+        self.rendezvous: Optional[RendezvousServer] = (
+            RendezvousServer(self) if serve_rendezvous else None)
+        self._upgrade_attempted: set = set()
+        self.router.register_unary("id.exchange", self._h_identify)
+        self.router.register_unary("crdt.digest", self._h_crdt_digest)
+        self.router.register_unary("crdt.exchange", self._h_crdt_exchange)
+
+    # ------------------------------------------------------------- identity
+    def info(self) -> PeerInfo:
+        addrs: List[Multiaddr] = []
+        if self.host.nat is None:
+            addrs.append(Multiaddr(self.host.ip, MAIN_PORT))
+        elif self.transport.reachability == "public":
+            # e.g. full-cone NAT: our observed mapping is stranger-dialable
+            for ip, port in sorted(self.transport.observed_addrs):
+                addrs.append(Multiaddr(ip, port))
+        if self.relay_info is not None:
+            relay_ip = self.relay_info.addrs[0].ip
+            addrs.append(Multiaddr(relay_ip, MAIN_PORT,
+                                   relay_peer=self.relay_info.peer_id))
+        return PeerInfo(self.peer_id, self.host.name, tuple(addrs))
+
+    def remember(self, info: PeerInfo) -> None:
+        if info.peer_id == self.peer_id:
+            return
+        old = self.peers.get(info.peer_id)
+        if old is not None and not info.addrs:
+            return  # don't clobber a dialable record with an empty one
+        self.peers[info.peer_id] = info
+        self.infos_by_host[info.host_name] = info
+        self.dht.table.update(info)
+
+    def _h_identify(self, payload: Any, ctx: RpcContext) -> Generator:
+        self.remember(payload)
+        yield ctx.cpu(2e-6)
+        return self.info(), 96
+
+    # ------------------------------------------------------------ connecting
+    def connect_info(self, info: PeerInfo) -> Generator:
+        """Connect to a peer, NAT-traversing as needed; returns Connection."""
+        target_host = self.net.hosts.get(info.host_name)
+        if target_host is not None:
+            existing = self.host.connection_to(target_host)
+            if existing is not None:
+                return existing
+        self.remember(info)
+        direct = [a for a in info.addrs if not a.is_relay]
+        relayed = [a for a in info.addrs if a.is_relay]
+        last_err: Optional[Exception] = None
+        for addr in direct:
+            try:
+                conn = yield from self.transport.dial_direct((addr.ip, addr.port))
+                yield from self._identify(conn)
+                return conn
+            except DialError as e:
+                last_err = e
+        for addr in relayed:
+            try:
+                relay_host_conn = yield from self._conn_to_relay(addr)
+                circuit = yield from self.transport.relay_connect(
+                    relay_host_conn, info.peer_id)
+                yield from self._identify(circuit)
+                upgraded = yield from self._maybe_upgrade(circuit, info)
+                return upgraded or circuit
+            except DialError as e:
+                last_err = e
+        raise DialError(f"cannot connect to {info.peer_id}: {last_err}")
+
+    def _conn_to_relay(self, addr: Multiaddr) -> Generator:
+        relay_host = self.net._by_ip.get(addr.ip)
+        if relay_host is not None:
+            existing = self.host.connection_to(relay_host)
+            if existing is not None and not existing.relayed:
+                return existing
+        conn = yield from self.transport.dial_direct((addr.ip, addr.port))
+        return conn
+
+    def _maybe_upgrade(self, circuit: Connection,
+                       info: PeerInfo) -> Generator:
+        """One DCUtR attempt per peer; returns direct Connection or None."""
+        if info.peer_id in self._upgrade_attempted:
+            return None
+        self._upgrade_attempted.add(info.peer_id)
+        direct = yield from self.transport.dcutr_upgrade(circuit)
+        if direct is not None:
+            circuit.close()
+            return direct
+        return None
+
+    def _identify(self, conn: Connection) -> Generator:
+        try:
+            their = yield from call_unary(self.host, conn, "id.exchange",
+                                          self.info(), size=96, timeout=10.0)
+            self.remember(their)
+        except (RpcError, DialError):
+            pass
+        return None
+
+    def connect_peer(self, peer_id: PeerId) -> Generator:
+        info = self.peers.get(peer_id)
+        if info is None:
+            # resolve through the DHT
+            closest = yield from self.dht.find_node(peer_id.digest)
+            info = self.peers.get(peer_id)
+            if info is None:
+                for c in closest:
+                    if c.peer_id == peer_id:
+                        info = c
+                        break
+        if info is None:
+            raise DialError(f"unknown peer {peer_id}")
+        conn = yield from self.connect_info(info)
+        return conn
+
+    # ------------------------------------------------------------- bootstrap
+    def bootstrap(self, bootstrap_infos: List[PeerInfo],
+                  relay: Optional[PeerInfo] = None) -> Generator:
+        """Join the mesh: dial bootstrappers, learn reachability, reserve a
+        relay if private, then populate the DHT routing table."""
+        conns = []
+        probed = False
+        for info in bootstrap_infos:
+            try:
+                conn = yield from self.connect_info(info)
+                conns.append(conn)
+            except DialError:
+                continue
+            if not probed:
+                # AutoNAT immediately after the FIRST contact: the dial-back
+                # is forwarded to a public peer we have never contacted, so
+                # cone-NAT filters can't be satisfied by our own traffic.
+                yield from self.transport.autonat_probe(conn)
+                probed = True
+        if not conns:
+            raise DialError("all bootstrap nodes unreachable")
+        if self.transport.reachability != "public":
+            relay_target = relay or bootstrap_infos[0]
+            yield from self.reserve_relay(relay_target)
+        yield from self.dht.bootstrap_lookup()
+        for pid in list(self.peers):
+            yield from self.pubsub.announce_subscriptions(pid)
+        return self.transport.reachability
+
+    def reserve_relay(self, relay_info: PeerInfo) -> Generator:
+        conn = yield from self.connect_info(relay_info)
+        ok = yield from self.transport.relay_reserve(conn)
+        if ok:
+            self.relay_info = relay_info
+        return ok
+
+    # ------------------------------------------------------------------ CRDT
+    def _h_crdt_digest(self, payload: Any, ctx: RpcContext) -> Generator:
+        yield ctx.cpu(10e-6)
+        return self.store.digest(), 96
+
+    def _h_crdt_exchange(self, payload: Any, ctx: RpcContext) -> Generator:
+        incoming = ReplicatedStore.deserialize(payload)
+        yield ctx.cpu(30e-6)
+        self.store.merge(incoming)
+        out = self.store.serialize()
+        return out, max(len(out), 64)
+
+    def sync_crdt_with(self, info: PeerInfo) -> Generator:
+        """One anti-entropy round with one peer; returns True if state moved."""
+        conn = yield from self.connect_info(info)
+        theirs = yield from call_unary(self.host, conn, "crdt.digest", None,
+                                       size=96, timeout=15.0)
+        if theirs == self.store.digest():
+            return False
+        mine = self.store.serialize()
+        resp = yield from call_unary(self.host, conn, "crdt.exchange", mine,
+                                     size=max(len(mine), 64), timeout=60.0)
+        self.store.merge(ReplicatedStore.deserialize(resp))
+        return True
+
+    def maintenance_loop(self, interval: float = 10.0) -> Generator:
+        """Background upkeep: re-establish the relay reservation if the
+        relay connection died (link flap, partition).  Without this, a
+        private peer silently loses inbound reachability — libp2p refreshes
+        reservations the same way."""
+        while True:
+            yield interval
+            if self.relay_info is None:
+                continue
+            relay_host = self.net.hosts.get(self.relay_info.host_name)
+            conn = (self.host.connection_to(relay_host)
+                    if relay_host is not None else None)
+            if conn is None or conn.closed:
+                try:
+                    yield from self.reserve_relay(self.relay_info)
+                except (DialError, RpcError):
+                    continue
+
+    def anti_entropy_loop(self, interval: float = 5.0) -> Generator:
+        """Background gossip: periodically reconcile with a random peer."""
+        while True:
+            yield interval * (0.5 + self.sim.rng.random())
+            if not self.peers:
+                continue
+            pid = self.sim.rng.choice(sorted(self.peers, key=lambda p: p.digest))
+            info = self.peers[pid]
+            try:
+                yield from self.sync_crdt_with(info)
+            except (DialError, RpcError):
+                continue
+
+    # ------------------------------------------------------------- artifacts
+    def publish_artifact(self, data: bytes, meta: bytes = b"",
+                         announce_topic: Optional[str] = None) -> Generator:
+        """Chunk + store + provide an artifact; returns the root CID."""
+        dag = build_dag(data, meta=meta)
+        yield from self.bitswap.publish_dag(dag.blocks, dag.root)
+        if announce_topic is not None:
+            yield from self.pubsub.publish(
+                announce_topic, ("artifact", dag.root, len(data), meta), size=192)
+        return dag.root
+
+    def fetch_artifact(self, root: CID,
+                       hint_providers: Optional[List[PeerInfo]] = None,
+                       reprovide: bool = True) -> Generator:
+        data = yield from self.bitswap.fetch_dag(root, hint_providers)
+        if reprovide:
+            yield from self.dht.provide(root.key)
+        return data

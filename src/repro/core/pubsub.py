@@ -1,0 +1,138 @@
+"""Gossip pub/sub over the connected overlay (gossipsub-lite).
+
+Topics carry model-version announcements and CRDT digests.  Publishing
+floods to mesh peers (bounded degree) with a seen-cache to stop echoes;
+subscription state is exchanged lazily via the announce RPC itself.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Generator, List, Set, TYPE_CHECKING
+
+from .peer import PeerId
+from .rpc import RpcContext, RpcError, call_unary
+from .simnet import DialError
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .node import LatticaNode
+
+MESH_DEGREE = 6
+SEEN_CACHE = 4096
+
+_seq = itertools.count(1)
+
+
+class PubSub:
+    def __init__(self, node: "LatticaNode"):
+        self.node = node
+        self.subscriptions: Dict[str, List[Callable[[str, Any, PeerId], None]]] = {}
+        self.peer_topics: Dict[PeerId, Set[str]] = {}
+        self._seen: "OrderedDict[bytes, None]" = OrderedDict()
+        self.stats = {"published": 0, "delivered": 0, "forwarded": 0, "duplicates": 0}
+        node.router.register_unary("ps.msg", self._h_msg)
+        node.router.register_unary("ps.sub", self._h_sub)
+
+    # -- subscription management ---------------------------------------------
+    def subscribe(self, topic: str, callback: Callable[[str, Any, PeerId], None]) -> None:
+        self.subscriptions.setdefault(topic, []).append(callback)
+
+    def announce_subscriptions(self, peer: "PeerId") -> Generator:
+        """Tell one peer which topics we care about (piggybacks on connect)."""
+        info = self.node.peers.get(peer)
+        if info is None:
+            return None
+        try:
+            conn = yield from self.node.connect_info(info)
+            yield from call_unary(self.node.host, conn, "ps.sub",
+                                  (self.node.peer_id, sorted(self.subscriptions)),
+                                  size=96)
+        except (DialError, RpcError):
+            pass
+        return None
+
+    def _h_sub(self, payload: Any, ctx: RpcContext) -> Generator:
+        peer_id, topics = payload
+        self.peer_topics[peer_id] = set(topics)
+        yield ctx.cpu(2e-6)
+        return sorted(self.subscriptions), 96
+
+    # -- message flow -----------------------------------------------------------
+    def _msg_id(self, topic: str, data: Any, origin: PeerId, seq: int) -> bytes:
+        h = hashlib.sha256()
+        h.update(topic.encode())
+        h.update(repr(data).encode())
+        h.update(origin.digest)
+        h.update(seq.to_bytes(8, "big"))
+        return h.digest()[:16]
+
+    def _mark_seen(self, mid: bytes) -> bool:
+        if mid in self._seen:
+            return False
+        self._seen[mid] = None
+        if len(self._seen) > SEEN_CACHE:
+            self._seen.popitem(last=False)
+        return True
+
+    def _mesh_peers(self, topic: str, exclude: Set[PeerId]) -> List[PeerId]:
+        interested = [p for p, t in self.peer_topics.items()
+                      if topic in t and p not in exclude]
+        unknown = [p for p in self.node.peers
+                   if p not in self.peer_topics and p not in exclude
+                   and p != self.node.peer_id]
+        # prefer peers known to subscribe; pad with unknowns up to mesh degree
+        chosen = interested[:MESH_DEGREE]
+        for p in unknown:
+            if len(chosen) >= MESH_DEGREE:
+                break
+            chosen.append(p)
+        return chosen
+
+    def publish(self, topic: str, data: Any, size: int = 256) -> Generator:
+        self.stats["published"] += 1
+        mid = self._msg_id(topic, data, self.node.peer_id, next(_seq))
+        self._mark_seen(mid)
+        yield from self._forward(topic, data, mid, size,
+                                 exclude={self.node.peer_id})
+        return mid
+
+    def _forward(self, topic: str, data: Any, mid: bytes, size: int,
+                 exclude: Set[PeerId]) -> Generator:
+        targets = self._mesh_peers(topic, exclude)
+        sim = self.node.sim
+        procs = []
+        for pid in targets:
+            info = self.node.peers.get(pid)
+            if info is None:
+                continue
+            procs.append(sim.process(self._send_one(info, topic, data, mid, size)))
+        if procs:
+            yield sim.all_of(procs)
+        return None
+
+    def _send_one(self, info: Any, topic: str, data: Any, mid: bytes,
+                  size: int) -> Generator:
+        try:
+            conn = yield from self.node.connect_info(info)
+            yield from call_unary(self.node.host, conn, "ps.msg",
+                                  (topic, data, mid, self.node.peer_id), size=size)
+            self.stats["forwarded"] += 1
+        except (DialError, RpcError):
+            pass
+        return None
+
+    def _h_msg(self, payload: Any, ctx: RpcContext) -> Generator:
+        topic, data, mid, from_peer = payload
+        yield ctx.cpu(3e-6)
+        if not self._mark_seen(mid):
+            self.stats["duplicates"] += 1
+            return True, 64
+        for cb in self.subscriptions.get(topic, []):
+            self.stats["delivered"] += 1
+            cb(topic, data, from_peer)
+        # re-flood to our mesh (eager push)
+        self.node.sim.process(self._forward(
+            topic, data, mid, 256, exclude={from_peer, self.node.peer_id}))
+        return True, 64

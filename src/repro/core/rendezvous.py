@@ -1,0 +1,61 @@
+"""Rendezvous service: namespace registration for expedited peer discovery.
+
+The paper uses a rendezvous point to orchestrate NAT traversal and to
+shortcut provider discovery before DHT records propagate.  Any public node
+can serve the rendezvous RPCs; clients register under a namespace (e.g. a
+model-fleet name) and discover other registrants.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Generator, List, Tuple, TYPE_CHECKING
+
+from .dht import PeerInfo
+from .rpc import RpcContext, RpcError, call_unary
+from .simnet import DialError
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .node import LatticaNode
+
+DEFAULT_TTL = 7200.0
+
+
+class RendezvousServer:
+    def __init__(self, node: "LatticaNode"):
+        self.node = node
+        self.registrations: Dict[str, Dict[bytes, Tuple[PeerInfo, float]]] = {}
+        node.router.register_unary("rdv.register", self._h_register)
+        node.router.register_unary("rdv.discover", self._h_discover)
+
+    def _h_register(self, payload: Any, ctx: RpcContext) -> Generator:
+        ns, info, ttl = payload
+        self.registrations.setdefault(ns, {})[info.peer_id.digest] = (
+            info, self.node.sim.now + ttl)
+        yield ctx.cpu(3e-6)
+        return True, 64
+
+    def _h_discover(self, payload: Any, ctx: RpcContext) -> Generator:
+        ns = payload
+        now = self.node.sim.now
+        entries = self.registrations.get(ns, {})
+        live = [i for i, (info, exp) in entries.items() if exp > now]
+        infos = [entries[k][0] for k in live]
+        yield ctx.cpu(3e-6)
+        return infos, 96 * max(len(infos), 1)
+
+
+def register(node: "LatticaNode", rdv: PeerInfo, namespace: str,
+             ttl: float = DEFAULT_TTL) -> Generator:
+    conn = yield from node.connect_info(rdv)
+    ok = yield from call_unary(node.host, conn, "rdv.register",
+                               (namespace, node.info(), ttl), size=128)
+    return ok
+
+
+def discover(node: "LatticaNode", rdv: PeerInfo, namespace: str) -> Generator:
+    conn = yield from node.connect_info(rdv)
+    infos = yield from call_unary(node.host, conn, "rdv.discover", namespace,
+                                  size=96)
+    for i in infos:
+        node.remember(i)
+    return infos

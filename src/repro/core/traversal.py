@@ -1,0 +1,364 @@
+"""Connectivity: direct dial, AutoNAT, circuit relay, DCUtR hole punching.
+
+This is the paper's Scenario 1.  All reachability decisions happen at the
+*packet* level against the NAT models in ``nat.py`` — success/failure of a
+hole punch is an emergent property of the NAT state machines, not a table
+lookup, so the ~70 % direct-connectivity figure can be measured rather than
+asserted.
+
+Key modelling choice (mirrors QUIC/libp2p): every node sends all control
+traffic from ONE main socket (port 4001).  Cone NATs therefore reuse the same
+external mapping toward the relay and toward punch targets, which is exactly
+what makes DCUtR work for them; symmetric NATs mint a fresh external port per
+destination, which is exactly what breaks it.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Generator, List, Optional, Set, Tuple
+
+from .peer import Multiaddr, PeerId
+from .simnet import Connection, DialError, Host, Network, Sim, Stream
+
+Addr = Tuple[str, int]
+
+MAIN_PORT = 4001
+DIAL_TIMEOUT = 0.8
+HANDSHAKE_CPU = 150e-6          # Noise/TLS1.3 asymmetric crypto per side
+PUNCH_TRIES = 4
+PUNCH_INTERVAL = 0.08
+
+PROTO_RELAY_RESERVE = "/lattica/relay/reserve/1.0"
+PROTO_RELAY_CONNECT = "/lattica/relay/connect/1.0"
+PROTO_RELAY_STOP = "/lattica/relay/stop/1.0"
+PROTO_DCUTR = "/lattica/dcutr/1.0"
+PROTO_AUTONAT = "/lattica/autonat/1.0"
+PROTO_AUTONAT_FWD = "/lattica/autonat/fwd/1.0"
+PROTO_PING = "/lattica/ping/1.0"
+
+_req_seq = itertools.count(1)
+
+
+class Transport:
+    """Per-host connectivity engine: packet listener + dial/punch/relay."""
+
+    def __init__(self, host: Host, peer_id: PeerId):
+        self.host = host
+        self.peer_id = peer_id
+        self.sim: Sim = host.net.sim
+        self.net: Network = host.net
+        self.sock = host.bind(MAIN_PORT)
+        self._pending: Dict[Tuple[str, int], "object"] = {}
+        self.observed_addrs: Set[Addr] = set()
+        self.observed_of: Dict[str, Addr] = {}   # peer host name -> addr we saw
+        self.reachability = "unknown"            # unknown | public | private
+        self.relay_reservations: Dict[bytes, Host] = {}  # for relay servers
+        self.is_relay = False
+        self.stats = {
+            "dials_direct_ok": 0, "dials_direct_fail": 0,
+            "punch_ok": 0, "punch_fail": 0, "relayed": 0,
+        }
+        self.sim.process(self._listen())
+        host.handle(PROTO_PING, self._ping_handler)
+        host.handle(PROTO_DCUTR, self._dcutr_handler)
+        host.handle(PROTO_AUTONAT, self._autonat_handler)
+        host.handle(PROTO_AUTONAT_FWD, self._autonat_fwd_handler)
+
+    # ---------------------------------------------------------------- listen
+    def _listen(self) -> Generator:
+        while True:
+            pkt = yield from self.sock.recv()
+            kind = pkt.payload[0]
+            if kind == "syn":
+                _, req, name = pkt.payload
+                self.observed_of[name] = pkt.src
+                # synack echoes the dialer's externally observed address
+                self.sock.sendto(pkt.src, ("synack", req, self.host.name, pkt.src), 96)
+            elif kind == "synack":
+                ev = self._pending.pop(("synack", pkt.payload[1]), None)
+                if ev is not None and not ev.triggered:
+                    ev.succeed(pkt)
+            elif kind == "punch":
+                nonce = pkt.payload[1]
+                self.sock.sendto(pkt.src, ("punch_ack", nonce), 64)
+                ev = self._pending.get(("punch", nonce))
+                if ev is not None and not ev.triggered:
+                    ev.succeed(pkt)
+            elif kind == "punch_ack":
+                ev = self._pending.get(("punch", pkt.payload[1]))
+                if ev is not None and not ev.triggered:
+                    ev.succeed(pkt)
+            elif kind == "probe":
+                # AutoNAT dial-back probe: just prove reachability.
+                self.sock.sendto(pkt.src, ("probe_ack", pkt.payload[1]), 64)
+
+    # ------------------------------------------------------------- direct dial
+    def dial_direct(self, addr: Addr, timeout: float = DIAL_TIMEOUT) -> Generator:
+        """TCP/QUIC-style dial: SYN → SYNACK (proves reachability), then a
+        Noise handshake round-trip.  Returns a secured Connection."""
+        req = next(_req_seq)
+        ev = self.sim.event()
+        self._pending[("synack", req)] = ev
+        try:
+            got = None
+            for _ in range(2):  # one retransmit for lossy paths
+                self.sock.sendto(addr, ("syn", req, self.host.name), 80)
+                idx, val = yield self.sim.any_of([ev, self.sim.timeout(timeout / 2)])
+                if idx == 0:
+                    got = val
+                    break
+            if got is None:
+                self.stats["dials_direct_fail"] += 1
+                raise DialError(f"dial to {addr} timed out")
+        finally:
+            self._pending.pop(("synack", req), None)
+        _, _, peer_name, my_observed = got.payload
+        self.observed_addrs.add(tuple(my_observed))
+        peer_host = self.net.hosts[peer_name]
+        # Noise XX: one extra round trip + CPU on both sides.
+        lat, _, _ = self.net.path(self.host, peer_host)
+        yield self.host.cpu.consume(HANDSHAKE_CPU)
+        yield peer_host.cpu.consume(HANDSHAKE_CPU)
+        yield self.sim.timeout(2 * lat)
+        self.stats["dials_direct_ok"] += 1
+        return self.net.establish(self.host, peer_host)
+
+    # ------------------------------------------------------------------- ping
+    def _ping_handler(self, stream: Stream) -> Generator:
+        while True:
+            try:
+                msg = yield from stream.recv(timeout=30.0)
+            except DialError:
+                return
+            stream.send(("pong", msg[1]), 64)
+
+    def ping(self, conn: Connection) -> Generator:
+        """Returns measured RTT over the connection."""
+        t0 = self.sim.now
+        stream = conn.open_stream(PROTO_PING, self.host)
+        stream.send(("ping", t0), 64)
+        yield from stream.recv(timeout=10.0)
+        stream.close()
+        return self.sim.now - t0
+
+    # ------------------------------------------------------------ hole punch
+    def _punch(self, remote: Addr, nonce: int) -> Generator:
+        """Send punch datagrams; succeed when any punch/punch_ack arrives."""
+        key = ("punch", nonce)
+        ev = self._pending.get(key)
+        if ev is None or ev.triggered:
+            ev = self.sim.event()
+            self._pending[key] = ev
+        ok = False
+        for _ in range(PUNCH_TRIES):
+            self.sock.sendto(remote, ("punch", nonce), 64)
+            idx, _ = yield self.sim.any_of([ev, self.sim.timeout(PUNCH_INTERVAL)])
+            if idx == 0:
+                ok = True
+                break
+        if not ok and ev.triggered:
+            ok = True
+        self._pending.pop(key, None)
+        return ok
+
+    def _dcutr_handler(self, stream: Stream) -> Generator:
+        """Responder side of Direct Connection Upgrade through Relay."""
+        try:
+            msg = yield from stream.recv(timeout=10.0)
+            _, initiator_addrs, nonce = msg
+            my_addrs = sorted(self.observed_addrs) or [(self.host.ip, MAIN_PORT)]
+            stream.send(("connect", my_addrs, nonce), 128)
+            yield from stream.recv(timeout=10.0)        # sync
+            # pre-arm the punch waiter so an early-arriving punch isn't lost
+            key = ("punch", nonce)
+            if key not in self._pending or self._pending[key].triggered:
+                self._pending[key] = self.sim.event()
+            yield from self._punch(tuple(initiator_addrs[0]), nonce)
+        except DialError:
+            return
+
+    def dcutr_upgrade(self, relayed_conn: Connection) -> Generator:
+        """Initiator: attempt to upgrade a relayed connection to direct.
+
+        Returns a direct Connection on success, None on failure (keep relay).
+        """
+        peer_host = relayed_conn.hosts[1] if relayed_conn.hosts[0] is self.host \
+            else relayed_conn.hosts[0]
+        nonce = next(_req_seq) * 7919
+        my_addrs = sorted(self.observed_addrs) or [(self.host.ip, MAIN_PORT)]
+        try:
+            stream = relayed_conn.open_stream(PROTO_DCUTR, self.host)
+            t0 = self.sim.now
+            # pre-arm punch waiter before telling the peer the nonce
+            self._pending[("punch", nonce)] = self.sim.event()
+            stream.send(("connect", my_addrs, nonce), 128)
+            msg = yield from stream.recv(timeout=10.0)
+            rtt = self.sim.now - t0
+            _, remote_addrs, _ = msg
+            stream.send(("sync",), 64)
+            yield self.sim.timeout(rtt / 2)
+            ok = yield from self._punch(tuple(remote_addrs[0]), nonce)
+        except DialError:
+            self.stats["punch_fail"] += 1
+            return None
+        if not ok:
+            self.stats["punch_fail"] += 1
+            return None
+        self.stats["punch_ok"] += 1
+        # Reachability proven both ways; secure + establish the direct path.
+        yield self.host.cpu.consume(HANDSHAKE_CPU)
+        yield peer_host.cpu.consume(HANDSHAKE_CPU)
+        lat, _, _ = self.net.path(self.host, peer_host)
+        yield self.sim.timeout(2 * lat)
+        return self.net.establish(self.host, peer_host)
+
+    # ---------------------------------------------------------------- AutoNAT
+    def probe_addr(self, addr: Addr, timeout: float = 0.3) -> Generator:
+        """Dial-back probe from an *ephemeral* port (so cone-NAT filters
+        aren't satisfied by the client's own earlier traffic to us)."""
+        sock = self.host.bind()
+        req = next(_req_seq)
+        try:
+            ok = False
+            for _ in range(2):
+                sock.sendto(addr, ("probe", req), 64)
+                try:
+                    pkt = yield from sock.recv(timeout=timeout)
+                except DialError:
+                    continue
+                if pkt.payload[0] == "probe_ack" and pkt.payload[1] == req:
+                    ok = True
+                    break
+            return ok
+        finally:
+            sock.close()
+
+    def _autonat_fwd_handler(self, stream: Stream) -> Generator:
+        """Second-hop prober: dial back an address on another server's behalf."""
+        try:
+            msg = yield from stream.recv(timeout=10.0)
+        except DialError:
+            return
+        ok = yield from self.probe_addr(tuple(msg[1]))
+        stream.send(("dialback", ok), 64)
+
+    def _autonat_handler(self, stream: Stream) -> Generator:
+        """Serve dial-back probes.  Prefer forwarding to a public neighbor the
+        client has NOT contacted — a dial-back from a fresh (ip, port) is the
+        only sound reachability witness against cone NATs."""
+        try:
+            msg = yield from stream.recv(timeout=10.0)
+        except DialError:
+            return
+        _, addr = msg
+        client_host = stream.conn.hosts[0] if stream.conn.hosts[1] is self.host \
+            else stream.conn.hosts[1]
+        helper_conn = None
+        for name, conns in self.host._connections.items():
+            neighbor = self.net.hosts.get(name)
+            if (neighbor is None or neighbor is client_host
+                    or neighbor.nat is not None):
+                continue
+            live = [c for c in conns if not c.closed and not c.relayed]
+            if live:
+                helper_conn = live[0]
+                break
+        if helper_conn is not None:
+            fwd = helper_conn.open_stream(PROTO_AUTONAT_FWD, self.host)
+            fwd.send(("probe", addr), 96)
+            try:
+                resp = yield from fwd.recv(timeout=5.0)
+                ok = bool(resp[1])
+            except DialError:
+                ok = False
+            fwd.close()
+        else:
+            ok = yield from self.probe_addr(tuple(addr))
+        stream.send(("dialback", ok), 64)
+
+    def autonat_probe(self, helper_conn: Connection) -> Generator:
+        """Ask a connected public peer to dial back our observed address."""
+        if not self.observed_addrs:
+            self.reachability = "private" if self.host.nat else "public"
+            return self.reachability
+        addr = sorted(self.observed_addrs)[0]
+        stream = helper_conn.open_stream(PROTO_AUTONAT, self.host)
+        stream.send(("probe", addr), 96)
+        try:
+            msg = yield from stream.recv(timeout=5.0)
+            ok = bool(msg[1])
+        except DialError:
+            ok = False
+        stream.close()
+        self.reachability = "public" if ok else "private"
+        return self.reachability
+
+    # ------------------------------------------------------------------ relay
+    def enable_relay(self) -> None:
+        """Make this (public) host a circuit relay."""
+        self.is_relay = True
+        self.host.handle(PROTO_RELAY_RESERVE, self._relay_reserve_handler)
+        self.host.handle(PROTO_RELAY_CONNECT, self._relay_connect_handler)
+
+    def _relay_reserve_handler(self, stream: Stream) -> Generator:
+        try:
+            msg = yield from stream.recv(timeout=10.0)
+        except DialError:
+            return
+        _, peer_digest, host_name = msg
+        self.relay_reservations[peer_digest] = self.net.hosts[host_name]
+        stream.send(("reserved", True), 64)
+
+    def _relay_connect_handler(self, stream: Stream) -> Generator:
+        try:
+            msg = yield from stream.recv(timeout=10.0)
+        except DialError:
+            return
+        _, target_digest, src_name = msg
+        target = self.relay_reservations.get(target_digest)
+        src_host = self.net.hosts[src_name]
+        if target is None:
+            stream.send(("error", "no reservation"), 64)
+            return
+        conn_to_target = self.host.connection_to(target)
+        if conn_to_target is None:
+            stream.send(("error", "relay lost target"), 64)
+            return
+        # Notify the target so it can account for the incoming circuit.
+        stop = conn_to_target.open_stream(PROTO_RELAY_STOP, self.host)
+        stop.send(("incoming", src_name), 96)
+        try:
+            yield from stop.recv(timeout=5.0)
+        except DialError:
+            stream.send(("error", "target rejected"), 64)
+            return
+        circuit = self.net.establish(src_host, target, relayed=True, relay=self.host)
+        stream.send(("ok", circuit), 128)
+
+    def relay_reserve(self, relay_conn: Connection) -> Generator:
+        """Client: reserve a slot on a relay (listen via circuit)."""
+        self.host.handle(PROTO_RELAY_STOP, self._relay_stop_handler)
+        stream = relay_conn.open_stream(PROTO_RELAY_RESERVE, self.host)
+        stream.send(("reserve", self.peer_id.digest, self.host.name), 96)
+        msg = yield from stream.recv(timeout=5.0)
+        stream.close()
+        return bool(msg[1])
+
+    def _relay_stop_handler(self, stream: Stream) -> Generator:
+        try:
+            yield from stream.recv(timeout=10.0)
+            stream.send(("ok",), 64)
+        except DialError:
+            return
+
+    def relay_connect(self, relay_conn: Connection, target: PeerId) -> Generator:
+        """Client: open a circuit to ``target`` through a connected relay."""
+        stream = relay_conn.open_stream(PROTO_RELAY_CONNECT, self.host)
+        stream.send(("connect", target.digest, self.host.name), 96)
+        msg = yield from stream.recv(timeout=10.0)
+        stream.close()
+        if msg[0] != "ok":
+            raise DialError(f"relay circuit failed: {msg[1]}")
+        self.stats["relayed"] += 1
+        return msg[1]

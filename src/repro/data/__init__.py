@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, ShardedLoader, make_batch_iterator
+
+__all__ = ["SyntheticLM", "ShardedLoader", "make_batch_iterator"]

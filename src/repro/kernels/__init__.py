@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots (+ ops wrappers + oracles).
+
+* flash_attention — streaming-softmax attention, VMEM (bq,bk) tiles
+* moe_gating      — fused router softmax/top-k/renormalize
+* mlstm_scan      — chunkwise xLSTM matrix-memory recurrence
+
+Validated in interpret mode on CPU (tests/test_kernels.py sweeps shapes &
+dtypes against ref.py); on TPU the same pallas_call lowers via Mosaic.
+"""
+
+from .ops import flash_attention, mlstm_scan, moe_gating
+
+__all__ = ["flash_attention", "moe_gating", "mlstm_scan"]

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately the *naive* formulations (quadratic attention, full
+softmax + top_k, stabilized D-matrix mLSTM) — simple enough to trust, used
+by tests/test_kernels.py to assert_allclose against the kernels across
+shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q,k,v: (B, H, S, hd) — naive masked softmax attention."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kpos = jnp.arange(Sk)[None, :]
+        ok = kpos <= qpos
+        if window > 0:
+            ok &= kpos > qpos - window
+        logits = jnp.where(ok[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def moe_gating_ref(logits: jax.Array, k: int,
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits: (T, E) → (weights (T,k), experts (T,k), probs (T,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    return weights, experts.astype(jnp.int32), probs
+
+
+def mlstm_chunk_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    log_i: jax.Array, log_f: jax.Array,
+                    C0: jax.Array, n0: jax.Array, m0: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sequential-recurrence oracle for one (B,H) slice batch.
+
+    q,k,v: (B,H,S,hd) (k pre-scaled by 1/sqrt(hd));
+    log_i/log_f: (B,H,S); state C0 (B,H,hd,hd), n0 (B,H,hd), m0 (B,H).
+    Returns (h (B,H,S,hd), C_T, n_T, m_T) — the exp(-m)-scaled convention.
+    """
+    B, H, S, hd = q.shape
+
+    def step(carry, t):
+        C, n, m = carry
+        m1 = jnp.maximum(log_f[:, :, t] + m, log_i[:, :, t])
+        i1 = jnp.exp(log_i[:, :, t] - m1)
+        f1 = jnp.exp(log_f[:, :, t] + m - m1)
+        kv = k[:, :, t][..., :, None] * v[:, :, t][..., None, :]
+        C1 = f1[..., None, None] * C + i1[..., None, None] * kv
+        n1 = f1[..., None] * n + i1[..., None] * k[:, :, t]
+        num = jnp.einsum("bhij,bhi->bhj", C1, q[:, :, t])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n1, q[:, :, t])),
+                          jnp.exp(-m1))
+        return (C1, n1, m1), num / den[..., None]
+
+    (C, n, m), hs = jax.lax.scan(
+        step, (C0.astype(jnp.float32), n0.astype(jnp.float32),
+               m0.astype(jnp.float32)), jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 2)                      # (B,H,S,hd)
+    return h.astype(q.dtype), C, n, m

@@ -1,0 +1,3 @@
+# NOTE: deliberately empty — repro.launch.dryrun must be able to set
+# XLA_FLAGS before *any* jax import, so this package must not import jax
+# (or anything that does) at import time.

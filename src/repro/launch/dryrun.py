@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+Proves the distribution config is coherent without hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(**specs).compile()``
+on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh, then records
+memory_analysis / cost_analysis / collective traffic for §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, cfg_for_shape, get_config,
+                           input_specs, shape_supported)
+from repro.models import ops_for
+from repro.models.config import ModelConfig
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.hlo_stats import op_histogram, parse_collectives
+from repro.launch.shardings import tree_shardings
+from repro.optim import cosine_schedule
+from repro.train.step import make_train_step, train_state_init
+
+
+def _replicated_like(tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))), tree)
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  dtype: Any = jnp.bfloat16,
+                  overrides: Optional[Dict[str, Any]] = None,
+                  sharding_overrides: Optional[Dict[str, Any]] = None):
+    """Lower one (arch × shape × mesh) step.  Returns (lowered, meta)."""
+    import dataclasses
+
+    shape = SHAPES[shape_name]
+    cfg = cfg_for_shape(get_config(arch), shape)
+    auto: Dict[str, Any] = {}
+    if shape.kind == "train":
+        auto["remat"] = True              # activation checkpoint each block
+    if cfg.n_experts:
+        # dispatch groups = data-axis size, so expert buffers stay local
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        if tokens % 16 == 0:
+            auto["moe_groups"] = 16
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    n_batch_shards = 32 if multi_pod else 16
+    if shape.global_batch % n_batch_shards == 0:
+        auto["act_batch_axes"] = batch_axes
+        auto["act_model_axis"] = "model"
+    if cfg.arch == "ssm" and shape.kind == "prefill":
+        # §Perf: sequence-parallel mLSTM over the (otherwise idle) model
+        # axis — weights replicated, segments concurrent, causality
+        # restored by an associative state scan.  (Train keeps the
+        # sequential chunk path: seq-par × microbatch × remat × grad
+        # blows up XLA:CPU compile time — noted in EXPERIMENTS §4.1.)
+        auto["seq_segments"] = 16
+        auto["act_seq_axis"] = "model"
+    auto.update(overrides or {})
+    cfg = dataclasses.replace(cfg, **auto)
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"skipped: {why}")
+    ops = ops_for(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+    batch_shapes = input_specs(cfg, shape, dtype)
+
+    with mesh:
+        if kind == "train":
+            state_shapes = jax.eval_shape(
+                lambda: train_state_init(cfg, jax.random.PRNGKey(0), dtype))
+            micro = 1
+            for cand in (8, 4, 2):
+                if shape.global_batch % (n_batch_shards * cand) == 0:
+                    micro = cand
+                    break
+            step = make_train_step(cfg, cosine_schedule(3e-4, 100, 10_000),
+                                   microbatches=micro)
+            state_sh = tree_shardings(state_shapes, mesh, cfg, "params", "train")
+            batch_sh = tree_shardings(batch_shapes, mesh, cfg, "batch")
+            out_shapes = jax.eval_shape(step, state_shapes, batch_shapes)
+            out_sh = (state_sh, _replicated_like(out_shapes[1], mesh))
+            if sharding_overrides:
+                state_sh, batch_sh, out_sh = sharding_overrides["train"](
+                    mesh, cfg, state_sh, batch_sh, out_sh)
+            jfn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                          out_shardings=out_sh)
+            lowered = jfn.lower(state_shapes, batch_shapes)
+        else:
+            params_shapes = jax.eval_shape(
+                lambda: ops.init(cfg, jax.random.PRNGKey(0), dtype))
+            params_sh = tree_shardings(params_shapes, mesh, cfg, "params", "serve")
+            B = shape.global_batch
+            data_axes, _ = mesh_axes(mesh)
+            batch_ax = data_axes if len(data_axes) > 1 else data_axes[0]
+            baxis = batch_ax if B % _axsize(mesh, batch_ax) == 0 else None
+            if kind == "prefill":
+                cache_shapes = jax.eval_shape(
+                    lambda: ops.init_cache(cfg, B, shape.seq_len, dtype))
+                cache_sh = tree_shardings(cache_shapes, mesh, cfg, "cache")
+                batch_sh = tree_shardings(batch_shapes, mesh, cfg, "batch")
+
+                def prefill_step(params, batch, cache):
+                    return ops.prefill(params, cfg, batch, cache)
+
+                out_sh = (NamedSharding(mesh, P(baxis, None)), cache_sh)
+                jfn = jax.jit(prefill_step,
+                              in_shardings=(params_sh, batch_sh, cache_sh),
+                              out_shardings=out_sh)
+                lowered = jfn.lower(params_shapes, batch_shapes, cache_shapes)
+            else:  # decode
+                cache_shapes = jax.eval_shape(
+                    lambda: ops.init_cache(cfg, B, shape.seq_len, dtype))
+                cache_sh = tree_shardings(cache_shapes, mesh, cfg, "cache")
+                token_shape = batch_shapes["token"]
+                token_sh = NamedSharding(mesh, P(baxis))
+
+                def serve_step(params, token, cache):
+                    return ops.decode_step(params, cfg, token, cache)
+
+                out_sh = (NamedSharding(mesh, P(baxis, None)), cache_sh)
+                jfn = jax.jit(serve_step,
+                              in_shardings=(params_sh, token_sh, cache_sh),
+                              out_shardings=out_sh)
+                lowered = jfn.lower(params_shapes, token_shape, cache_shapes)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": kind,
+            "multi_pod": multi_pod, "n_devices": mesh.devices.size,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "window": cfg.window}
+    return lowered, meta
+
+
+def _axsize(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            dtype: Any = jnp.bfloat16, verbose: bool = True,
+            overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                  dtype=dtype, overrides=overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    colls = parse_collectives(txt)
+
+    rec = dict(meta)
+    rec.update({
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "bytes_args_per_dev": int(mem.argument_size_in_bytes),
+        "bytes_temp_per_dev": int(mem.temp_size_in_bytes),
+        "bytes_out_per_dev": int(mem.output_size_in_bytes),
+        "hlo_flops_per_dev": float(cost.get("flops", 0.0)),
+        "hlo_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
+        "collective_counts": colls.counts,
+        "collective_bytes_per_dev": colls.total_bytes,
+        "top_ops": op_histogram(txt, 8),
+    })
+    if verbose:
+        peak = (rec["bytes_args_per_dev"] + rec["bytes_temp_per_dev"]
+                + rec["bytes_out_per_dev"]) / 2**30
+        print(f"[dryrun] {arch} × {shape_name} × "
+              f"{'2x16x16' if multi_pod else '16x16'}: OK  "
+              f"compile={t_compile:.1f}s  mem/dev={peak:.2f}GiB  "
+              f"flops/dev={rec['hlo_flops_per_dev']:.3g}  "
+              f"coll={ {k: f'{v/2**20:.1f}MiB' for k, v in colls.bytes_by_op.items()} }",
+              flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) for the chosen mesh")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--dtype", default="bfloat16")
+    args = ap.parse_args()
+
+    dtype = jnp.dtype(args.dtype)
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for arch, shape_name in combos:
+        shape = SHAPES[shape_name]
+        cfg = cfg_for_shape(get_config(arch), shape)
+        ok, why = shape_supported(cfg, shape)
+        if not ok:
+            print(f"[dryrun] {arch} × {shape_name}: SKIP ({why})", flush=True)
+            records.append({"arch": arch, "shape": shape_name,
+                            "skipped": why})
+            continue
+        try:
+            records.append(run_one(arch, shape_name,
+                                   multi_pod=args.multi_pod, dtype=dtype))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            failures.append((arch, shape_name, repr(e)))
+            records.append({"arch": arch, "shape": shape_name,
+                            "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=2)
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}", flush=True)
+        return 1
+    print(f"[dryrun] all {len(combos)} combos OK "
+          f"({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'})",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

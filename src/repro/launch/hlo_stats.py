@@ -1,0 +1,100 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``compiled.as_text()`` is the per-device module after partitioning: every
+collective instruction's result shape is the per-device shard, and
+``replica_groups=[G,g]`` gives the group size.  Per-device bytes moved over
+the interconnect, by op type (ring algorithms):
+
+    all-reduce       2 · size · (g-1)/g
+    all-gather       size · (g-1)/g          (size = gathered result)
+    reduce-scatter   size · (g-1)            (size = scattered result)
+    all-to-all       size · (g-1)/g
+    collective-permute   size
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def _shape_bytes(shapes_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        size = _shape_bytes(m.group("shapes"))
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm is not None:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl is not None:
+                g = len(gl.group(1).split(","))
+        g = g or 2
+        if op == "all-reduce":
+            moved = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            moved = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = size * (g - 1)
+        elif op == "all-to-all":
+            moved = size * (g - 1) / g
+        else:  # collective-permute
+            moved = size
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + moved
+    return stats
+
+
+def op_histogram(hlo_text: str, top: int = 12) -> List[Tuple[str, int]]:
+    """Instruction-name histogram (remat/duplication smell test)."""
+    ops: Dict[str, int] = {}
+    for m in re.finditer(r"^\s*(?:ROOT )?%?([a-z0-9_.-]+) = ", hlo_text,
+                         re.MULTILINE):
+        base = m.group(1).split(".")[0]
+        ops[base] = ops.get(base, 0) + 1
+    return sorted(ops.items(), key=lambda kv: -kv[1])[:top]

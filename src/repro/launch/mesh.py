@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Functions only — importing this module never touches jax device state, so
+``dryrun.py`` can set ``XLA_FLAGS`` first.
+
+Mesh semantics (DESIGN.md §6): ``model`` carries tensor/expert parallelism
+(XLA collectives over ICI); ``data`` carries data parallelism / FSDP; the
+``pod`` axis stands for the paper's *clusters* — in a real Lattica
+deployment the gradient/model sync across it rides the CRDT + Bitswap
+substrate instead of ICI, and the multi-pod dry-run proves the sharded
+program is coherent with that axis present.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (batch/data axes, model axis) for a mesh from
+    ``make_production_mesh``."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

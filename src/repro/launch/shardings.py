@@ -1,0 +1,201 @@
+"""Sharding rules: map every param/state/input leaf to a PartitionSpec.
+
+Two modes:
+
+* ``train`` — 2-D sharding (FSDP × TP): large matrices shard one dim on
+  the ``model`` axis (tensor parallelism) and the other on the data axes
+  (ZeRO-style), so params + AdamW moments fit per-device for the 32B/132B
+  configs.  XLA inserts the corresponding all-gathers/reduce-scatters.
+* ``serve`` — tensor parallelism only (weights replicated across data
+  groups), except MoE experts which stay expert/data-sharded (a 132B MoE
+  doesn't fit one data group otherwise).
+
+Every axis assignment passes through ``_fits`` — a dim that doesn't divide
+the axis size is replicated instead (e.g. whisper's 51865 vocab, 28-head
+VLM attention), keeping GSPMD away from degenerate paddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+from .mesh import mesh_axes
+
+
+def _axis_size(mesh: Mesh, axis: Any) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fits(mesh: Mesh, axis: Any, dim: int) -> Optional[Any]:
+    n = _axis_size(mesh, axis)
+    return axis if (n > 1 and dim % n == 0) else None
+
+
+def _path_str(path: Tuple) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: Sequence[int], mesh: Mesh, cfg: ModelConfig,
+               mode: str) -> P:
+    """PartitionSpec for one parameter (or optimizer-moment) leaf."""
+    data_axes, model = mesh_axes(mesh)
+    fsdp: Any = data_axes if len(data_axes) == 1 else data_axes
+    if isinstance(fsdp, tuple) and len(fsdp) == 1:
+        fsdp = fsdp[0]
+    if mode == "serve":
+        fsdp = None
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    # §Perf iteration (xlstm × prefill_32k): tensor-parallel sharding of the
+    # xLSTM cell forces a reshard of q/k/v and the (hd×hd) matrix state on
+    # EVERY chunk step (1238 collectives, 105 GiB/dev moved).  Under the
+    # sequence-parallel schedule the model axis carries segments instead,
+    # so weights replicate.  Decode (no seq-par) keeps TP sharding.
+    if mode == "serve" and cfg.arch == "ssm" and cfg.seq_segments > 1:
+        return P(*([None] * nd))
+
+    def spec_trailing(*trailing: Any) -> P:
+        lead = (None,) * (nd - len(trailing))
+        fixed = tuple(_fits(mesh, ax, shape[len(lead) + i])
+                      for i, ax in enumerate(trailing))
+        return P(*(lead + fixed))
+
+    # ---- embeddings / heads -------------------------------------------------
+    if name in ("embed", "embed_out"):
+        return spec_trailing(model, fsdp)
+    if name in ("lm_head", "enc_proj"):
+        return spec_trailing(fsdp, model)
+
+    # ---- MoE ---------------------------------------------------------------
+    if "moe" in path and name in ("w_gate", "w_up", "w_down"):
+        # experts (E, D, F) / (E, F, D): expert-parallel over the data axes
+        # when E divides (dbrx: 16), else FSDP the middle dim (qwen2-moe: 60)
+        E = shape[-3]
+        ep = _fits(mesh, fsdp if mode == "train" else
+                   (fsdp or _first_data_axis(mesh)), E)
+        if name == "w_down":
+            inner = spec_trailing(None, model, None if ep else fsdp)
+        else:
+            inner = spec_trailing(None, None if ep else fsdp, model)
+        parts = list(inner)
+        parts[-3] = ep
+        return P(*parts)
+    if name == "router":
+        return spec_trailing(fsdp, None)
+
+    # ---- attention / MLP / generic matrices ---------------------------------
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "ff_gate", "w_in",
+                "w_dt2", "w_z", "w_o"):
+        return spec_trailing(fsdp, model)
+    if name in ("wo", "w_down", "ff_down", "w_out", "w_bc", "w_dt1", "A_log"):
+        return spec_trailing(model, fsdp)
+    if "slstm" in path and name in ("w_i", "w_f"):
+        return spec_trailing(fsdp, model)
+    if "mlstm" in path and name in ("w_i", "w_f"):
+        return spec_trailing(model, None)
+    if name.startswith("r_"):                    # sLSTM recurrent (H, hd, hd)
+        return spec_trailing(None, None, model)
+    if name == "conv_w":
+        return spec_trailing(None, model)
+
+    # ---- everything else (norms, biases, gates) — replicate ----------------
+    return P(*([None] * nd))
+
+
+def _first_data_axis(mesh: Mesh) -> Any:
+    data_axes, _ = mesh_axes(mesh)
+    return data_axes if len(data_axes) > 1 else data_axes[0]
+
+
+def batch_spec(name: str, shape: Sequence[int], mesh: Mesh) -> P:
+    data_axes, _model = mesh_axes(mesh)
+    batch_ax: Any = data_axes if len(data_axes) > 1 else data_axes[0]
+    nd = len(shape)
+    if name == "positions3":                     # (3, B, S)
+        b = _fits(mesh, batch_ax, shape[1])
+        return P(None, b, *([None] * (nd - 2)))
+    b = _fits(mesh, batch_ax, shape[0])
+    return P(b, *([None] * (nd - 1)))
+
+
+def cache_spec(path: str, shape: Sequence[int], mesh: Mesh,
+               cfg: ModelConfig) -> P:
+    """Decode caches: (L, B, ...) — batch on data axes, head-ish dims on
+    model where they divide."""
+    data_axes, model = mesh_axes(mesh)
+    batch_ax: Any = data_axes if len(data_axes) > 1 else data_axes[0]
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if nd == 0 or name == "len":
+        return P()
+    # leading L dim for stacked caches; ssm list caches have no L dim
+    has_L = cfg.arch != "ssm"
+    bdim = 1 if has_L else 0
+    parts: list = [None] * nd
+    if bdim < nd:
+        parts[bdim] = _fits(mesh, batch_ax, shape[bdim])
+    if name in ("k", "v", "xk", "xv"):           # (L,B,T,Hk,hd)
+        parts[-2] = _fits(mesh, model, shape[-2])
+        if parts[-2] is None:
+            # KV heads don't divide the model axis (e.g. Hk=8 on 16):
+            # shard the sequence dim instead — attention over a T-sharded
+            # cache lowers to partial-softmax + small stat all-reduces,
+            # vastly cheaper than replicating a 32k-token cache
+            parts[-3] = _fits(mesh, model, shape[-3])
+    elif name in ("C",):                         # (B,H,hd,hd) [+L via list]
+        parts[-1] = _fits(mesh, model, shape[-1])
+    elif name in ("n", "sc", "sn", "sh", "sm"):  # (B,H,hd)
+        parts[-1] = _fits(mesh, model, shape[-1])
+    elif name == "h":                            # mamba (L,B,d_in,N)
+        parts[-2] = _fits(mesh, model, shape[-2])
+    elif name == "conv":                         # (L,B,K-1,d_in)
+        parts[-1] = _fits(mesh, model, shape[-1])
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# tree builders
+# ---------------------------------------------------------------------------
+
+def tree_shardings(tree: Any, mesh: Mesh, cfg: ModelConfig, kind: str,
+                   mode: str = "train") -> Any:
+    """Build a NamedSharding pytree for ``tree`` (a ShapeDtypeStruct tree).
+
+    kind: "params" | "batch" | "cache" | "replicated"
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        shape = leaf.shape
+        if kind == "params":
+            spec = param_spec(pstr, shape, mesh, cfg, mode)
+        elif kind == "batch":
+            spec = batch_spec(pstr.split("/")[-1], shape, mesh)
+        elif kind == "cache":
+            spec = cache_spec(pstr, shape, mesh, cfg)
+        else:
+            spec = P(*([None] * len(shape)))
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

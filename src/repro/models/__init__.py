@@ -1,0 +1,58 @@
+"""Model zoo: a uniform functional interface over six architecture families.
+
+``ops_for(cfg)`` returns the five entry points every layer above (training
+loop, serving, dry-run) programs against:
+
+    init(cfg, key, dtype)            -> params
+    forward(params, cfg, batch)      -> (logits, aux)
+    loss_fn(params, cfg, batch)      -> (loss, metrics)
+    init_cache(cfg, B, max_len, dt)  -> cache
+    prefill(params, cfg, batch, c)   -> (logits, cache)
+    decode_step(params, cfg, tok, c) -> (logits, cache)
+"""
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from . import decoder, encdec
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelOps:
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_DECODER_OPS = ModelOps(
+    init=decoder.init_params,
+    forward=decoder.forward,
+    loss_fn=decoder.loss_fn,
+    init_cache=decoder.init_cache,
+    prefill=decoder.prefill,
+    decode_step=decoder.decode_step,
+)
+
+_ENCDEC_OPS = ModelOps(
+    init=encdec.init_params,
+    forward=encdec.forward,
+    loss_fn=encdec.loss_fn,
+    init_cache=encdec.init_cache,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+)
+
+
+def ops_for(cfg: ModelConfig) -> ModelOps:
+    if cfg.arch == "audio":
+        return _ENCDEC_OPS
+    if cfg.arch in ("dense", "moe", "ssm", "hybrid", "vlm"):
+        return _DECODER_OPS
+    raise ValueError(f"unknown arch family {cfg.arch}")
+
+
+__all__ = ["ModelConfig", "ModelOps", "ops_for", "decoder", "encdec"]

@@ -1,0 +1,129 @@
+"""Memory-efficient (flash-style) attention in pure jnp, with custom VJP.
+
+O(S·k_block) live memory instead of O(S²): the forward streams key/value
+blocks with an online softmax; the backward recomputes block probabilities
+from the saved (q, k, v, lse) instead of storing the S×S matrix.  This is
+the same algorithm the Pallas TPU kernel (``repro.kernels.flash_attention``)
+implements with explicit VMEM tiling — this jnp version is what the
+dry-run lowers (Pallas-TPU can't lower on the CPU backend) and doubles as
+the kernel's differentiable counterpart.
+
+Supports causal masking with a query-position offset (cached prefill) and
+sliding windows.  ``kpos``/``qpos`` are derived, not materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_mask(qpos: jax.Array, kpos: jax.Array, window: int) -> jax.Array:
+    """(Sq, Sk) additive mask for causal (+ optional window) attention."""
+    ok = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= kpos[None, :] > (qpos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0,
+                        q_offset_static: int = 0, k_block: int = 1024,
+                        ) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Sk,H,hd) — kv already head-repeated.
+    Causal semantics: query i has absolute position q_offset+i; key j has
+    position j."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset_static, k_block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, k_block,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nkb = max(Sk // k_block, 1)
+    kb = Sk // nkb
+    assert Sk % nkb == 0, (Sq, Sk, kb)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.reshape(B, nkb, kb, H, hd)
+    vf = v.reshape(B, nkb, kb, H, hd)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        acc, m, l = carry
+        kb_, vb_ = blk["k"].astype(jnp.float32), blk["v"].astype(jnp.float32)
+        kpos = blk["idx"] * kb + jnp.arange(kb)
+        s = jnp.einsum("bqhd,bkhd->bqkh", qf, kb_)
+        if causal:
+            s = s + _block_mask(qpos, kpos, window)[None, :, :, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=2))
+        p = jnp.exp(s - m_new[:, :, None, :])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=2)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqkh,bkhd->bqhd", p, vb_)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    blks = {"k": jnp.moveaxis(kf, 1, 0), "v": jnp.moveaxis(vf, 1, 0),
+            "idx": jnp.arange(nkb)}
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), blks)
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, k_block):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, k_block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, k_block, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nkb = max(Sk // k_block, 1)
+    kb = Sk // nkb
+    qf = q.astype(jnp.float32) * scale
+    do = dout.astype(jnp.float32)
+    # D_i = sum_d dout_i * out_i  (B,Sq,H)
+    Dv = jnp.sum(do * out.astype(jnp.float32), axis=-1)
+    qpos = q_offset + jnp.arange(Sq)
+    kf = jnp.moveaxis(k.reshape(B, nkb, kb, H, hd), 1, 0)
+    vf = jnp.moveaxis(v.reshape(B, nkb, kb, H, hd), 1, 0)
+
+    def body(dq, blk):
+        kb_ = blk["k"].astype(jnp.float32)
+        vb_ = blk["v"].astype(jnp.float32)
+        kpos = blk["idx"] * kb + jnp.arange(kb)
+        s = jnp.einsum("bqhd,bkhd->bqkh", qf, kb_)
+        if causal:
+            s = s + _block_mask(qpos, kpos, window)[None, :, :, None]
+        p = jnp.exp(s - lse[:, :, None, :])                 # (B,Sq,kb,H)
+        dv = jnp.einsum("bqkh,bqhd->bkhd", p, do)
+        dp = jnp.einsum("bqhd,bkhd->bqkh", do, vb_)
+        ds = p * (dp - Dv[:, :, None, :])
+        dq = dq + jnp.einsum("bqkh,bkhd->bqhd", ds, kb_) * scale
+        dk = jnp.einsum("bqkh,bqhd->bkhd", ds, qf)          # qf has scale
+        return dq, {"dk": dk, "dv": dv}
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    blks = {"k": kf, "v": vf, "idx": jnp.arange(nkb)}
+    dq, outs = jax.lax.scan(body, dq0, blks)
+    dk = jnp.moveaxis(outs["dk"], 0, 1).reshape(B, Sk, H, hd)
+    dv = jnp.moveaxis(outs["dv"], 0, 1).reshape(B, Sk, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_jnp.defvjp(_flash_fwd, _flash_bwd)

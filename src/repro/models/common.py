@@ -1,0 +1,277 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), attention, MLP.
+
+Everything is a pure function over explicit param pytrees — no framework
+dependency — so the same code path serves training, prefill, decode, and
+the multi-device dry-run under pjit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+#: below this sequence length, plain S² attention is cheaper than streaming
+FLASH_MIN_SEQ = 2048
+
+
+def constrain_batch_seq(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pin (batch, seq, ...) activations to (batch axes, seq axis, ...) —
+    the layout recurrent stacks keep end-to-end under sequence parallelism."""
+    if not cfg.act_seq_axis:
+        return constrain_batch(x, cfg)
+    from jax.sharding import PartitionSpec as P
+
+    b: Any = None
+    if cfg.act_batch_axes:
+        b = (cfg.act_batch_axes if len(cfg.act_batch_axes) > 1
+             else cfg.act_batch_axes[0])
+    spec = [b, cfg.act_seq_axis] + [None] * (x.ndim - 2)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_batch(x: jax.Array, cfg: ModelConfig, dim: int = 0) -> jax.Array:
+    """Pin dim ``dim`` of an activation to the batch mesh axes (no-op when
+    cfg.act_batch_axes is unset — single-device tests/examples)."""
+    if not cfg.act_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    axes: Any = (cfg.act_batch_axes if len(cfg.act_batch_axes) > 1
+                 else cfg.act_batch_axes[0])
+    spec = [None] * x.ndim
+    spec[dim] = axes
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ----------------------------------------------------------------- init utils
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype: Any,
+               scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------------ RoPE
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the head dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions3: (3, B, S) int32 — temporal, height, width.
+    ``sections`` counts *frequency pairs* per stream (sum == hd // 2).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # select which position stream drives each frequency pair
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                         total_repeat_length=hd // 2)   # (hd/2,)
+    pos = positions3.astype(jnp.float32)                # (3,B,S)
+    pos_per_freq = pos[sec_ids]                         # (hd/2, B, S)
+    angles = jnp.moveaxis(pos_per_freq, 0, -1) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- attention
+
+def init_attention(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.q_dim), dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.kv_dim), dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.kv_dim), dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, cfg.d_model), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), dtype)
+        p["k_norm"] = jnp.ones((cfg.hd,), dtype)
+    return p
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+def attention_scores(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: Optional[jax.Array]) -> jax.Array:
+    """Reference attention: q (B,S,H,hd), k/v (B,T,H,hd), mask (S,T) or
+    (B,1,S,T) additive."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = logits + mask
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def causal_mask(s: int, t: int, window: int = 0,
+                offset: int = 0) -> jax.Array:
+    """Additive mask (1,1,S,T).  ``offset`` = number of cached tokens before
+    the current block (so query i attends keys <= offset+i).  ``window`` > 0
+    limits attention to the trailing ``window`` keys (sliding window)."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    ok = kj <= qi
+    if window > 0:
+        ok &= kj > (qi - window)
+    return jnp.where(ok, 0.0, -1e9).astype(jnp.float32)[None, None]
+
+
+def run_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array,
+                  kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache_len: Optional[jax.Array] = None,
+                  mask: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """GQA attention.  Without a cache: causal self-attention over x.
+    With a cache (k,v of shape (B,T,Hk,hd)): append at ``cache_len`` and
+    attend over the cache (decode / incremental prefill).
+
+    positions: (B,S) or (3,B,S) when cfg.mrope.
+    """
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hk, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache                                  # (B,T,Hk,hd)
+        T = ck.shape[1]
+        ring = cfg.window > 0 and T == cfg.window
+        qpos = cache_len + jnp.arange(S)                   # (S,) query positions
+        if ring:
+            # ring-buffer sliding window cache (mod-scatter handles wrap)
+            if S >= T:
+                idx = (cache_len + S - T + jnp.arange(T)) % T
+                ck = ck.at[:, idx].set(k[:, -T:])
+                cv = cv.at[:, idx].set(v[:, -T:])
+            else:
+                idx = (cache_len + jnp.arange(S)) % T
+                ck = ck.at[:, idx].set(k)
+                cv = cv.at[:, idx].set(v)
+            kpos = _ring_pos(jnp.arange(T), cache_len + S, T)   # (T,)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_len, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_len, 0, 0))
+            kpos = jnp.arange(T)
+        ok = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+        if cfg.window > 0:
+            ok &= kpos[None, :] > (qpos[:, None] - cfg.window)
+        new_cache = (ck, cv)
+        if S > 1 and S >= FLASH_MIN_SEQ:
+            # initial prefill (cache starts empty): stream the NEW block's
+            # k/v flash-style — O(S·blk) memory instead of O(S·T)
+            from .chunked import flash_attention_jnp
+            kk = _repeat_kv(k, H // Hk)
+            vv = _repeat_kv(v, H // Hk)
+            out = flash_attention_jnp(q, kk, vv, True, cfg.window)
+        else:
+            ok = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+            if cfg.window > 0:
+                ok &= kpos[None, :] > (qpos[:, None] - cfg.window)
+            amask = jnp.where(ok, 0.0, -1e9).astype(jnp.float32)[None, None]
+            kk = _repeat_kv(ck, H // Hk)
+            vv = _repeat_kv(cv, H // Hk)
+            out = attention_scores(q, kk, vv, amask)
+    else:
+        kk = _repeat_kv(k, H // Hk)
+        vv = _repeat_kv(v, H // Hk)
+        if cfg.use_flash_kernel and not cfg.mrope and mask is None:
+            from repro.kernels.ops import flash_attention
+            out = flash_attention(q, kk, vv, causal=True, window=cfg.window)
+        elif mask is None and S >= FLASH_MIN_SEQ:
+            from .chunked import flash_attention_jnp
+            out = flash_attention_jnp(q, kk, vv, True, cfg.window)
+        else:
+            if mask is None:
+                mask = causal_mask(S, S, cfg.window)
+            out = attention_scores(q, kk, vv, mask)
+    y = out.reshape(B, S, H * hd) @ p["wo"]
+    return y, new_cache
+
+
+def _ring_pos(slot: jax.Array, length: jax.Array, T: int) -> jax.Array:
+    """Absolute position stored in ring slot ``slot`` when ``length`` tokens
+    have been written into a ring of size T."""
+    # last written slot is (length-1) % T holding position length-1
+    last_slot = (length - 1) % T
+    delta = (last_slot - slot) % T
+    return (length - 1) - delta
+
+
+# ------------------------------------------------------------------------- MLP
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype: Any) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def run_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

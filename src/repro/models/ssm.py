@@ -1,0 +1,492 @@
+"""Recurrent sequence layers: Mamba (selective SSM), mLSTM and sLSTM (xLSTM).
+
+Training/prefill use parallel formulations (associative scan for Mamba, the
+stabilized quadratic D-matrix form for mLSTM); decode uses O(1)-per-token
+recurrent state updates — this is what makes the ``long_500k`` shape feasible
+for the ssm/hybrid architectures where dense attention would be quadratic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain_batch, constrain_batch_seq, dense_init, rms_norm
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+DT_RANK = 16
+CONV_K = 4
+MAMBA_CHUNK = 128     # chunkwise-scan block (memory/recompute trade-off)
+MLSTM_CHUNK = 256     # mLSTM chunkwise-parallel block
+
+
+# =====================================================================
+# Mamba-style selective SSM head (Hymba's parallel-SSM branch)
+# =====================================================================
+
+def init_mamba(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    D, d_in, N = cfg.d_model, cfg.d_in, cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (D, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, d_in), dtype, scale=0.5),
+        "w_bc": dense_init(ks[2], (d_in, 2 * N), dtype),
+        "w_dt1": dense_init(ks[3], (d_in, DT_RANK), dtype),
+        "w_dt2": dense_init(ks[4], (DT_RANK, d_in), dtype),
+        "dt_bias": jnp.zeros((d_in,), dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_in, 1))),
+        "D_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[5], (d_in, D), dtype),
+    }
+
+
+def _causal_depthwise_conv(u: jax.Array, w: jax.Array,
+                           tail: Optional[jax.Array] = None) -> jax.Array:
+    """u: (B,S,C), w: (K,C).  ``tail``: (B,K-1,C) of preceding context."""
+    B, S, C = u.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, C), u.dtype)
+    up = jnp.concatenate([tail, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        out = out + up[:, i:i + S, :] * w[i]
+    return out
+
+
+def mamba_scan(dA: jax.Array, dBu: jax.Array,
+               h0: Optional[jax.Array] = None) -> jax.Array:
+    """Associative scan of h_t = dA_t * h_{t-1} + dBu_t along axis 1.
+
+    dA, dBu: (B, S, d_in, N).  Returns all h_t (B,S,d_in,N).
+    """
+    if h0 is not None:
+        dBu = dBu.at[:, 0].add(dA[:, 0] * h0)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    return h
+
+
+def run_mamba(p: Params, cfg: ModelConfig, x: jax.Array,
+              state: Optional[Tuple[jax.Array, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """x: (B,S,D).  state = (h (B,d_in,N), conv_tail (B,K-1,d_in)) for decode.
+
+    Returns (y (B,S,D), new_state or None).
+    """
+    B, S, D = x.shape
+    d_in, N = cfg.d_in, cfg.ssm_state
+    uz = x @ p["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    conv_tail = state[1] if state is not None else None
+    u_conv = _causal_depthwise_conv(u, p["conv_w"], conv_tail)
+    new_tail = jnp.concatenate(
+        [conv_tail if conv_tail is not None
+         else jnp.zeros((B, CONV_K - 1, d_in), u.dtype), u],
+        axis=1)[:, -(CONV_K - 1):, :]
+    u = jax.nn.silu(u_conv)
+
+    dt = jax.nn.softplus(
+        (u @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"]).astype(jnp.float32)
+    bc = u @ p["w_bc"]
+    B_, C_ = jnp.split(bc.astype(jnp.float32), 2, axis=-1)     # (B,S,N)
+    A = -jnp.exp(p["A_log"])                                   # (d_in,N)
+    uf = u.astype(jnp.float32)
+    h0 = state[0] if state is not None else None
+
+    if S == 1 and state is not None:
+        dA = jnp.exp(dt[:, 0, :, None] * A)                    # O(1) decode
+        dBu = (dt[:, 0] * uf[:, 0])[..., None] * B_[:, 0, None, :]
+        h1 = dA * h0 + dBu
+        y = jnp.einsum("bdn,bn->bd", h1, C_[:, 0])[:, None]
+        h_last = h1
+    else:
+        # chunkwise scan: (dA, dBu) and h live only per chunk (remat'd),
+        # so the (B,S,d_in,N) tensor is never materialized
+        W = MAMBA_CHUNK if S % MAMBA_CHUNK == 0 else S
+        nC = S // W
+        if h0 is None:
+            h0 = jnp.zeros((B, d_in, N), jnp.float32)
+
+        def chunk(h0c, blk):
+            dA = jnp.exp(blk["dt"][..., None] * A)             # (B,W,d,N)
+            dBu = (blk["dt"] * blk["u"])[..., None] * blk["B"][:, :, None, :]
+            h = mamba_scan(dA, dBu, h0c)
+            yc = jnp.einsum("bsdn,bsn->bsd", h, blk["C"])
+            return h[:, -1], yc
+
+        xs = {
+            "dt": dt.reshape(B, nC, W, d_in).swapaxes(0, 1),
+            "u": uf.reshape(B, nC, W, d_in).swapaxes(0, 1),
+            "B": B_.reshape(B, nC, W, N).swapaxes(0, 1),
+            "C": C_.reshape(B, nC, W, N).swapaxes(0, 1),
+        }
+        h_last, ys = jax.lax.scan(jax.checkpoint(chunk), h0, xs)
+        y = ys.swapaxes(0, 1).reshape(B, S, d_in)
+    y = y + p["D_skip"] * uf
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    new_state = (h_last, new_tail) if state is not None else None
+    return y, new_state
+
+
+# =====================================================================
+# mLSTM (xLSTM): matrix memory with exponential gating
+# =====================================================================
+
+def init_mlstm(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    D = cfg.d_model
+    d_in = 2 * D                      # xLSTM pre-up-projection factor 2
+    H = cfg.n_heads
+    hd = d_in // H
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (D, 2 * d_in), dtype),       # x and gate
+        "wq": dense_init(ks[1], (d_in, d_in), dtype),
+        "wk": dense_init(ks[2], (d_in, d_in), dtype),
+        "wv": dense_init(ks[3], (d_in, d_in), dtype),
+        "w_i": dense_init(ks[4], (d_in, H), jnp.float32, scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[5], (d_in, H), jnp.float32, scale=0.02),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # forget-gate bias init
+        "norm": jnp.ones((d_in,), dtype),
+        "w_down": dense_init(ks[6], (d_in, D), dtype),
+    }
+
+
+def run_mlstm(p: Params, cfg: ModelConfig, x: jax.Array,
+              state: Optional[Tuple[jax.Array, ...]] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, ...]]]:
+    """x: (B,S,D).  state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)) for decode."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    seq_par = (cfg.seq_segments > 1 and S > 1
+               and S % (cfg.seq_segments * MLSTM_CHUNK) == 0)
+    up = x @ p["w_up"]
+    if seq_par:
+        up = constrain_batch_seq(up, cfg)
+    xin, z = jnp.split(up, 2, axis=-1)                         # (B,S,d_in)
+    d_in = xin.shape[-1]
+    hd = d_in // H
+    q = (xin @ p["wq"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xin @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (xin @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    log_i = (xin.astype(jnp.float32) @ p["w_i"] + p["b_i"])    # (B,S,H)
+    log_f = jax.nn.log_sigmoid(xin.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+
+    if seq_par:
+        # sequence-parallel prefill: segments run concurrently across the
+        # model axis; an associative scan over per-segment states stitches
+        # causality back together (beyond-paper optimization, §Perf)
+        h, total = _mlstm_seqpar(cfg, q, k, v, log_i, log_f, state)
+        new_state = total if state is not None else None
+    elif S == 1 and state is not None:
+        C0, n0, m0 = state
+        m1 = jnp.maximum(log_f[:, 0] + m0, log_i[:, 0])        # (B,H)
+        i1 = jnp.exp(log_i[:, 0] - m1)
+        f1 = jnp.exp(log_f[:, 0] + m0 - m1)
+        C1 = f1[..., None, None] * C0 + \
+            i1[..., None, None] * (k[:, 0][..., :, None] * v[:, 0][..., None, :])
+        n1 = f1[..., None] * n0 + i1[..., None] * k[:, 0]
+        num = jnp.einsum("bhij,bhi->bhj", C1, q[:, 0])
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhi,bhi->bh", n1, q[:, 0])), jnp.exp(-m1))
+        h = (num / den[..., None]).reshape(B, 1, d_in)
+        new_state = (C1, n1, m1)
+    elif S <= MLSTM_CHUNK and state is None:
+        # parallel (quadratic) stabilized D-matrix form — short sequences,
+        # and the oracle the chunked path is tested against
+        F = jnp.cumsum(log_f, axis=1)                          # (B,S,H)
+        logD = (F[:, :, None, :] - F[:, None, :, :] +
+                log_i[:, None, :, :])                          # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((S, S), bool))
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        m = jnp.max(logD, axis=2)                              # (B,t,H)
+        Dm = jnp.exp(logD - m[:, :, None, :])                  # (B,t,s,H)
+        scores = jnp.einsum("bthd,bshd->btsh", q, k) * Dm
+        norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2)), jnp.exp(-m))
+        h = jnp.einsum("btsh,bshd->bthd", scores, v) / norm[..., None]
+        h = h.reshape(B, S, d_in)
+        new_state = None
+    else:
+        # chunkwise-parallel form: O(S·W) memory, carries (C, n, m) across
+        # chunks — the same state the decode recurrence uses, so prefill
+        # hands decode a ready state for free
+        W = MLSTM_CHUNK if S % MLSTM_CHUNK == 0 else S
+        nC = S // W
+        if state is not None:
+            C0, n0, m0 = (s.astype(jnp.float32) for s in state)
+        else:
+            C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+            n0 = jnp.zeros((B, H, hd), jnp.float32)
+            m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+        # constrain=False: in-chunk layout constraints were only needed by
+        # the (refuted) weight-replication serve experiment; under TP/FSDP
+        # they fragment XLA fusion and inflate train memory (§Perf 4.1)
+        chunk = _make_chunk_fn(cfg, W, constrain=False)
+        xs = {
+            "q": q.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "k": k.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "v": v.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "li": log_i.reshape(B, nC, W, H).swapaxes(0, 1),
+            "lf": log_f.reshape(B, nC, W, H).swapaxes(0, 1),
+        }
+        (C1, n1, m1), hs = jax.lax.scan(jax.checkpoint(chunk), (C0, n0, m0), xs)
+        h = hs.swapaxes(0, 1).reshape(B, S, d_in)
+        new_state = (C1, n1, m1) if state is not None else None
+
+    h = rms_norm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    return y, new_state
+
+
+def _make_chunk_fn(cfg: ModelConfig, W: int, constrain: bool = True):
+    """One mLSTM chunk step: intra-chunk quadratic D-form + inter via the
+    carried (C,n,m) state + state update.  lax.scan body (remat'd).
+
+    ``constrain=False`` under the seq-parallel vmap: per-element constraints
+    would pin B but leave the mapped segment dim free (XLA then replicates
+    it); the seq-par caller pins layouts outside the vmap instead."""
+
+    def _c(t):
+        return constrain_batch(t, cfg) if constrain else t
+
+    def chunk(carry, blk):
+        Cp, np_, mp = (_c(c) for c in carry)
+        qc, kc, vc = (_c(blk[n]) for n in "qkv")
+        li, lf = blk["li"], blk["lf"]                      # (B,W,H)
+        F = jnp.cumsum(lf, axis=1)
+        logD = (F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :])
+        tri = jnp.tril(jnp.ones((W, W), bool))
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        m_intra = jnp.max(logD, axis=2)                    # (B,t,H)
+        b_inter = F + mp[:, None, :]                       # (B,t,H)
+        m_t = jnp.maximum(m_intra, b_inter)
+        Dm = jnp.exp(logD - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * Dm
+        num = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        den = jnp.sum(scores, axis=2)                      # (B,t,H)
+        w_int = jnp.exp(b_inter - m_t)                     # (B,t,H)
+        num = num + w_int[..., None] * jnp.einsum("bthi,bhij->bthj", qc, Cp)
+        den = den + w_int * jnp.einsum("bthi,bhi->bth", qc, np_)
+        norm = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        hc = _c(num / norm[..., None])
+        Cn, nn, m_next, _Ft = _chunk_state_update(Cp, np_, mp, kc, vc, li, lf)
+        return (_c(Cn), _c(nn), _c(m_next)), hc
+
+    return chunk
+
+
+# ---------------------------------------------------------------------
+# sequence-parallel mLSTM (beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------
+
+def _constrain_seq(x: jax.Array, cfg: ModelConfig, dim: int = 0) -> jax.Array:
+    """Pin a (G, B, ...) seq-parallel tensor: segment dim -> act_seq_axis
+    AND batch dim -> act_batch_axes (leaving either free lets XLA replicate
+    it — 126 GiB of all-gather in the first attempt)."""
+    if not cfg.act_seq_axis:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec: list = [None] * x.ndim
+    spec[dim] = cfg.act_seq_axis
+    if cfg.act_batch_axes and x.ndim > dim + 1:
+        spec[dim + 1] = (cfg.act_batch_axes if len(cfg.act_batch_axes) > 1
+                         else cfg.act_batch_axes[0])
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _chunk_state_update(Cp, np_, mp, kc, vc, li, lf):
+    """One chunk's (C, n, m) update (shared by sequential & seq-par paths).
+    kc/vc: (B,W,H,hd); li/lf: (B,W,H).  Returns (Cn, nn, m_next, Ftot)."""
+    F = jnp.cumsum(lf, axis=1)
+    Ft = F[:, -1]                                          # (B,H)
+    m_next = jnp.maximum(mp + Ft, jnp.max(Ft[:, None] - F + li, axis=1))
+    wk = jnp.exp(Ft[:, None] - F + li - m_next[:, None])   # (B,W,H)
+    carry = jnp.exp(mp + Ft - m_next)
+    Cn = (carry[..., None, None] * Cp
+          + jnp.einsum("bsh,bshi,bshj->bhij", wk, kc, vc))
+    nn = carry[..., None] * np_ + jnp.einsum("bsh,bshi->bhi", wk, kc)
+    return Cn, nn, m_next, Ft
+
+
+def _compose_states(sa, sb):
+    """Associative composition: state after running segment b from state a.
+    Each state = (C, n, m, Ftot) with the exp(-m) scaling convention."""
+    Ca, na, ma, Fa = sa
+    Cb, nb, mb, Fb = sb
+    m = jnp.maximum(ma + Fb, mb)
+    wa = jnp.exp(ma + Fb - m)
+    wb = jnp.exp(mb - m)
+    return (wa[..., None, None] * Ca + wb[..., None, None] * Cb,
+            wa[..., None] * na + wb[..., None] * nb, m, Fa + Fb)
+
+
+def _mlstm_seqpar(cfg: ModelConfig, q, k, v, log_i, log_f,
+                  state: Optional[Tuple[jax.Array, ...]]):
+    """Two-pass sequence-parallel chunked mLSTM.
+
+    Pass 1 (parallel over segments): each segment's isolated end-state.
+    Prefix: exclusive associative scan composing segment states (G steps of
+    cheap (B,H,hd,hd) math — the ONLY cross-segment dependency).
+    Pass 2 (parallel over segments): the normal chunk scan seeded with the
+    segment's prefix state.
+
+    q/k/v: (B,S,H,hd) (k pre-scaled); log_i/log_f: (B,S,H).
+    Returns (h (B,S,d_in), total_state (C,n,m)).
+    """
+    B, S, H, hd = q.shape
+    G = cfg.seq_segments
+    W = MLSTM_CHUNK
+    S_loc = S // G
+    nC = S_loc // W
+
+    def to_seg(x):
+        # (B,S,...) -> (G,B,S_loc,...), segment dim pinned to the model axis
+        x = x.reshape(B, G, S_loc, *x.shape[2:]).swapaxes(0, 1)
+        return _constrain_seq(x, cfg, 0)
+
+    qg, kg, vg = to_seg(q), to_seg(k), to_seg(v)
+    lig, lfg = to_seg(log_i), to_seg(log_f)
+
+    zeroC = jnp.zeros((B, H, hd, hd), jnp.float32)
+    zeron = jnp.zeros((B, H, hd), jnp.float32)
+    zerom = jnp.full((B, H), -1e30, jnp.float32)
+
+    # ---- pass 1: isolated per-segment states --------------------------------
+    def seg_state(k_s, v_s, li_s, lf_s):
+        def upd(carry, blk):
+            C, n, m, Fa = carry
+            Cn, nn, mn, Ft = _chunk_state_update(
+                C, n, m, blk["k"], blk["v"], blk["li"], blk["lf"])
+            return (Cn, nn, mn, Fa + Ft), None
+
+        xs = {
+            "k": k_s.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "v": v_s.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "li": li_s.reshape(B, nC, W, H).swapaxes(0, 1),
+            "lf": lf_s.reshape(B, nC, W, H).swapaxes(0, 1),
+        }
+        init = (zeroC, zeron, zerom, jnp.zeros((B, H), jnp.float32))
+        (C, n, m, Fa), _ = jax.lax.scan(jax.checkpoint(upd), init, xs)
+        return C, n, m, Fa
+
+    seg_states = jax.vmap(seg_state)(kg, vg, lig, lfg)   # leaves (G,B,H,...)
+    seg_states = tuple(_constrain_seq(s, cfg, 0) for s in seg_states)
+
+    # ---- exclusive prefix over segments --------------------------------------
+    inclusive = jax.lax.associative_scan(_compose_states, seg_states, axis=0)
+    identity = (zeroC, zeron, zerom, jnp.zeros((B, H), jnp.float32))
+    if state is not None:
+        s0 = (state[0].astype(jnp.float32), state[1].astype(jnp.float32),
+              state[2].astype(jnp.float32), jnp.zeros((B, H), jnp.float32))
+    else:
+        s0 = identity
+    # exclusive shift (identity in front), then compose the incoming state
+    shifted = tuple(
+        jnp.concatenate([z[None], inc[:-1]], axis=0)
+        for inc, z in zip(inclusive, identity))
+    prefixes = jax.vmap(_compose_states, in_axes=(None, 0))(s0, shifted)
+    prefixes = tuple(_constrain_seq(p_, cfg, 0) for p_ in prefixes)
+    total = _compose_states(
+        s0, tuple(x[-1] for x in inclusive))
+
+    # ---- pass 2: per-segment chunk scans from the prefix ---------------------
+    def seg_run(q_s, k_s, v_s, li_s, lf_s, pC, pn, pm):
+        chunk = _make_chunk_fn(cfg, W, constrain=False)
+        xs = {
+            "q": q_s.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "k": k_s.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "v": v_s.reshape(B, nC, W, H, hd).swapaxes(0, 1),
+            "li": li_s.reshape(B, nC, W, H).swapaxes(0, 1),
+            "lf": lf_s.reshape(B, nC, W, H).swapaxes(0, 1),
+        }
+        _, hs = jax.lax.scan(jax.checkpoint(chunk), (pC, pn, pm), xs)
+        return hs.swapaxes(0, 1).reshape(B, S_loc, H * hd)
+
+    hg = jax.vmap(seg_run)(qg, kg, vg, lig, lfg,
+                           prefixes[0], prefixes[1], prefixes[2])
+    hg = _constrain_seq(hg, cfg, 0)                       # (G,B,S_loc,d_in)
+    h = hg.swapaxes(0, 1).reshape(B, S, H * hd)
+    return h, (total[0], total[1], total[2])
+
+
+# =====================================================================
+# sLSTM (xLSTM): scalar memory, sequential recurrence
+# =====================================================================
+
+def init_slstm(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 10)
+    p: Params = {"norm": jnp.ones((D,), dtype)}
+    for i, g in enumerate(["z", "i", "f", "o"]):
+        p[f"w_{g}"] = dense_init(ks[i], (D, D), dtype)
+        p[f"r_{g}"] = dense_init(ks[4 + i], (H, hd, hd), dtype, scale=0.02)
+        p[f"b_{g}"] = (jnp.full((D,), 3.0, jnp.float32) if g == "f"
+                       else jnp.zeros((D,), jnp.float32))
+    ff = int(D * 8 / 3) // 16 * 16
+    p["ff_gate"] = dense_init(ks[8], (D, ff), dtype)
+    p["ff_down"] = dense_init(ks[9], (ff // 2, D), dtype)
+    return p
+
+
+def run_slstm(p: Params, cfg: ModelConfig, x: jax.Array,
+              state: Optional[Tuple[jax.Array, ...]] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, ...]]]:
+    """x: (B,S,D). state = (c,n,h,m) each (B,H,hd)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+
+    def rec(h_prev: jax.Array, g: str) -> jax.Array:
+        return jnp.einsum("bhi,hij->bhj", h_prev, p[f"r_{g}"].astype(jnp.float32))
+
+    wz = (x @ p["w_z"] + p["b_z"].astype(x.dtype)).astype(jnp.float32)
+    wi = (x @ p["w_i"] + p["b_i"].astype(x.dtype)).astype(jnp.float32)
+    wf = (x @ p["w_f"] + p["b_f"].astype(x.dtype)).astype(jnp.float32)
+    wo = (x @ p["w_o"] + p["b_o"].astype(x.dtype)).astype(jnp.float32)
+    wz, wi, wf, wo = (w.reshape(B, S, H, hd) for w in (wz, wi, wf, wo))
+
+    if state is None:
+        zero = jnp.zeros((B, H, hd), jnp.float32)
+        c0, n0, h0, m0 = zero, zero + 1e-6, zero, zero
+    else:
+        c0, n0, h0, m0 = (s.astype(jnp.float32) for s in state)
+
+    def step(carry, t):
+        c, n, h, m = carry
+        z = jnp.tanh(wz[:, t] + rec(h, "z"))
+        log_i = wi[:, t] + rec(h, "i")
+        log_f = jax.nn.log_sigmoid(wf[:, t] + rec(h, "f"))
+        o = jax.nn.sigmoid(wo[:, t] + rec(h, "o"))
+        m1 = jnp.maximum(log_f + m, log_i)
+        i1 = jnp.exp(log_i - m1)
+        f1 = jnp.exp(log_f + m - m1)
+        c1 = f1 * c + i1 * z
+        n1 = f1 * n + i1
+        h1 = o * c1 / jnp.maximum(n1, 1e-6)
+        return (c1, n1, h1, m1), h1
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), jnp.arange(S))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    # gated feed-forward (GeGLU, factor 4/3)
+    ffg = y @ p["ff_gate"]
+    a, b = jnp.split(ffg, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ p["ff_down"]
+    new_state = (c, n, h, m) if state is not None else None
+    return y, new_state

@@ -1,0 +1,7 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedules import constant_schedule, cosine_schedule, wsd_schedule
+from .clip import global_norm, clip_by_global_norm
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "constant_schedule", "cosine_schedule", "wsd_schedule",
+           "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,41 @@
+"""LR schedules.  WSD (warmup-stable-decay) is MiniCPM's schedule
+[arXiv:2404.06395] — included because minicpm-2b is an assigned arch."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def wsd_schedule(lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01) -> Callable:
+    """Warmup -> Stable (constant) -> Decay (exponential-ish linear-log).
+
+    MiniCPM decays to ``final_frac``·lr over the last ``decay`` steps.
+    """
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        in_decay = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * jnp.exp(jnp.log(final_frac) * in_decay)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out
+    return fn

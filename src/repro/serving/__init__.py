@@ -1,0 +1,5 @@
+from .engine import GenerationEngine
+from .sharded import ShardClient, ShardServer, plan_shards, deploy_sharded
+
+__all__ = ["GenerationEngine", "ShardClient", "ShardServer", "plan_shards",
+           "deploy_sharded"]

@@ -1,0 +1,51 @@
+"""Single-process generation engine: prefill + greedy/temperature decode.
+
+Used directly by examples and wrapped by the sharded serving layer."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelOps, ops_for
+from repro.models.config import ModelConfig
+
+
+class GenerationEngine:
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 max_len: int = 4096, dtype: Any = jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.ops: ModelOps = ops_for(cfg)
+        self.max_len = max_len
+        self.dtype = dtype
+        self._prefill = jax.jit(
+            lambda p, b, c: self.ops.prefill(p, cfg, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c: self.ops.decode_step(p, cfg, t, c))
+
+    def generate(self, batch: Dict[str, jax.Array], n_tokens: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 ) -> Tuple[np.ndarray, Dict[str, float]]:
+        B = batch["tokens"].shape[0]
+        extra = self.cfg.n_patches if self.cfg.arch == "vlm" else 0
+        cache = self.ops.init_cache(
+            self.cfg, B, batch["tokens"].shape[1] + extra + n_tokens,
+            self.dtype)
+        logits, cache = self._prefill(self.params, batch, cache)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        for i in range(n_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits.astype(jnp.float32) / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            tok = tok.astype(jnp.int32)
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache)
+        return np.stack(out, axis=1), {"generated": n_tokens * B}

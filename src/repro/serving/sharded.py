@@ -1,0 +1,325 @@
+"""Sharded inference over the Lattica mesh (paper Fig. 1, Scenario 4).
+
+A model is split into pipeline shards; each shard runs on a peer (possibly
+behind a NAT) and serves the ``infer.<fleet>`` RPC.  Shard servers announce
+themselves as DHT providers of ``shard/<fleet>/<i>``; the shard-aware client
+stub resolves providers per hop, streams activations through the pipeline,
+and **transparently fails over** to replica shards via a fresh DHT lookup
+when a provider dies — the availability story of the paper's §2 RPC layer.
+
+This module is the mesh-level (cross-NAT) serving path at example scale;
+datacenter-scale tensor-parallel serving is ``repro.launch.serve``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+from typing import Any, Dict, Generator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dht import PeerInfo
+from repro.core.node import LatticaNode
+from repro.core.rpc import RpcContext, RpcError, call_unary
+from repro.core.simnet import DialError
+from repro.models import decoder
+from repro.models.common import rms_norm
+from repro.models.config import ModelConfig
+
+#: assumed accelerator throughput per serving peer, for simulated latency
+PEER_FLOPS = 2.0e11
+
+_session_seq = itertools.count(1)
+
+
+def shard_key(fleet: str, idx: int) -> bytes:
+    return hashlib.sha256(f"shard/{fleet}/{idx}".encode()).digest()
+
+
+def plan_shards(cfg: ModelConfig, n_shards: int) -> List[Tuple[int, int]]:
+    """Split layers into contiguous ranges, as even as possible."""
+    L = cfg.n_layers
+    base, rem = divmod(L, n_shards)
+    plan = []
+    lo = 0
+    for i in range(n_shards):
+        hi = lo + base + (1 if i < rem else 0)
+        plan.append((lo, hi))
+        lo = hi
+    return plan
+
+
+def split_params(cfg: ModelConfig, params: Any,
+                 plan: List[Tuple[int, int]]) -> List[Dict[str, Any]]:
+    """Per-shard param subsets (first gets embed, last gets norm+head)."""
+    shards = []
+    for i, (lo, hi) in enumerate(plan):
+        sub: Dict[str, Any] = {}
+        if cfg.arch == "ssm":
+            sub["blocks"] = params["blocks"][lo:hi]
+        else:
+            sub["blocks"] = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        if i == 0:
+            sub["embed"] = params["embed"]
+        if i == len(plan) - 1:
+            sub["final_norm"] = params["final_norm"]
+            if "lm_head" in params:
+                sub["lm_head"] = params["lm_head"]
+            elif cfg.tie_embeddings:
+                sub["embed_out"] = params["embed"]
+        shards.append(sub)
+    return shards
+
+
+class ShardModule:
+    """Applies one shard's layer range, with per-session decode caches."""
+
+    def __init__(self, cfg: ModelConfig, params: Dict[str, Any],
+                 layer_range: Tuple[int, int], is_first: bool, is_last: bool):
+        self.cfg = cfg
+        self.params = params
+        self.lo, self.hi = layer_range
+        self.is_first = is_first
+        self.is_last = is_last
+
+    @property
+    def n_layers(self) -> int:
+        return self.hi - self.lo
+
+    def _layer_params(self, j: int) -> Any:
+        if self.cfg.arch == "ssm":
+            return self.params["blocks"][j]
+        return jax.tree.map(lambda a: a[j], self.params["blocks"])
+
+    def embed(self, tokens: jax.Array) -> jax.Array:
+        return jnp.take(self.params["embed"], tokens, axis=0)
+
+    def head(self, x: jax.Array) -> jax.Array:
+        x = rms_norm(x, self.params["final_norm"], self.cfg.norm_eps)
+        w = self.params.get("lm_head")
+        if w is None:
+            w = self.params["embed_out"].T
+        return x @ w
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        full = decoder.init_cache(self.cfg, batch, max_len)
+        if self.cfg.arch == "ssm":
+            layers = full["layers"][self.lo:self.hi]
+        else:
+            layers = jax.tree.map(lambda a: a[self.lo:self.hi], full["layers"])
+        return {"len": full["len"], "layers": layers}
+
+    def apply(self, x: jax.Array, positions: jax.Array,
+              cache: Optional[Dict[str, Any]]) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+        cache_len = cache["len"] if cache is not None else None
+        new_layers: List[Any] = []
+        for j in range(self.n_layers):
+            lp = self._layer_params(j)
+            if cache is not None:
+                if self.cfg.arch == "ssm":
+                    lc = cache["layers"][j]
+                else:
+                    lc = jax.tree.map(lambda a: a[j], cache["layers"])
+            else:
+                lc = None
+            x, nc, _ = decoder.run_block(
+                self.cfg, lp, x, positions, lc, cache_len,
+                layer_idx=self.lo + j)
+            new_layers.append(nc)
+        new_cache = None
+        if cache is not None:
+            if self.cfg.arch == "ssm":
+                stacked = new_layers
+            else:
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *new_layers)
+            new_cache = {"len": cache_len + x.shape[1], "layers": stacked}
+        return x, new_cache
+
+    def flops(self, tokens: int) -> float:
+        per_layer = 12 * self.cfg.d_model ** 2
+        return 2.0 * tokens * per_layer * self.n_layers
+
+
+class ShardServer:
+    def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
+                 shard_idx: int, module: ShardModule):
+        self.node = node
+        self.cfg = cfg
+        self.fleet = fleet
+        self.shard_idx = shard_idx
+        self.module = module
+        self.sessions: Dict[Any, Dict[str, Any]] = {}
+        self.alive = True
+        self.stats = {"prefill": 0, "decode": 0, "score": 0}
+        node.router.register_unary(f"infer.{fleet}.{shard_idx}", self._handler)
+
+    def announce(self) -> Generator:
+        yield from self.node.dht.provide(shard_key(self.fleet, self.shard_idx))
+        return None
+
+    def stop(self) -> None:
+        """Simulate a crash: all subsequent calls fail."""
+        self.alive = False
+
+    def _handler(self, payload: Any, ctx: RpcContext) -> Generator:
+        if not self.alive:
+            raise RpcError(f"shard {self.shard_idx} is down")
+        op = payload["op"]
+        m = self.module
+        if op == "prefill":
+            self.stats["prefill"] += 1
+            x = jnp.asarray(payload["x"])
+            if m.is_first and x.dtype == jnp.int32:
+                x = m.embed(x)
+            B, S = x.shape[0], x.shape[1]
+            cache = m.init_cache(B, payload["max_len"])
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            if self.cfg.mrope:
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+            out, cache = m.apply(x, positions, cache)
+            self.sessions[payload["session"]] = cache
+            if m.is_last:
+                out = m.head(out[:, -1:])[:, 0]
+            else:
+                out = out
+            yield ctx.cpu(m.flops(B * S) / PEER_FLOPS)
+            out_np = np.asarray(out)
+            return {"x": out_np}, out_np.nbytes
+        if op == "decode":
+            self.stats["decode"] += 1
+            cache = self.sessions[payload["session"]]
+            x = jnp.asarray(payload["x"])
+            if m.is_first and x.dtype == jnp.int32:
+                x = m.embed(x[:, None])
+            B = x.shape[0]
+            pos = jnp.broadcast_to(
+                cache["len"][None, None], (B, 1)).astype(jnp.int32)
+            if self.cfg.mrope:
+                pos = jnp.broadcast_to(pos[None], (3, B, 1))
+            out, cache = m.apply(x, pos, cache)
+            self.sessions[payload["session"]] = cache
+            if m.is_last:
+                out = m.head(out)[:, 0]
+            yield ctx.cpu(m.flops(B) / PEER_FLOPS)
+            out_np = np.asarray(out)
+            return {"x": out_np}, out_np.nbytes
+        if op == "score":
+            self.stats["score"] += 1
+            x = jnp.asarray(payload["x"])
+            if m.is_first and x.dtype == jnp.int32:
+                x = m.embed(x)
+            B, S = x.shape[0], x.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            if self.cfg.mrope:
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+            out, _ = m.apply(x, positions, None)
+            if m.is_last:
+                out = m.head(out)
+            yield ctx.cpu(m.flops(B * S) / PEER_FLOPS)
+            out_np = np.asarray(out)
+            return {"x": out_np}, out_np.nbytes
+        raise RpcError(f"unknown op {op}")
+
+
+class ShardClient:
+    """Shard-aware stub: DHT provider resolution + transparent failover."""
+
+    def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
+                 n_shards: int):
+        self.node = node
+        self.cfg = cfg
+        self.fleet = fleet
+        self.n_shards = n_shards
+        self._providers: Dict[int, List[PeerInfo]] = {}
+        self.stats = {"failovers": 0, "calls": 0}
+
+    def _resolve(self, idx: int, refresh: bool = False) -> Generator:
+        if refresh or idx not in self._providers or not self._providers[idx]:
+            provs = yield from self.node.dht.find_providers(
+                shard_key(self.fleet, idx))
+            self._providers[idx] = [
+                p for p in provs if p.peer_id != self.node.peer_id]
+        return self._providers[idx]
+
+    def _call_shard(self, idx: int, payload: Dict[str, Any],
+                    size: int) -> Generator:
+        provs = yield from self._resolve(idx)
+        tried = 0
+        last: Optional[Exception] = None
+        for round_ in range(2):
+            for info in list(provs):
+                tried += 1
+                self.stats["calls"] += 1
+                try:
+                    conn = yield from self.node.connect_info(info)
+                    resp = yield from call_unary(
+                        self.node.host, conn, f"infer.{self.fleet}.{idx}",
+                        payload, size=size, timeout=120.0)
+                    return resp
+                except (RpcError, DialError) as e:
+                    last = e
+                    self.stats["failovers"] += 1
+                    if info in provs:
+                        provs.remove(info)
+            provs = yield from self._resolve(idx, refresh=True)
+        raise RpcError(f"all providers for shard {idx} failed: {last}")
+
+    # -- pipeline ops --------------------------------------------------------
+    def prefill(self, tokens: np.ndarray, max_len: int) -> Generator:
+        session = (self.node.host.name, next(_session_seq))
+        x: Any = tokens
+        for i in range(self.n_shards):
+            payload = {"op": "prefill", "session": session, "x": x,
+                       "max_len": max_len}
+            resp = yield from self._call_shard(i, payload, size=x.nbytes)
+            x = resp["x"]
+        return session, x                        # x = last-position logits
+
+    def decode_step(self, session: Any, token: np.ndarray) -> Generator:
+        x: Any = token
+        for i in range(self.n_shards):
+            payload = {"op": "decode", "session": session, "x": x}
+            resp = yield from self._call_shard(i, payload, size=x.nbytes)
+            x = resp["x"]
+        return x
+
+    def score(self, tokens: np.ndarray) -> Generator:
+        x: Any = tokens
+        for i in range(self.n_shards):
+            payload = {"op": "score", "x": x}
+            resp = yield from self._call_shard(i, payload, size=x.nbytes)
+            x = resp["x"]
+        return x
+
+    def generate(self, tokens: np.ndarray, n_tokens: int) -> Generator:
+        session, logits = yield from self.prefill(
+            tokens, tokens.shape[1] + n_tokens + 1)
+        out = []
+        for _ in range(n_tokens):
+            tok = np.argmax(logits, axis=-1).astype(np.int32)
+            out.append(tok)
+            logits = yield from self.decode_step(session, tok)
+        return np.stack(out, axis=1)
+
+
+def deploy_sharded(nodes: List[LatticaNode], cfg: ModelConfig, params: Any,
+                   fleet: str, replicas: int = 1) -> List[ShardServer]:
+    """Place ``n_shards = len(nodes) // replicas`` pipeline shards, each
+    replicated ``replicas`` times across the given nodes."""
+    n_shards = len(nodes) // replicas
+    plan = plan_shards(cfg, n_shards)
+    parts = split_params(cfg, params, plan)
+    servers = []
+    for r in range(replicas):
+        for i, (lo, hi) in enumerate(plan):
+            node = nodes[r * n_shards + i]
+            module = ShardModule(cfg, parts[i], (lo, hi),
+                                 is_first=(i == 0), is_last=(i == n_shards - 1))
+            servers.append(ShardServer(node, cfg, fleet, i, module))
+    return servers

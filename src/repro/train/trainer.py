@@ -1,0 +1,166 @@
+"""Training loops.
+
+``Trainer`` — plain local training (used by examples/tests).
+
+``LatticaSyncTrainer`` — the paper's RL-pipeline / collaborative-training
+scenario: a *publisher* cluster trains and periodically pushes model
+versions into the mesh (content-addressed chunks + CRDT registry update);
+*subscriber* clusters watch the pubsub topic / CRDT register and swarm-fetch
+new versions.  No coordinator exists anywhere: discovery is the DHT,
+consistency is the CRDT store, and transport survives NATs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Generator, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
+                                           fetch_checkpoint,
+                                           publish_checkpoint)
+from repro.core.cid import CID
+from repro.core.node import LatticaNode
+from repro.models.config import ModelConfig
+
+from .step import TrainState, make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, state: TrainState,
+                 schedule: Callable, data: Iterator[Dict[str, np.ndarray]],
+                 jit: bool = True):
+        self.cfg = cfg
+        self.state = state
+        self.data = data
+        step = make_train_step(cfg, schedule)
+        self.step_fn = jax.jit(step) if jit else step
+        self.history: List[Dict[str, float]] = []
+
+    def run(self, n_steps: int, log_every: int = 10,
+            log: Optional[Callable[[str], None]] = print) -> List[Dict[str, float]]:
+        for i in range(n_steps):
+            batch = next(self.data)
+            self.state, metrics = self.step_fn(self.state, batch)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = i
+            self.history.append(rec)
+            if log is not None and (i % log_every == 0 or i == n_steps - 1):
+                log(f"step {i:5d}  loss={rec['loss']:.4f}  "
+                    f"lr={rec['lr']:.2e}  gnorm={rec['grad_norm']:.2f}")
+        return self.history
+
+
+class LatticaSyncTrainer(Trainer):
+    """Trainer that publishes model versions into a Lattica mesh.
+
+    The simulation clock advances only inside mesh operations; jax compute
+    is charged to the node's CPU via an estimated step time.
+    """
+
+    def __init__(self, cfg: ModelConfig, state: TrainState,
+                 schedule: Callable, data: Iterator[Dict[str, np.ndarray]],
+                 node: LatticaNode, fleet: str,
+                 publish_every: int = 50, step_seconds: float = 0.5):
+        super().__init__(cfg, state, schedule, data)
+        self.node = node
+        self.fleet = fleet
+        self.publish_every = publish_every
+        self.step_seconds = step_seconds
+        self.published: List[CID] = []
+
+    def run_mesh(self, n_steps: int,
+                 log: Optional[Callable[[str], None]] = print) -> Generator:
+        """A sim-process: train; every ``publish_every`` steps, publish."""
+        for i in range(n_steps):
+            batch = next(self.data)
+            self.state, metrics = self.step_fn(self.state, batch)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = i
+            self.history.append(rec)
+            yield self.step_seconds                    # wall-clock of the step
+            if (i + 1) % self.publish_every == 0 or i == n_steps - 1:
+                root = yield from publish_checkpoint(
+                    self.node, self.state.params, i + 1, self.fleet)
+                self.published.append(root)
+                if log is not None:
+                    log(f"[{self.node.host.name}] published step {i+1} "
+                        f"loss={rec['loss']:.4f} root={root}")
+        return self.published
+
+
+class ModelSubscriber:
+    """Inference-cluster side: follow a fleet's model versions."""
+
+    def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
+                 like: Any = None):
+        self.node = node
+        self.cfg = cfg
+        self.fleet = fleet
+        self.like = like
+        self.registry = CheckpointRegistry(node, fleet)
+        self.current_step = -1
+        self.params: Any = None
+        self.fetch_log: List[Dict[str, float]] = []
+        self._announced: List[Any] = []
+        node.pubsub.subscribe(self.registry.topic, self._on_announce)
+
+    def _on_announce(self, topic: str, data: Any, frm: Any) -> None:
+        self._announced.append(data)
+
+    def _best_known(self) -> Optional[Any]:
+        """Newest version from the CRDT register AND live announcements."""
+        import pickle
+
+        best = self.registry.latest()
+        for d in self._announced:
+            if not (isinstance(d, tuple) and d and d[0] == "artifact"):
+                continue
+            try:
+                step = pickle.loads(d[3])["step"]
+            except Exception:        # noqa: BLE001 — malformed announcement
+                continue
+            if best is None or step > best[0]:
+                best = (step, d[1])
+        self._announced.clear()
+        return best
+
+    def poll_and_fetch(self) -> Generator:
+        """Fetch the newest known version (CRDT register or pubsub
+        announcement) if newer than ours.  Returns the step, or None."""
+        latest = self._best_known()
+        if latest is None:
+            return None
+        step, root = latest
+        if step <= self.current_step:
+            return None
+        t0 = self.node.sim.now
+        params = yield from fetch_checkpoint(self.node, root, self.like)
+        self.fetch_log.append({
+            "step": step, "t_fetch": self.node.sim.now - t0,
+            "bytes": self.node.bitswap.stats["bytes_fetched"]})
+        self.current_step = step
+        self.params = params
+        # note the version in our ORSet replica (never the LWW pointer —
+        # see CheckpointRegistry.record_fetched)
+        self.registry.record_fetched(step, root)
+        return step
+
+    def follow(self, interval: float = 5.0, until_step: int = 10**9) -> Generator:
+        """Background process: sync CRDT + fetch new versions as they appear."""
+        while self.current_step < until_step:
+            yield interval
+            # anti-entropy against a random peer keeps the registry fresh
+            if self.node.peers:
+                pid = self.node.sim.rng.choice(
+                    sorted(self.node.peers, key=lambda p: p.digest))
+                try:
+                    yield from self.node.sync_crdt_with(self.node.peers[pid])
+                except Exception:       # noqa: BLE001 — best-effort gossip
+                    pass
+            try:
+                yield from self.poll_and_fetch()
+            except Exception:           # noqa: BLE001 — a partition or a
+                continue                # dead provider must not kill the loop
+        return self.current_step

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in
+# a separate process); keep any inherited flag out of the test env
+os.environ.pop("XLA_FLAGS", None)
+
+_root = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _root)                       # for the benchmarks package
+sys.path.insert(0, os.path.join(_root, "src"))

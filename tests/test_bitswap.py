@@ -1,0 +1,99 @@
+"""Bitswap: swarm fetch, verification, provider failover, re-providing."""
+
+import numpy as np
+import pytest
+
+from repro.core.bitswap import FetchError
+from repro.core.cid import CID, build_dag
+from repro.core.fleet import make_fleet
+
+
+def _blob(n: int, seed: int) -> bytes:
+    """Incompressible bytes: every 256 KiB chunk gets a distinct CID."""
+    return np.random.default_rng(seed).integers(
+        0, 256, n, dtype=np.uint8).tobytes()
+
+
+def test_fetch_from_single_seed():
+    fleet = make_fleet(8, seed=2)
+    sim = fleet.sim
+    seed_node, leecher = fleet.peers[0], fleet.peers[-1]
+    data = _blob(512 * 1024, 2)              # 512 KiB -> 2 distinct chunks
+
+    def publish():
+        root = yield from seed_node.publish_artifact(data)
+        return root
+
+    root = sim.run_process(publish(), until=sim.now + 300)
+
+    def fetch():
+        got = yield from leecher.fetch_artifact(root)
+        return got
+
+    assert sim.run_process(fetch(), until=sim.now + 600) == data
+    # leecher re-provides after fetch
+    assert leecher.blockstore.has(root)
+
+
+def test_swarm_fetch_uses_multiple_providers():
+    fleet = make_fleet(10, seed=4, same_region="us")
+    sim = fleet.sim
+    data = _blob(1 << 20, 4)                 # 1 MiB -> 4 distinct chunks
+    seeds = fleet.peers[:3]
+
+    def seed_all():
+        dag = build_dag(data)
+        for s in seeds:
+            yield from s.bitswap.publish_dag(dict(dag.blocks), dag.root)
+        return dag.root
+
+    root = sim.run_process(seed_all(), until=sim.now + 600)
+    leecher = fleet.peers[-1]
+
+    def fetch():
+        got = yield from leecher.fetch_artifact(root, reprovide=False)
+        return got
+
+    assert sim.run_process(fetch(), until=sim.now + 600) == data
+    # at least two seeds actually served blocks
+    serving = [s for s in seeds if s.bitswap.stats["blocks_served"] > 0]
+    assert len(serving) >= 2
+
+
+def test_failover_when_provider_dies_midfetch():
+    fleet = make_fleet(8, seed=9, same_region="us")
+    sim = fleet.sim
+    data = _blob(2 << 20, 9)                 # 2 MiB -> 8 distinct chunks
+    good, flaky = fleet.peers[0], fleet.peers[1]
+
+    def seed_all():
+        dag = build_dag(data)
+        yield from good.bitswap.publish_dag(dict(dag.blocks), dag.root)
+        yield from flaky.bitswap.publish_dag(dict(dag.blocks), dag.root)
+        return dag.root
+
+    root = sim.run_process(seed_all(), until=sim.now + 600)
+    # flaky provider drops all its blocks after announcing
+    for cid in list(flaky.blockstore.cids()):
+        flaky.blockstore.delete(cid)
+
+    leecher = fleet.peers[-1]
+
+    def fetch():
+        got = yield from leecher.fetch_artifact(root, reprovide=False)
+        return got
+
+    assert sim.run_process(fetch(), until=sim.now + 900) == data
+    assert leecher.bitswap.stats["retries"] >= 1
+
+
+def test_no_providers_raises():
+    fleet = make_fleet(6, seed=6)
+    sim = fleet.sim
+    bogus = CID.for_data(b"never published")
+
+    def fetch():
+        yield from fleet.peers[0].fetch_artifact(bogus)
+
+    with pytest.raises(FetchError):
+        sim.run_process(fetch(), until=sim.now + 300)

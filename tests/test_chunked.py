@@ -1,0 +1,136 @@
+"""Memory-efficient jnp formulations vs naive oracles (values AND grads)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import attention_ref
+from repro.models.chunked import flash_attention_jnp
+from repro.models.config import ModelConfig
+from repro.models.ssm import run_mamba, run_mlstm, init_mamba, init_mlstm
+
+
+def _bshd(x):
+    return jnp.swapaxes(x, 1, 2)
+
+
+@pytest.mark.parametrize("window", [0, 256])
+def test_flash_jnp_forward(window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, hd = 2, 2048, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = flash_attention_jnp(q, k, v, True, window)
+    ref = _bshd(attention_ref(_bshd(q), _bshd(k), _bshd(v),
+                              causal=True, window=window))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_jnp_gradients_match_naive():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, hd = 1, 1024, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.square(flash_attention_jnp(q, k, v, True, 0)))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.square(_bshd(
+            attention_ref(_bshd(q), _bshd(k), _bshd(v), causal=True))))
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-4, rtol=3e-4)
+
+
+def _mk_cfg(**kw):
+    base = dict(name="t", arch="hybrid", n_layers=1, d_model=64, n_heads=2,
+                n_kv_heads=2, d_ff=128, vocab=128, ssm_state=8, d_inner=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_mamba_chunked_equals_unchunked():
+    """S=512 (4 chunks of 128) must equal a single-chunk run."""
+    cfg = _mk_cfg()
+    key = jax.random.PRNGKey(2)
+    p = init_mamba(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (2, 512, cfg.d_model))
+    y_chunked, _ = run_mamba(p, cfg, x)                     # W=128, 4 chunks
+    # reference: build via decode-style stepping through prefill chunks
+    y_parts = []
+    state = (jnp.zeros((2, cfg.d_in, cfg.ssm_state)),
+             jnp.zeros((2, 3, cfg.d_in)))
+    for i in range(0, 512, 128):
+        yc, state = run_mamba(p, cfg, x[:, i:i + 128], state)
+        y_parts.append(yc)
+    y_ref = jnp.concatenate(y_parts, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_mlstm_chunked_equals_quadratic():
+    cfg = _mk_cfg(arch="ssm", d_model=64, n_heads=2)
+    key = jax.random.PRNGKey(3)
+    p = init_mlstm(cfg, key, jnp.float32)
+    x_small = jax.random.normal(key, (2, 256, 64))          # quadratic path
+    x_big = jnp.tile(x_small, (1, 2, 1))[:, :512]           # chunked path
+    y_small, _ = run_mlstm(p, cfg, x_small)
+    y_big, _ = run_mlstm(p, cfg, x_big)
+    # first 256 positions of the chunked run must equal the quadratic run
+    np.testing.assert_allclose(np.asarray(y_big[:, :256]),
+                               np.asarray(y_small),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_mlstm_sequence_parallel_equals_sequential():
+    """The seq-parallel two-pass path (vmap segments + associative state
+    scan) must match the sequential chunk scan, with and without an
+    incoming state, including the returned state."""
+    import dataclasses
+
+    cfg = _mk_cfg(arch="ssm", d_model=64, n_heads=2)
+    key = jax.random.PRNGKey(7)
+    p = init_mlstm(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (2, 2048, 64))
+    cfg_sp = dataclasses.replace(cfg, seq_segments=4)
+    y_seq, _ = run_mlstm(p, cfg, x)
+    y_sp, _ = run_mlstm(p, cfg_sp, x)
+    np.testing.assert_allclose(np.asarray(y_sp), np.asarray(y_seq),
+                               atol=1e-5, rtol=1e-5)
+    d_in, H = 128, 2
+    hd = d_in // H
+    state = (0.1 * jax.random.normal(key, (2, H, hd, hd)),
+             0.1 * jax.random.normal(key, (2, H, hd)),
+             jnp.zeros((2, H)))
+    y1, s1 = run_mlstm(p, cfg, x, state)
+    y2, s2 = run_mlstm(p, cfg_sp, x, state)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(s1, s2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_moe_groups_equivalence():
+    """Grouped dispatch with ample capacity == ungrouped."""
+    import dataclasses
+    from repro.models.moe import init_moe, run_moe
+
+    cfg = _mk_cfg(arch="moe", n_experts=8, moe_top_k=2, d_expert=64,
+                  capacity_factor=8.0)
+    p = init_moe(cfg, jax.random.PRNGKey(4), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32, cfg.d_model))
+    y1, aux1 = run_moe(p, cfg, x, no_drop=True)
+    cfg4 = dataclasses.replace(cfg, moe_groups=4)
+    y4, aux4 = run_moe(p, cfg4, x, no_drop=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(aux1), float(aux4), rtol=1e-5)

@@ -1,0 +1,160 @@
+"""Property tests: CRDT join-semilattice laws + convergence (hypothesis)."""
+
+import copy
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crdt import (GCounter, LWWRegister, MVRegister, ORSet,
+                             PNCounter, ReplicatedStore)
+
+REPLICAS = ["r0", "r1", "r2"]
+
+
+# ---------------------------------------------------------------- op models
+
+def apply_gcounter(c: GCounter, op):
+    c.increment(op[0], op[1])
+
+
+def apply_pncounter(c: PNCounter, op):
+    (c.increment if op[2] else c.decrement)(op[0], op[1])
+
+
+def apply_orset(s: ORSet, op):
+    replica, elem, is_add = op
+    if is_add:
+        s.add(elem, replica)
+    else:
+        s.remove(elem)
+
+
+gcounter_ops = st.lists(st.tuples(st.sampled_from(REPLICAS),
+                                  st.integers(0, 10)), max_size=20)
+pncounter_ops = st.lists(st.tuples(st.sampled_from(REPLICAS),
+                                   st.integers(0, 10), st.booleans()),
+                         max_size=20)
+orset_ops = st.lists(st.tuples(st.sampled_from(REPLICAS),
+                               st.integers(0, 5), st.booleans()),
+                     max_size=24)
+
+
+def _build(cls, apply_fn, ops_by_replica):
+    out = []
+    for r, ops in zip(REPLICAS, ops_by_replica):
+        c = cls()
+        for op in ops:
+            apply_fn(c, op)
+        out.append(c)
+    return out
+
+
+CASES = [
+    (GCounter, apply_gcounter, gcounter_ops),
+    (PNCounter, apply_pncounter, pncounter_ops),
+    (ORSet, apply_orset, orset_ops),
+]
+
+
+@pytest.mark.parametrize("cls,apply_fn,ops_st", CASES,
+                         ids=["gcounter", "pncounter", "orset"])
+def test_merge_laws(cls, apply_fn, ops_st):
+    @settings(max_examples=60, deadline=None)
+    @given(st.tuples(ops_st, ops_st, ops_st))
+    def run(ops3):
+        a, b, c = _build(cls, apply_fn, ops3)
+        # commutativity: a ⊔ b == b ⊔ a
+        ab = copy.deepcopy(a); ab.merge(b)
+        ba = copy.deepcopy(b); ba.merge(a)
+        assert ab.value() == ba.value()
+        # associativity: (a ⊔ b) ⊔ c == a ⊔ (b ⊔ c)
+        abc1 = copy.deepcopy(a); abc1.merge(b); abc1.merge(c)
+        bc = copy.deepcopy(b); bc.merge(c)
+        abc2 = copy.deepcopy(a); abc2.merge(bc)
+        assert abc1.value() == abc2.value()
+        # idempotence: a ⊔ a == a
+        aa = copy.deepcopy(a)
+        changed = aa.merge(a)
+        assert aa.value() == a.value() and not changed
+
+    run()
+
+
+@pytest.mark.parametrize("cls,apply_fn,ops_st", CASES,
+                         ids=["gcounter", "pncounter", "orset"])
+def test_convergence_any_delivery_order(cls, apply_fn, ops_st):
+    """All replicas converge regardless of merge order/duplication."""
+    @settings(max_examples=40, deadline=None)
+    @given(st.tuples(ops_st, ops_st, ops_st),
+           st.lists(st.tuples(st.integers(0, 2), st.integers(0, 2)),
+                    min_size=6, max_size=20))
+    def run(ops3, gossip):
+        replicas = _build(cls, apply_fn, ops3)
+        # arbitrary pairwise gossip (with duplication)...
+        for i, j in gossip:
+            if i != j:
+                replicas[i].merge(replicas[j])
+        # ...then a full exchange round to close the gaps
+        for i in range(3):
+            for j in range(3):
+                if i != j:
+                    replicas[i].merge(replicas[j])
+        vals = [r.value() for r in replicas]
+        assert vals[0] == vals[1] == vals[2]
+
+    run()
+
+
+def test_orset_add_wins():
+    a, b = ORSet(), ORSet()
+    a.add("x", "r0")
+    b.merge(a)
+    b.remove("x")          # b observed r0's add and removes it
+    a.add("x", "r0")       # concurrent re-add with a NEW tag
+    a.merge(b)
+    b.merge(a)
+    assert a.contains("x") and b.contains("x")
+
+
+def test_lww_register_total_order():
+    a, b = LWWRegister(), LWWRegister()
+    a.set("first", 1.0, "r0")
+    b.set("second", 2.0, "r1")
+    a.merge(b)
+    assert a.value() == "second"
+    # tie on timestamp → replica id breaks it deterministically
+    c, d = LWWRegister(), LWWRegister()
+    c.set("cc", 5.0, "ra")
+    d.set("dd", 5.0, "rb")
+    c2 = copy.deepcopy(c); c2.merge(d)
+    d2 = copy.deepcopy(d); d2.merge(c)
+    assert c2.value() == d2.value() == "dd"
+
+
+def test_mv_register_keeps_concurrent_siblings():
+    a, b = MVRegister(), MVRegister()
+    a.set("va", "r0")
+    b.set("vb", "r1")
+    a.merge(b)
+    assert set(a.value()) == {"va", "vb"}
+    # causal overwrite collapses siblings
+    a.set("resolved", "r0")
+    b.merge(a)
+    assert b.value() == ("resolved",)
+
+
+def test_replicated_store_digest_and_merge():
+    s1 = ReplicatedStore("a")
+    s2 = ReplicatedStore("b")
+    s1.counter("steps").increment("a", 5)
+    s1.orset("ckpts").add((1, b"x"), "a")
+    s2.counter("steps").increment("b", 7)
+    s2.register("latest").set((2, b"y"), 10.0, "b")
+    assert s1.digest() != s2.digest()
+    s1.merge(s2)
+    s2.merge(s1)
+    assert s1.digest() == s2.digest()
+    assert s1.counter("steps").value() == 12
+    # serialize roundtrip preserves digest
+    s3 = ReplicatedStore.deserialize(s1.serialize(), "c")
+    assert s3.digest() == s1.digest()

@@ -1,0 +1,86 @@
+"""Kademlia: routing tables, iterative lookup, provider records, scaling."""
+
+import hashlib
+
+import pytest
+
+from repro.core.dht import RoutingTable, PeerInfo
+from repro.core.fleet import make_fleet
+from repro.core.peer import PeerId
+
+
+def test_routing_table_buckets_and_eviction():
+    me = PeerId.from_name("me")
+    rt = RoutingTable(me, k=4)
+    infos = [PeerInfo(PeerId.from_name(f"p{i}"), f"p{i}") for i in range(200)]
+    for i in infos:
+        rt.update(i)
+    # k-bounded buckets
+    assert all(len(b) <= 4 for b in rt.buckets)
+    # closest() is sorted by xor distance
+    key = hashlib.sha256(b"target").digest()
+    closest = rt.closest(key, 10)
+    dists = [c.peer_id.distance_to_key(key) for c in closest]
+    assert dists == sorted(dists)
+    rt.remove(infos[0].peer_id)
+    assert infos[0].peer_id not in {i.peer_id for i in rt.closest(key, 200)}
+
+
+def test_put_get_across_fleet():
+    fleet = make_fleet(14, seed=11)
+    sim = fleet.sim
+    writer, reader = fleet.peers[0], fleet.peers[-1]
+
+    def put():
+        key = hashlib.sha256(b"model-meta").digest()
+        n = yield from writer.dht.put(key, {"step": 42})
+        return key, n
+
+    key, n_stored = sim.run_process(put(), until=sim.now + 300)
+    assert n_stored >= 1
+
+    def get():
+        val = yield from reader.dht.get(key)
+        return val
+
+    assert sim.run_process(get(), until=sim.now + 300) == {"step": 42}
+
+
+def test_provider_records():
+    fleet = make_fleet(12, seed=5)
+    sim = fleet.sim
+    provider, seeker = fleet.peers[2], fleet.peers[-1]
+    key = hashlib.sha256(b"artifact").digest()
+
+    def provide():
+        n = yield from provider.dht.provide(key)
+        return n
+
+    assert sim.run_process(provide(), until=sim.now + 300) >= 1
+
+    def find():
+        provs = yield from seeker.dht.find_providers(key)
+        return provs
+
+    provs = sim.run_process(find(), until=sim.now + 300)
+    assert provider.peer_id in {p.peer_id for p in provs}
+
+
+def test_lookup_rounds_scale_sublinearly():
+    """O(log N): rounds should grow far slower than N."""
+    rounds = {}
+    for n in (8, 32):
+        fleet = make_fleet(n, seed=7, same_region="us")
+        sim = fleet.sim
+        node = fleet.peers[0]
+        node.dht.stats["rounds"] = 0
+        node.dht.stats["lookups"] = 0
+
+        def lookup():
+            key = hashlib.sha256(b"some-far-key").digest()
+            yield from node.dht.find_node(key)
+
+        sim.run_process(lookup(), until=sim.now + 300)
+        rounds[n] = node.dht.stats["rounds"] / max(node.dht.stats["lookups"], 1)
+    # 4x the peers must not cost 4x the rounds
+    assert rounds[32] <= rounds[8] * 3 + 2

@@ -1,0 +1,101 @@
+"""NAT traversal: the hole-punch outcome matrix emerges from NAT semantics."""
+
+import pytest
+
+from repro.core import DialError, LatticaNode, NATBox, NATKind, Network, Sim
+
+K = NATKind
+
+
+def _mesh(kind_a, kind_b, seed=3):
+    sim = Sim(seed=seed)
+    net = Network(sim)
+    boot1 = LatticaNode(net, "boot1", region="us", zone="core")
+    boot2 = LatticaNode(net, "boot2", region="eu", zone="core")
+    boot1.transport.enable_relay()
+    boot2.transport.enable_relay()
+    sim.run_process(boot2.connect_info(boot1.info()))
+    binfos = [boot1.info(), boot2.info()]
+    nat_a = NATBox(net, kind_a) if kind_a else None
+    nat_b = NATBox(net, kind_b) if kind_b else None
+    a = LatticaNode(net, "a", region="us", nat=nat_a)
+    b = LatticaNode(net, "b", region="eu", nat=nat_b)
+
+    def join(n):
+        yield from n.bootstrap(binfos)
+    sim.run_process(join(a))
+    sim.run_process(join(b))
+    return sim, a, b
+
+
+#: Ford et al. (2005) pairwise matrix: can a direct path be established?
+PUNCH_MATRIX = [
+    (K.FULL_CONE, K.FULL_CONE, True),
+    (K.FULL_CONE, K.RESTRICTED_CONE, True),
+    (K.FULL_CONE, K.PORT_RESTRICTED, True),
+    (K.FULL_CONE, K.SYMMETRIC, True),
+    (K.RESTRICTED_CONE, K.RESTRICTED_CONE, True),
+    (K.RESTRICTED_CONE, K.PORT_RESTRICTED, True),
+    (K.RESTRICTED_CONE, K.SYMMETRIC, True),
+    (K.PORT_RESTRICTED, K.PORT_RESTRICTED, True),
+    (K.PORT_RESTRICTED, K.SYMMETRIC, False),
+    (K.SYMMETRIC, K.SYMMETRIC, False),
+]
+
+
+@pytest.mark.parametrize("ka,kb,expect_direct", PUNCH_MATRIX,
+                         ids=[f"{a.value}-{b.value}" for a, b, _ in PUNCH_MATRIX])
+def test_punch_matrix(ka, kb, expect_direct):
+    sim, a, b = _mesh(ka, kb)
+
+    def connect():
+        conn = yield from a.connect_info(b.info())
+        return conn
+
+    conn = sim.run_process(connect(), until=sim.now + 120)
+    assert conn is not None                       # relay guarantees a path
+    if expect_direct:
+        # direct path: dialable peer (full-cone advertises its mapping),
+        # reuse of an inbound connection, or a DCUtR punch
+        assert not conn.relayed, f"{ka} -> {kb} should get a direct path"
+        if (ka not in (None, K.FULL_CONE)
+                and kb not in (None, K.FULL_CONE)):
+            assert a.transport.stats["punch_ok"] >= 1
+    else:
+        assert conn.relayed, f"{ka} -> {kb} should fall back to relay"
+        assert a.transport.stats["punch_fail"] >= 1
+
+
+def test_autonat_classification():
+    cases = [(None, "public"), (K.FULL_CONE, "public"),
+             (K.RESTRICTED_CONE, "private"), (K.PORT_RESTRICTED, "private"),
+             (K.SYMMETRIC, "private")]
+    for kind, expected in cases:
+        sim, a, b = _mesh(kind, None)
+        assert a.transport.reachability == expected, kind
+
+
+def test_relayed_connection_carries_data():
+    sim, a, b = _mesh(K.SYMMETRIC, K.SYMMETRIC)
+
+    def roundtrip():
+        conn = yield from a.connect_info(b.info())
+        assert conn.relayed
+        rtt = yield from a.transport.ping(conn)
+        return rtt
+
+    rtt = sim.run_process(roundtrip(), until=sim.now + 60)
+    # us <-> eu via relay: at least 2 inter-region one-way latencies
+    assert rtt > 2 * 0.075
+
+
+def test_direct_dial_public_peers():
+    sim, a, b = _mesh(None, None)
+
+    def connect():
+        conn = yield from a.connect_info(b.info())
+        return conn
+
+    conn = sim.run_process(connect())
+    assert conn is not None and not conn.relayed
+    assert a.transport.stats["punch_ok"] == 0     # no punch needed

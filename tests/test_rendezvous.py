@@ -1,0 +1,42 @@
+"""Rendezvous namespaces: expedited discovery before DHT records propagate."""
+
+from repro.core.fleet import make_fleet
+from repro.core.rendezvous import discover, register
+
+
+def test_register_and_discover():
+    fleet = make_fleet(6, seed=41)
+    sim = fleet.sim
+    rdv = fleet.bootstrap[0].info()          # boot0 serves rendezvous
+    a, b, c = fleet.peers[0], fleet.peers[1], fleet.peers[2]
+
+    def run():
+        ok1 = yield from register(a, rdv, "fleet/llm", ttl=100.0)
+        ok2 = yield from register(b, rdv, "fleet/llm", ttl=100.0)
+        yield from register(c, rdv, "fleet/other", ttl=100.0)
+        found = yield from discover(c, rdv, "fleet/llm")
+        return ok1, ok2, found
+
+    ok1, ok2, found = sim.run_process(run(), until=sim.now + 300)
+    assert ok1 and ok2
+    ids = {i.peer_id for i in found}
+    assert a.peer_id in ids and b.peer_id in ids
+    assert c.peer_id not in ids              # different namespace
+    # discovery seeded c's peerstore with dialable records
+    assert a.peer_id in c.peers
+
+
+def test_ttl_expiry():
+    fleet = make_fleet(4, seed=43)
+    sim = fleet.sim
+    rdv = fleet.bootstrap[0].info()
+    a, b = fleet.peers[0], fleet.peers[1]
+
+    def run():
+        yield from register(a, rdv, "ns", ttl=5.0)
+        yield 60.0                            # let the registration lapse
+        found = yield from discover(b, rdv, "ns")
+        return found
+
+    found = sim.run_process(run(), until=sim.now + 300)
+    assert a.peer_id not in {i.peer_id for i in found}

@@ -1,0 +1,132 @@
+"""Dual-plane RPC: unary semantics, streaming backpressure, concurrency."""
+
+import pytest
+
+from repro.core import LatticaNode, Network, RpcError, Sim, call_unary, open_channel
+from repro.core.rpc import INIT_CREDIT
+
+
+def _pair(seed=0):
+    sim = Sim(seed=seed)
+    net = Network(sim)
+    a = LatticaNode(net, "a", region="us", zone="a")
+    b = LatticaNode(net, "b", region="us", zone="a")
+
+    def conn():
+        c = yield from a.connect_info(b.info())
+        return c
+
+    return sim, a, b, sim.run_process(conn())
+
+
+def test_unary_roundtrip_and_error():
+    sim, a, b, conn = _pair()
+
+    def echo(payload, ctx):
+        yield ctx.cpu(1e-6)
+        return ("echo", payload), 64
+
+    def boom(payload, ctx):
+        yield ctx.cpu(1e-6)
+        raise RuntimeError("kaboom")
+
+    b.router.register_unary("t.echo", echo)
+    b.router.register_unary("t.boom", boom)
+
+    def run():
+        r = yield from call_unary(a.host, conn, "t.echo", {"x": 1})
+        try:
+            yield from call_unary(a.host, conn, "t.boom", None)
+            raised = False
+        except RpcError as e:
+            raised = "kaboom" in str(e)
+        try:
+            yield from call_unary(a.host, conn, "t.missing", None)
+            missing = False
+        except RpcError:
+            missing = True
+        return r, raised, missing
+
+    r, raised, missing = sim.run_process(run())
+    assert r == ("echo", {"x": 1}) and raised and missing
+
+
+def test_streaming_backpressure_blocks_writer():
+    """Writer must stall once in-flight bytes exceed the credit window."""
+    sim, a, b, conn = _pair()
+    progress = {"sent": 0, "consumed": 0, "max_outstanding": 0}
+    MSG = 256 * 1024                       # 256 KiB messages, 1 MiB window
+
+    def slow_reader(chan, ctx):
+        for _ in range(12):
+            yield 0.05                     # slow consumer
+            yield from chan.recv()
+            progress["consumed"] += 1
+        chan.end()
+
+    b.router.register_streaming("t.stream", slow_reader)
+
+    def writer():
+        chan = yield from open_channel(a.host, conn, "t.stream")
+        for i in range(12):
+            yield from chan.send(("blob", i), MSG)
+            progress["sent"] += 1
+            outstanding = progress["sent"] - progress["consumed"]
+            progress["max_outstanding"] = max(
+                progress["max_outstanding"], outstanding)
+        return progress
+
+    res = sim.run_process(writer(), until=sim.now + 60)
+    assert res["sent"] == 12
+    # window = 1MiB = 4 messages; writer can never be more than ~window+1
+    # ahead of the consumer
+    assert res["max_outstanding"] <= (INIT_CREDIT // MSG) + 2
+
+
+def test_concurrent_unary_calls():
+    sim, a, b, conn = _pair()
+    served = []
+
+    def handler(payload, ctx):
+        yield ctx.cpu(100e-6)
+        served.append(payload)
+        return payload * 2, 64
+
+    b.router.register_unary("t.mul", handler)
+
+    def run():
+        procs = [sim.process(call_unary(a.host, conn, "t.mul", i))
+                 for i in range(50)]
+        results = yield sim.all_of(procs)
+        return results
+
+    results = sim.run_process(run())
+    assert sorted(results) == [2 * i for i in range(50)]
+    assert len(served) == 50
+
+
+def test_rpc_latency_scales_with_region():
+    """Same-host RPC must be much faster than inter-continental."""
+    def roundtrip_time(region_b):
+        sim = Sim(seed=1)
+        net = Network(sim)
+        a = LatticaNode(net, "a", region="us", zone="a")
+        b = LatticaNode(net, "b", region=region_b,
+                        zone="a" if region_b == "us" else "x")
+        b.router.register_unary("t.ping", _pong)
+
+        def run():
+            conn = yield from a.connect_info(b.info())
+            t0 = sim.now
+            yield from call_unary(a.host, conn, "t.ping", None)
+            return sim.now - t0
+
+        return sim.run_process(run())
+
+    def _pong(payload, ctx):
+        yield ctx.cpu(1e-6)
+        return "pong", 64
+
+    t_local = roundtrip_time("us")
+    t_inter = roundtrip_time("ap")
+    assert t_inter > 10 * t_local

@@ -1,0 +1,109 @@
+"""The discrete-event substrate itself: processes, events, CPU, paths."""
+
+import pytest
+
+from repro.core.simnet import (CPU, DialError, Network, Sim, scenario_for)
+
+
+def test_timeout_ordering_deterministic():
+    sim = Sim(seed=0)
+    log = []
+
+    def proc(name, delay):
+        yield delay
+        log.append((name, sim.now))
+
+    sim.process(proc("b", 2.0))
+    sim.process(proc("a", 1.0))
+    sim.process(proc("c", 1.0))       # same time as 'a': FIFO tie-break
+    sim.run()
+    assert log == [("a", 1.0), ("c", 1.0), ("b", 2.0)]
+
+
+def test_process_return_value_and_chaining():
+    sim = Sim()
+
+    def child():
+        yield 0.5
+        return 42
+
+    def parent():
+        v = yield sim.process(child())
+        return v * 2
+
+    assert sim.run_process(parent()) == 84
+    assert sim.now == 0.5
+
+
+def test_exception_propagates_to_waiter():
+    sim = Sim()
+
+    def bad():
+        yield 0.1
+        raise DialError("nope")
+
+    def parent():
+        try:
+            yield sim.process(bad())
+        except DialError as e:
+            return f"caught {e}"
+
+    assert sim.run_process(parent()) == "caught nope"
+
+
+def test_any_of_and_all_of():
+    sim = Sim()
+
+    def waiter():
+        idx, val = yield sim.any_of([sim.timeout(2.0, "slow"),
+                                     sim.timeout(1.0, "fast")])
+        vals = yield sim.all_of([sim.timeout(0.5, "x"), sim.timeout(0.2, "y")])
+        return idx, val, vals
+
+    idx, val, vals = sim.run_process(waiter())
+    assert (idx, val) == (1, "fast")
+    assert vals == ["x", "y"]
+
+
+def test_deadlock_detection():
+    sim = Sim()
+
+    def stuck():
+        yield sim.event()             # never fires
+
+    with pytest.raises(Exception, match="deadlock"):
+        sim.run_process(stuck())
+
+
+def test_cpu_serializes_across_cores():
+    sim = Sim()
+    cpu = CPU(sim, cores=2)
+    done = []
+
+    def work(i):
+        yield cpu.consume(1.0)
+        done.append((i, sim.now))
+
+    for i in range(4):
+        sim.process(work(i))
+    sim.run()
+    # 4 × 1s of work on 2 cores = 2s; two finish at 1s, two at 2s
+    times = sorted(t for _, t in done)
+    assert times == [1.0, 1.0, 2.0, 2.0]
+
+
+def test_scenario_classification():
+    sim = Sim()
+    net = Network(sim)
+    a = net.host("a", region="us", zone="a")
+    b = net.host("b", region="us", zone="a")
+    c = net.host("c", region="us", zone="b")
+    d = net.host("d", region="eu", zone="a")
+    e = net.host("e", region="us", zone="a", machine="m1")
+    f = net.host("f", region="us", zone="a", machine="m1")
+    assert scenario_for(a, b) == "lan"
+    assert scenario_for(a, c) == "wan"
+    assert scenario_for(a, d) == "inter"
+    assert scenario_for(e, f) == "loopback"
+    # inter has strictly higher latency than lan
+    assert net.path(a, d)[0] > net.path(a, b)[0]
