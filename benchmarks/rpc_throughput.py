@@ -1,20 +1,25 @@
 """Paper Table 1: RPC throughput at 1000 concurrent calls (QPS).
 
 Client and server are 4-core hosts on the four network scenarios; each
-worker issues sequential unary calls over the shared secured connection.
-The CPU-bound rows (Local, LAN) reproduce the paper's numbers from the
-calibrated per-message/per-byte costs; the WAN rows are latency/bandwidth
-bound (see EXPERIMENTS.md for the deviation analysis — the simulator omits
-TCP congestion dynamics, so small-payload WAN rows run faster than the
-paper's measurement).
+worker issues sequential unary calls through a typed service stub over the
+shared secured connection.  The CPU-bound rows (Local, LAN) reproduce the
+paper's numbers from the calibrated per-message/per-byte costs; the WAN rows
+are latency/bandwidth bound (see EXPERIMENTS.md for the deviation analysis —
+the simulator omits TCP congestion dynamics, so small-payload WAN rows run
+faster than the paper's measurement).
+
+``--smoke`` runs a reduced matrix (one CPU-bound scenario, lower
+concurrency) as a CI sanity check.
 """
 
 from __future__ import annotations
 
+import sys
 from typing import Dict, Generator, List, Tuple
 
-from repro.core import LatticaNode, Network, Sim, call_unary
+from repro.core import LatticaNode, Network, Sim
 from repro.core.rpc import RpcContext
+from repro.core.service import ByteLength, Fixed, Service, unary
 
 CONCURRENCY = 1000
 CALLS_PER_WORKER = 4
@@ -35,7 +40,24 @@ PAPER_TABLE1 = {  # scenario -> (qps @128B, qps @256KB)
 }
 
 
-def measure(scenario: str, payload: int, seed: int = 0) -> float:
+class EchoService(Service):
+    """Ping-style echo: tiny request, ``payload``-sized response (one-way
+    payload, matching the paper's measurement)."""
+
+    name = "bench"
+
+    def __init__(self, payload: int):
+        self.blob = b"\0" * payload
+
+    @unary("bench.echo", request=Fixed(96), response=ByteLength(),
+           idempotent=True, timeout=600.0)
+    def echo(self, req, ctx: RpcContext) -> Generator:
+        yield ctx.cpu(0)
+        return self.blob
+
+
+def measure(scenario: str, payload: int, seed: int = 0,
+            concurrency: int = CONCURRENCY) -> float:
     regions, zones, machines = SCENARIOS[scenario]
     sim = Sim(seed=seed)
     net = Network(sim)
@@ -43,28 +65,20 @@ def measure(scenario: str, payload: int, seed: int = 0) -> float:
                          machine=machines[0])
     server = LatticaNode(net, "server", region=regions[1], zone=zones[1],
                          machine=machines[1])
-
-    def handler(req, ctx: RpcContext):
-        # echo service: response carries the payload back
-        yield ctx.cpu(0)
-        return b"x", payload
-
-    server.router.register_unary("bench.echo", handler)
+    server.serve(EchoService(payload))
 
     def run() -> Generator:
-        conn = yield from client.connect_info(server.info())
+        yield from client.connect_info(server.info())
+        stub = client.stub(EchoService, server.info())
         done = {"n": 0}
 
         def worker() -> Generator:
             for _ in range(CALLS_PER_WORKER):
-                # small request, `payload`-sized response (one-way payload,
-                # matching the paper's ping-style measurement)
-                yield from call_unary(client.host, conn, "bench.echo",
-                                      b"q", size=96, timeout=600.0)
+                yield from stub.echo(b"q")
                 done["n"] += 1
 
         t0 = sim.now
-        procs = [sim.process(worker()) for _ in range(CONCURRENCY)]
+        procs = [sim.process(worker()) for _ in range(concurrency)]
         yield sim.all_of(procs)
         elapsed = sim.now - t0
         return done["n"] / elapsed
@@ -72,19 +86,24 @@ def measure(scenario: str, payload: int, seed: int = 0) -> float:
     return sim.run_process(run(), until=sim.now + 36000)
 
 
-def main(report: List[str]) -> None:
-    report.append("# Table 1 — RPC throughput, 1000 concurrent calls (QPS)")
+def main(report: List[str], smoke: bool = False) -> None:
+    scenarios = ["local_same_host"] if smoke else list(SCENARIOS)
+    concurrency = 100 if smoke else CONCURRENCY
+    report.append("# Table 1 — RPC throughput, "
+                  f"{concurrency} concurrent calls (QPS)")
     report.append(f"{'scenario':<18} {'payload':>8} {'sim_qps':>9} "
                   f"{'paper_qps':>9} {'ratio':>6}")
-    for scenario in SCENARIOS:
+    for scenario in scenarios:
         for payload, col in ((128, 0), (256 * 1024, 1)):
-            qps = measure(scenario, payload)
+            qps = measure(scenario, payload, concurrency=concurrency)
             paper = PAPER_TABLE1[scenario][col]
             report.append(f"{scenario:<18} {payload:>8} {qps:>9.0f} "
                           f"{paper:>9} {qps / paper:>6.2f}")
+    if smoke:
+        report.append("smoke: OK")
 
 
 if __name__ == "__main__":
     out: List[str] = []
-    main(out)
+    main(out, smoke="--smoke" in sys.argv[1:])
     print("\n".join(out))

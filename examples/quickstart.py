@@ -6,15 +6,17 @@ Walks through the paper's four scenarios at toy scale:
   1. connectivity across NATs (AutoNAT -> relay -> DCUtR upgrade)
   2. content-addressed artifact publish + swarm fetch (decentralized CDN)
   3. CRDT replicated store convergence
-  4. a tiny RPC service with a streaming channel
+  4. a typed RPC service (MethodSpec-declared unary + streaming methods,
+     called through a generated stub)
 """
 
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import call_unary, open_channel
+from repro.core import Service, streaming, unary
 from repro.core.fleet import make_fleet
+from repro.core.service import Fixed, pickled
 
 
 def main():
@@ -63,22 +65,31 @@ def main():
           f"steps={b.store.counter('train/steps').value()}, "
           f"ckpts={a.store.orset('train/ckpts').value()} ==")
 
-    # -- 4. RPC ---------------------------------------------------------------
-    def double(payload, ctx):
-        yield ctx.cpu(1e-6)
-        return payload * 2, 64
+    # -- 4. typed RPC service -------------------------------------------------
+    # Declare methods with MethodSpecs: wire name, codecs (which compute the
+    # simulated wire size from the payload), idempotency and deadline.  The
+    # handler returns just the response — no hand-passed size constants.
+    class DemoService(Service):
+        name = "demo"
 
-    def stream_squares(chan, ctx):
-        for i in range(5):
-            yield from chan.send(i * i, 64)
-        chan.end()
+        @unary("demo.double", request=Fixed(64), response=pickled(floor=64),
+               idempotent=True, timeout=5.0)
+        def double(self, payload, ctx):
+            yield ctx.cpu(1e-6)
+            return payload * 2
 
-    b.router.register_unary("demo.double", double)
-    b.router.register_streaming("demo.squares", stream_squares)
+        @streaming("demo.squares")
+        def squares(self, chan, ctx):
+            for i in range(5):
+                yield from chan.send(i * i, 64)
+            chan.end()
+
+    b.serve(DemoService())
+    stub = a.stub(DemoService, b.info())   # reuses the existing connection
 
     def rpc():
-        x = yield from call_unary(a.host, conn, "demo.double", 21)
-        chan = yield from open_channel(a.host, conn, "demo.squares")
+        x = yield from stub.double(21)     # deadline + idempotent retry built in
+        chan = yield from stub.squares()   # opens a backpressured channel
         got = []
         try:
             while True:

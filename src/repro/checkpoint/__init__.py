@@ -1,8 +1,10 @@
 from .serial import params_from_bytes, params_to_bytes
-from .lattica_ckpt import (CheckpointRegistry, fetch_checkpoint,
-                           fetch_latest, publish_checkpoint)
+from .lattica_ckpt import (CheckpointRegistry, CheckpointService,
+                           fetch_checkpoint, fetch_latest, fetch_latest_from,
+                           publish_checkpoint, serve_checkpoints)
 from .local import load_local, save_local
 
 __all__ = ["params_to_bytes", "params_from_bytes", "CheckpointRegistry",
-           "publish_checkpoint", "fetch_checkpoint", "fetch_latest",
+           "CheckpointService", "publish_checkpoint", "fetch_checkpoint",
+           "fetch_latest", "fetch_latest_from", "serve_checkpoints",
            "save_local", "load_local"]

@@ -18,6 +18,8 @@ from typing import Any, Generator, List, Optional, Tuple
 from repro.core.cid import CID
 from repro.core.dht import PeerInfo
 from repro.core.node import LatticaNode
+from repro.core.rpc import RpcContext
+from repro.core.service import Fixed, Service, pickled, unary
 
 from .serial import params_from_bytes, params_to_bytes
 
@@ -58,6 +60,50 @@ class CheckpointRegistry:
             return None
         s, c, d = val
         return s, CID(c, d)
+
+
+class CheckpointService(Service):
+    """Remote view of a node's checkpoint registry: resolve a fleet's
+    latest/known versions directly from one peer, without waiting for CRDT
+    anti-entropy to converge first.  Read-only, hence idempotent."""
+
+    name = "ckpt"
+
+    def __init__(self, node: LatticaNode):
+        self.node = node
+
+    @unary("ckpt.latest", request=Fixed(64), response=pickled(floor=96),
+           idempotent=True, timeout=15.0)
+    def latest(self, fleet: Any, ctx: RpcContext) -> Generator:
+        yield ctx.cpu(2e-6)
+        return CheckpointRegistry(self.node, fleet).latest()
+
+    @unary("ckpt.versions", request=Fixed(64), response=pickled(floor=96),
+           idempotent=True, timeout=15.0)
+    def versions(self, fleet: Any, ctx: RpcContext) -> Generator:
+        yield ctx.cpu(2e-6)
+        return CheckpointRegistry(self.node, fleet).versions()
+
+
+def serve_checkpoints(node: LatticaNode) -> CheckpointService:
+    """Expose this node's checkpoint registry over the RPC plane."""
+    return node.serve(CheckpointService(node))
+
+
+def fetch_latest_from(node: LatticaNode, peer: PeerInfo, fleet: str,
+                      like: Any = None) -> Generator:
+    """Ask ``peer`` for the fleet's latest version and swarm-fetch it (the
+    peer doubles as a provider hint).  Returns (step, params) or
+    (None, None)."""
+    stub = node.stub(CheckpointService, peer)
+    latest = yield from stub.latest(fleet)
+    if latest is None:
+        return None, None
+    step, root = latest
+    params = yield from fetch_checkpoint(node, root, like,
+                                         hint_providers=[peer])
+    CheckpointRegistry(node, fleet).record_fetched(step, root)
+    return step, params
 
 
 def publish_checkpoint(node: LatticaNode, params: Any, step: int,

@@ -10,6 +10,7 @@ The paper's contribution, as composable pieces:
 * :mod:`repro.core.dht` — Kademlia discovery/provider records
 * :mod:`repro.core.crdt` — the decentralized replicated store
 * :mod:`repro.core.rpc` — dual-plane RPC (unary + backpressured streaming)
+* :mod:`repro.core.service` — the typed service layer (specs, codecs, stubs)
 * :mod:`repro.core.pubsub` / :mod:`repro.core.rendezvous` — announcement paths
 * :mod:`repro.core.node` — ``LatticaNode``, the composed SDK surface
 """
@@ -17,18 +18,25 @@ The paper's contribution, as composable pieces:
 from .cid import CID, DAG, build_dag, chunk, decode_manifest, encode_manifest
 from .crdt import (GCounter, LWWRegister, MVRegister, ORSet, PNCounter,
                    ReplicatedStore)
-from .dht import KademliaDHT, PeerInfo, RoutingTable
+from .dht import KademliaDHT, KadService, PeerInfo, RoutingTable
 from .nat import NATBox, NATKind
-from .node import LatticaNode
+from .node import CrdtSyncService, IdentityService, LatticaNode
 from .peer import Multiaddr, PeerId
 from .rpc import RpcChannel, RpcError, RpcRouter, call_unary, open_channel
+from .service import (ClientInterceptor, Codec, Fixed, MethodSpec,
+                      RpcMetrics, RpcStatus, ServerInterceptor, Service,
+                      ServiceError, Stub, pickled, streaming, unary)
 from .simnet import Connection, DialError, Host, Network, Sim, Stream
 
 __all__ = [
     "CID", "DAG", "build_dag", "chunk", "decode_manifest", "encode_manifest",
     "GCounter", "LWWRegister", "MVRegister", "ORSet", "PNCounter",
-    "ReplicatedStore", "KademliaDHT", "PeerInfo", "RoutingTable",
-    "NATBox", "NATKind", "LatticaNode", "Multiaddr", "PeerId",
+    "ReplicatedStore", "KademliaDHT", "KadService", "PeerInfo",
+    "RoutingTable", "NATBox", "NATKind", "CrdtSyncService",
+    "IdentityService", "LatticaNode", "Multiaddr", "PeerId",
     "RpcChannel", "RpcError", "RpcRouter", "call_unary", "open_channel",
+    "ClientInterceptor", "Codec", "Fixed", "MethodSpec", "RpcMetrics",
+    "RpcStatus", "ServerInterceptor", "Service", "ServiceError", "Stub",
+    "pickled", "streaming", "unary",
     "Connection", "DialError", "Host", "Network", "Sim", "Stream",
 ]

@@ -15,7 +15,8 @@ from typing import Any, Dict, Generator, List, Optional, Set, TYPE_CHECKING
 
 from .cid import CID, decode_manifest
 from .dht import PeerInfo
-from .rpc import RpcChannel, RpcContext, RpcError, call_unary, open_channel
+from .rpc import RpcChannel, RpcContext, RpcError
+from .service import CodecFn, Fixed, Service, streaming, unary
 from .simnet import DialError
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -32,46 +33,63 @@ class FetchError(Exception):
     pass
 
 
-class Bitswap:
-    def __init__(self, node: "LatticaNode"):
-        self.node = node
-        self.stats = {"blocks_served": 0, "blocks_fetched": 0,
-                      "bytes_served": 0, "bytes_fetched": 0, "retries": 0,
-                      "stream_sessions": 0}
-        node.router.register_unary("bs.get", self._h_get)
-        node.router.register_streaming("bs.fetch", self._h_fetch_stream)
+_BLOCK_RESP = CodecFn(
+    "block_resp",
+    lambda p: max(len(p[1]), 64) if p[0] == "block" and p[1] else 64)
 
-    # ------------------------------------------------------------- server
-    def _h_get(self, payload: Any, ctx: RpcContext) -> Generator:
+
+class BitswapService(Service):
+    """Block exchange: per-block unary gets + bulk streaming fetch."""
+
+    name = "bs"
+
+    def __init__(self, bitswap: "Bitswap"):
+        self.bitswap = bitswap
+
+    @unary("bs.get", request=Fixed(BLOCK_REQ_SIZE), response=_BLOCK_RESP,
+           idempotent=True, timeout=120.0)
+    def get(self, payload: Any, ctx: RpcContext) -> Generator:
         cid: CID = payload
-        block = self.node.blockstore.get(cid)
+        bs = self.bitswap
+        block = bs.node.blockstore.get(cid)
         yield ctx.cpu(8e-6)
         if block is None:
-            return ("missing", None), 64
-        self.stats["blocks_served"] += 1
-        self.stats["bytes_served"] += len(block)
-        return ("block", block), max(len(block), 64)
+            return ("missing", None)
+        bs.stats["blocks_served"] += 1
+        bs.stats["bytes_served"] += len(block)
+        return ("block", block)
 
-    def _h_fetch_stream(self, chan: RpcChannel, ctx: RpcContext) -> Generator:
+    @streaming("bs.fetch")
+    def fetch(self, chan: RpcChannel, ctx: RpcContext) -> Generator:
         """Streaming plane: receive a wantlist, stream the blocks back under
         the channel's byte-credit backpressure (paper §2, streaming mode)."""
+        bs = self.bitswap
         try:
             wants = yield from chan.recv(timeout=60.0)
         except RpcError:
             return
-        self.stats["stream_sessions"] += 1
+        bs.stats["stream_sessions"] += 1
         for cid in wants:
-            block = self.node.blockstore.get(cid)
+            block = bs.node.blockstore.get(cid)
             yield ctx.cpu(8e-6)
             if block is not None:
-                self.stats["blocks_served"] += 1
-                self.stats["bytes_served"] += len(block)
+                bs.stats["blocks_served"] += 1
+                bs.stats["bytes_served"] += len(block)
             try:
                 yield from chan.send((cid, block),
                                      len(block) if block else 64)
             except RpcError:
                 return
         chan.end()
+
+
+class Bitswap:
+    def __init__(self, node: "LatticaNode"):
+        self.node = node
+        self.stats = {"blocks_served": 0, "blocks_fetched": 0,
+                      "bytes_served": 0, "bytes_fetched": 0, "retries": 0,
+                      "stream_sessions": 0}
+        node.serve(BitswapService(self))
 
     # ------------------------------------------------------------- client
     def _fetch_blocks_stream(self, info: PeerInfo,
@@ -80,8 +98,8 @@ class Bitswap:
         whatever verified blocks arrived (partial on provider failure)."""
         got: Dict[CID, bytes] = {}
         try:
-            conn = yield from self.node.connect_info(info)
-            chan = yield from open_channel(self.node.host, conn, "bs.fetch")
+            stub = self.node.stub(BitswapService, info)
+            chan = yield from stub.fetch()
             yield from chan.send(list(cids), 48 * len(cids))
             for _ in range(len(cids)):
                 cid, block = yield from chan.recv(timeout=120.0)
@@ -94,9 +112,8 @@ class Bitswap:
     def _fetch_block(self, info: PeerInfo, cid: CID) -> Generator:
         """Fetch one block from one provider; returns bytes or None."""
         try:
-            conn = yield from self.node.connect_info(info)
-            resp = yield from call_unary(self.node.host, conn, "bs.get", cid,
-                                         size=BLOCK_REQ_SIZE, timeout=120.0)
+            stub = self.node.stub(BitswapService, info)
+            resp = yield from stub.get(cid)
         except (DialError, RpcError):
             return None
         kind, block = resp

@@ -13,7 +13,9 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Generator, List, Optional, Set, Tuple, TYPE_CHECKING
 
 from .peer import Multiaddr, PeerId
-from .rpc import RpcContext, RpcError, call_unary
+from .rpc import RpcContext, RpcError
+from .service import (CodecFn, Fixed, PEER_INFO_LIST, Service, pickled,
+                      unary)
 from .simnet import DialError
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -87,6 +89,79 @@ class RoutingTable:
         return len(self._by_id)
 
 
+#: tagged-union response sizes for the value/provider lookups
+_FIND_VALUE_RESP = CodecFn(
+    "find_value_resp",
+    lambda p: 256 if p[0] == "value"
+    else PEERINFO_WIRE_SIZE * max(len(p[1]), 1))
+_GET_PROVIDERS_RESP = CodecFn(
+    "get_providers_resp",
+    lambda p: PEERINFO_WIRE_SIZE * max(len(p[0]) + len(p[1]), 1))
+
+
+class KadService(Service):
+    """The five Kademlia RPCs.  All are idempotent reads/upserts, so stubs
+    may retry them freely; eviction-on-failure stays in ``KademliaDHT``."""
+
+    name = "kad"
+
+    def __init__(self, dht: "KademliaDHT"):
+        self.dht = dht
+
+    def _observe(self, ctx: RpcContext) -> None:
+        info = self.dht.node.infos_by_host.get(ctx.remote_host.name)
+        if info is not None:
+            self.dht.table.update(info)
+
+    @unary("kad.find_node", request=Fixed(96), response=PEER_INFO_LIST,
+           idempotent=True, timeout=15.0)
+    def find_node(self, payload: Any, ctx: RpcContext) -> Generator:
+        self._observe(ctx)
+        closest = self.dht.table.closest(payload, self.dht.k)
+        yield ctx.cpu(5e-6)
+        return closest
+
+    @unary("kad.find_value", request=Fixed(96), response=_FIND_VALUE_RESP,
+           idempotent=True, timeout=15.0)
+    def find_value(self, payload: Any, ctx: RpcContext) -> Generator:
+        self._observe(ctx)
+        key = payload
+        yield ctx.cpu(5e-6)
+        if key in self.dht.records:
+            val, _ = self.dht.records[key]
+            return ("value", val)
+        return ("peers", self.dht.table.closest(key, self.dht.k))
+
+    @unary("kad.put", request=pickled(floor=96), response=Fixed(64),
+           idempotent=True, timeout=15.0)
+    def put(self, payload: Any, ctx: RpcContext) -> Generator:
+        self._observe(ctx)
+        key, value = payload
+        self.dht.records[key] = (value, self.dht.node.sim.now)
+        yield ctx.cpu(5e-6)
+        return True
+
+    @unary("kad.add_provider", request=Fixed(96 + PEERINFO_WIRE_SIZE),
+           response=Fixed(64), idempotent=True, timeout=15.0)
+    def add_provider(self, payload: Any, ctx: RpcContext) -> Generator:
+        self._observe(ctx)
+        key, info = payload
+        self.dht.providers.setdefault(key, {})[info.peer_id] = (
+            info, self.dht.node.sim.now)
+        yield ctx.cpu(5e-6)
+        return True
+
+    @unary("kad.get_providers", request=Fixed(96),
+           response=_GET_PROVIDERS_RESP, idempotent=True, timeout=15.0)
+    def get_providers(self, payload: Any, ctx: RpcContext) -> Generator:
+        self._observe(ctx)
+        key = payload
+        provs = [i for i, _ in self.dht.providers.get(key, {}).values()]
+        closest = self.dht.table.closest(key, self.dht.k)
+        yield ctx.cpu(5e-6)
+        return provs, closest
+
+
 class KademliaDHT:
     def __init__(self, node: "LatticaNode", k: int = K, alpha: int = ALPHA):
         self.node = node
@@ -96,66 +171,16 @@ class KademliaDHT:
         self.records: Dict[bytes, Tuple[Any, float]] = {}        # key -> (val, ts)
         self.providers: Dict[bytes, Dict[PeerId, Tuple[PeerInfo, float]]] = {}
         self.stats = {"lookups": 0, "rounds": 0, "queries": 0}
-        r = node.router
-        r.register_unary("kad.find_node", self._h_find_node)
-        r.register_unary("kad.find_value", self._h_find_value)
-        r.register_unary("kad.put", self._h_put)
-        r.register_unary("kad.add_provider", self._h_add_provider)
-        r.register_unary("kad.get_providers", self._h_get_providers)
-
-    # ------------------------------------------------------------- handlers
-    def _observe(self, ctx: RpcContext) -> None:
-        info = self.node.infos_by_host.get(ctx.remote_host.name)
-        if info is not None:
-            self.table.update(info)
-
-    def _h_find_node(self, payload: Any, ctx: RpcContext) -> Generator:
-        self._observe(ctx)
-        key = payload
-        closest = self.table.closest(key, self.k)
-        yield ctx.cpu(5e-6)
-        return closest, PEERINFO_WIRE_SIZE * max(len(closest), 1)
-
-    def _h_find_value(self, payload: Any, ctx: RpcContext) -> Generator:
-        self._observe(ctx)
-        key = payload
-        yield ctx.cpu(5e-6)
-        if key in self.records:
-            val, _ = self.records[key]
-            return ("value", val), 256
-        closest = self.table.closest(key, self.k)
-        return ("peers", closest), PEERINFO_WIRE_SIZE * max(len(closest), 1)
-
-    def _h_put(self, payload: Any, ctx: RpcContext) -> Generator:
-        self._observe(ctx)
-        key, value = payload
-        self.records[key] = (value, self.node.sim.now)
-        yield ctx.cpu(5e-6)
-        return True, 64
-
-    def _h_add_provider(self, payload: Any, ctx: RpcContext) -> Generator:
-        self._observe(ctx)
-        key, info = payload
-        self.providers.setdefault(key, {})[info.peer_id] = (info, self.node.sim.now)
-        yield ctx.cpu(5e-6)
-        return True, 64
-
-    def _h_get_providers(self, payload: Any, ctx: RpcContext) -> Generator:
-        self._observe(ctx)
-        key = payload
-        provs = [i for i, _ in self.providers.get(key, {}).values()]
-        closest = self.table.closest(key, self.k)
-        yield ctx.cpu(5e-6)
-        return (provs, closest), PEERINFO_WIRE_SIZE * max(len(provs) + len(closest), 1)
+        node.serve(KadService(self))
 
     # ------------------------------------------------------------- queries
     def _query(self, info: PeerInfo, method: str, payload: Any) -> Generator:
-        """Single RPC to one peer; returns None on failure (peer evicted)."""
+        """Single RPC to one peer (``method`` is a KadService attr name);
+        returns None on failure (peer evicted)."""
         self.stats["queries"] += 1
         try:
-            conn = yield from self.node.connect_info(info)
-            resp = yield from call_unary(self.node.host, conn, method, payload,
-                                         size=96, timeout=15.0)
+            stub = self.node.stub(KadService, info)
+            resp = yield from getattr(stub, method)(payload)
             self.table.update(info)
             return resp
         except (DialError, RpcError):
@@ -196,19 +221,19 @@ class KademliaDHT:
             for resp in results:
                 if resp is None:
                     continue
-                if method == "kad.find_value" and resp[0] == "value":
+                if method == "find_value" and resp[0] == "value":
                     found_value = resp[1]
                     if stop_on_value:
                         return found_value, self._top(shortlist, key), found_providers, rounds
                     continue
-                if method == "kad.get_providers":
+                if method == "get_providers":
                     provs, closer = resp
                     for pi in provs:
                         if pi.peer_id not in {x.peer_id for x in found_providers}:
                             found_providers.append(pi)
                             self.node.remember(pi)
                 else:
-                    closer = resp if method == "kad.find_node" else resp[1]
+                    closer = resp if method == "find_node" else resp[1]
                 for info in closer:
                     if info.peer_id == self.node.peer_id:
                         continue
@@ -219,7 +244,7 @@ class KademliaDHT:
                         if best_seen is None or d < best_seen:
                             best_seen = d
                             improved = True
-            if found_providers and method == "kad.get_providers" and stop_on_value:
+            if found_providers and method == "get_providers" and stop_on_value:
                 break
             if not improved:
                 # converged: stop once the k closest have all been queried
@@ -235,18 +260,18 @@ class KademliaDHT:
     # ------------------------------------------------------------- public API
     def bootstrap_lookup(self) -> Generator:
         """Self-lookup to populate the routing table."""
-        yield from self._lookup(self.node.peer_id.digest, "kad.find_node",
+        yield from self._lookup(self.node.peer_id.digest, "find_node",
                                 self.node.peer_id.digest)
 
     def find_node(self, key: bytes) -> Generator:
-        _, closest, _, _ = yield from self._lookup(key, "kad.find_node", key)
+        _, closest, _, _ = yield from self._lookup(key, "find_node", key)
         return closest
 
     def put(self, key: bytes, value: Any) -> Generator:
         """Store a record on the k closest peers."""
-        _, closest, _, _ = yield from self._lookup(key, "kad.find_node", key)
+        _, closest, _, _ = yield from self._lookup(key, "find_node", key)
         sim = self.node.sim
-        procs = [sim.process(self._query(i, "kad.put", (key, value)))
+        procs = [sim.process(self._query(i, "put", (key, value)))
                  for i in closest[: self.k]]
         self.records[key] = (value, sim.now)
         if procs:
@@ -257,16 +282,16 @@ class KademliaDHT:
         if key in self.records:
             return self.records[key][0]
         value, _, _, _ = yield from self._lookup(
-            key, "kad.find_value", key, stop_on_value=True)
+            key, "find_value", key, stop_on_value=True)
         return value
 
     def provide(self, key: bytes) -> Generator:
         """Announce this node as a provider for ``key`` (a CID digest)."""
         me = self.node.info()
         self.providers.setdefault(key, {})[me.peer_id] = (me, self.node.sim.now)
-        _, closest, _, _ = yield from self._lookup(key, "kad.find_node", key)
+        _, closest, _, _ = yield from self._lookup(key, "find_node", key)
         sim = self.node.sim
-        procs = [sim.process(self._query(i, "kad.add_provider", (key, me)))
+        procs = [sim.process(self._query(i, "add_provider", (key, me)))
                  for i in closest[: self.k]]
         if procs:
             yield sim.all_of(procs)
@@ -277,6 +302,6 @@ class KademliaDHT:
         if local and first_only:
             return local
         _, _, provs, _ = yield from self._lookup(
-            key, "kad.get_providers", key, stop_on_value=first_only)
+            key, "get_providers", key, stop_on_value=first_only)
         merged = {p.peer_id: p for p in local + provs}
         return list(merged.values())

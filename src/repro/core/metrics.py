@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from typing import Any, Dict, Iterable, List, TYPE_CHECKING
 
+from .service import MethodStats
+
 if TYPE_CHECKING:  # pragma: no cover
     from .node import LatticaNode
 
@@ -54,8 +56,39 @@ _DASH_COLS = [
 ]
 
 
+def rpc_method_stats(nodes: Iterable["LatticaNode"]) -> Dict[str, MethodStats]:
+    """Aggregate the metrics interceptor's client-side per-method stats
+    across a fleet: method -> merged calls/errors/latency reservoir."""
+    merged: Dict[str, MethodStats] = {}
+    for node in nodes:
+        for method, stats in node.rpc_metrics.client.items():
+            agg = merged.get(method)
+            if agg is None:
+                # unbounded: a bounded deque would silently keep only the
+                # last nodes' samples and skew the fleet percentiles
+                agg = merged[method] = MethodStats(maxlen=None)
+            agg.calls += stats.calls
+            agg.errors += stats.errors
+            agg.latencies.extend(stats.latencies)
+    return merged
+
+
+def rpc_method_table(nodes: Iterable["LatticaNode"]) -> str:
+    """Per-method RPC table (calls, errors, p50/p95 latency in ms)."""
+    merged = rpc_method_stats(nodes)
+    head = f"{'method':<22} {'calls':>7} {'errors':>6} {'p50_ms':>8} {'p95_ms':>8}"
+    lines = [head, "-" * len(head)]
+    for method in sorted(merged):
+        s = merged[method]
+        lines.append(f"{method:<22} {s.calls:>7} {s.errors:>6} "
+                     f"{s.percentile(0.50) * 1e3:>8.2f} "
+                     f"{s.percentile(0.95) * 1e3:>8.2f}")
+    return "\n".join(lines)
+
+
 def dashboard(nodes: Iterable["LatticaNode"]) -> str:
     """Fleet-wide text dashboard."""
+    nodes = list(nodes)
     rows = [node_snapshot(n) for n in nodes]
     head = " ".join(f"{name.split('.')[-1][:w]:>{w}}" for name, w in _DASH_COLS)
     lines = [head, "-" * len(head)]
@@ -71,4 +104,7 @@ def dashboard(nodes: Iterable["LatticaNode"]) -> str:
     }
     lines.append("-" * len(head))
     lines.append("fleet: " + "  ".join(f"{k}={v}" for k, v in totals.items()))
+    lines.append("")
+    lines.append("per-method RPC (client side, fleet-wide):")
+    lines.append(rpc_method_table(nodes))
     return "\n".join(lines)

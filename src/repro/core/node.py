@@ -12,7 +12,6 @@ identity + transport (dial/AutoNAT/relay/DCUtR) + RPC router + Kademlia DHT
 
 from __future__ import annotations
 
-import pickle
 from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
 
 from .bitswap import Bitswap
@@ -23,9 +22,52 @@ from .dht import KademliaDHT, PeerInfo
 from .peer import Multiaddr, PeerId
 from .pubsub import PubSub
 from .rendezvous import RendezvousServer
-from .rpc import RpcContext, RpcError, RpcRouter, call_unary
+from .rpc import RpcContext, RpcError, RpcRouter
+from .service import (ByteLength, ClientInterceptor, Fixed, PEER_INFO,
+                      RpcMetrics, Service, ServerInterceptor, Stub,
+                      serve_service, unary)
 from .simnet import Connection, DialError, Host, Network, Sim
 from .traversal import MAIN_PORT, Transport
+
+
+class IdentityService(Service):
+    """Push-pull identity exchange: each side learns the other's PeerInfo."""
+
+    name = "id"
+
+    def __init__(self, node: "LatticaNode"):
+        self.node = node
+
+    @unary("id.exchange", request=PEER_INFO, response=PEER_INFO,
+           idempotent=True, timeout=10.0)
+    def exchange(self, payload: Any, ctx: RpcContext) -> Generator:
+        self.node.remember(payload)
+        yield ctx.cpu(2e-6)
+        return self.node.info()
+
+
+class CrdtSyncService(Service):
+    """Anti-entropy pair: digest probe, then full state exchange+merge.
+    Both methods are idempotent — CRDT merge is, by definition."""
+
+    name = "crdt"
+
+    def __init__(self, node: "LatticaNode"):
+        self.node = node
+
+    @unary("crdt.digest", request=Fixed(96), response=Fixed(96),
+           idempotent=True, timeout=15.0)
+    def digest(self, payload: Any, ctx: RpcContext) -> Generator:
+        yield ctx.cpu(10e-6)
+        return self.node.store.digest()
+
+    @unary("crdt.exchange", request=ByteLength(), response=ByteLength(),
+           idempotent=True, timeout=60.0)
+    def exchange(self, payload: Any, ctx: RpcContext) -> Generator:
+        incoming = ReplicatedStore.deserialize(payload)
+        yield ctx.cpu(30e-6)
+        self.node.store.merge(incoming)
+        return self.node.store.serialize()
 
 
 class LatticaNode:
@@ -40,10 +82,14 @@ class LatticaNode:
         self.peer_id = PeerId.from_name(name)
         self.transport = Transport(self.host, self.peer_id)
         self.router = RpcRouter(self.host)
+        self.rpc_metrics = RpcMetrics()
+        self._stub_cache: Dict[Any, Stub] = {}
         self.blockstore = BlockStore()
         self.store = ReplicatedStore(replica=name)
         self.peers: Dict[PeerId, PeerInfo] = {}
         self.infos_by_host: Dict[str, PeerInfo] = {}
+        self.identity = self.serve(IdentityService(self))
+        self.crdt_sync = self.serve(CrdtSyncService(self))
         self.dht = KademliaDHT(self)
         self.pubsub = PubSub(self)
         self.bitswap = Bitswap(self)
@@ -51,9 +97,33 @@ class LatticaNode:
         self.rendezvous: Optional[RendezvousServer] = (
             RendezvousServer(self) if serve_rendezvous else None)
         self._upgrade_attempted: set = set()
-        self.router.register_unary("id.exchange", self._h_identify)
-        self.router.register_unary("crdt.digest", self._h_crdt_digest)
-        self.router.register_unary("crdt.exchange", self._h_crdt_exchange)
+
+    # ----------------------------------------------------------- service API
+    def serve(self, service: Service,
+              interceptors: List[ServerInterceptor] = ()) -> Service:
+        """Register every declared RPC method of ``service`` on this node."""
+        return serve_service(self.router, service, interceptors=interceptors,
+                             metrics=self.rpc_metrics)
+
+    def stub(self, service_cls: type, target: Optional[PeerInfo] = None, *,
+             conn: Optional[Connection] = None, scope: Optional[str] = None,
+             interceptors: List[ClientInterceptor] = ()) -> Stub:
+        """Typed client stub for ``service_cls`` at ``target`` (or over an
+        explicit ``conn``).  Connections are acquired lazily per call via
+        ``connect_info`` and reused.  Peer-targeted stubs without custom
+        interceptors are cached — hot paths (DHT lookups, gossip fan-out)
+        request one per RPC."""
+        if conn is None and not interceptors and target is not None:
+            key = (service_cls, target.peer_id, scope)
+            cached = self._stub_cache.get(key)
+            if cached is not None:
+                cached._target = target      # refresh the PeerInfo snapshot
+                return cached
+            made = Stub(self, service_cls, target, scope=scope)
+            self._stub_cache[key] = made
+            return made
+        return Stub(self, service_cls, target, conn=conn, scope=scope,
+                    interceptors=interceptors)
 
     # ------------------------------------------------------------- identity
     def info(self) -> PeerInfo:
@@ -79,11 +149,6 @@ class LatticaNode:
         self.peers[info.peer_id] = info
         self.infos_by_host[info.host_name] = info
         self.dht.table.update(info)
-
-    def _h_identify(self, payload: Any, ctx: RpcContext) -> Generator:
-        self.remember(payload)
-        yield ctx.cpu(2e-6)
-        return self.info(), 96
 
     # ------------------------------------------------------------ connecting
     def connect_info(self, info: PeerInfo) -> Generator:
@@ -139,8 +204,8 @@ class LatticaNode:
 
     def _identify(self, conn: Connection) -> Generator:
         try:
-            their = yield from call_unary(self.host, conn, "id.exchange",
-                                          self.info(), size=96, timeout=10.0)
+            stub = self.stub(IdentityService, conn=conn)
+            their = yield from stub.exchange(self.info())
             self.remember(their)
         except (RpcError, DialError):
             pass
@@ -199,27 +264,14 @@ class LatticaNode:
         return ok
 
     # ------------------------------------------------------------------ CRDT
-    def _h_crdt_digest(self, payload: Any, ctx: RpcContext) -> Generator:
-        yield ctx.cpu(10e-6)
-        return self.store.digest(), 96
-
-    def _h_crdt_exchange(self, payload: Any, ctx: RpcContext) -> Generator:
-        incoming = ReplicatedStore.deserialize(payload)
-        yield ctx.cpu(30e-6)
-        self.store.merge(incoming)
-        out = self.store.serialize()
-        return out, max(len(out), 64)
-
     def sync_crdt_with(self, info: PeerInfo) -> Generator:
         """One anti-entropy round with one peer; returns True if state moved."""
-        conn = yield from self.connect_info(info)
-        theirs = yield from call_unary(self.host, conn, "crdt.digest", None,
-                                       size=96, timeout=15.0)
+        stub = self.stub(CrdtSyncService, info)
+        theirs = yield from stub.digest()
         if theirs == self.store.digest():
             return False
         mine = self.store.serialize()
-        resp = yield from call_unary(self.host, conn, "crdt.exchange", mine,
-                                     size=max(len(mine), 64), timeout=60.0)
+        resp = yield from stub.exchange(mine)
         self.store.merge(ReplicatedStore.deserialize(resp))
         return True
 

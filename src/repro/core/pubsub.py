@@ -13,7 +13,8 @@ from collections import OrderedDict
 from typing import Any, Callable, Dict, Generator, List, Set, TYPE_CHECKING
 
 from .peer import PeerId
-from .rpc import RpcContext, RpcError, call_unary
+from .rpc import RpcContext, RpcError
+from .service import DeclaredSizeCodec, Fixed, Service, pickled, unary
 from .simnet import DialError
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -25,6 +26,46 @@ SEEN_CACHE = 4096
 _seq = itertools.count(1)
 
 
+class PubSubService(Service):
+    """Gossip wire surface: message push + lazy subscription exchange.
+
+    ``msg`` is deliberately *not* idempotent at the stub level — the flood
+    already dedups via the seen-cache, and stub retries would distort the
+    gossip fan-out accounting.  The message payload carries its declared
+    application size as the last tuple element (``DeclaredSizeCodec``)."""
+
+    name = "ps"
+
+    def __init__(self, pubsub: "PubSub"):
+        self.pubsub = pubsub
+
+    @unary("ps.msg", request=DeclaredSizeCodec(), response=Fixed(64),
+           timeout=15.0)
+    def msg(self, payload: Any, ctx: RpcContext) -> Generator:
+        topic, data, mid, from_peer, size = payload
+        ps = self.pubsub
+        yield ctx.cpu(3e-6)
+        if not ps._mark_seen(mid):
+            ps.stats["duplicates"] += 1
+            return True
+        for cb in ps.subscriptions.get(topic, []):
+            ps.stats["delivered"] += 1
+            cb(topic, data, from_peer)
+        # re-flood to our mesh (eager push), preserving the declared size
+        ps.node.sim.process(ps._forward(
+            topic, data, mid, size,
+            exclude={from_peer, ps.node.peer_id}))
+        return True
+
+    @unary("ps.sub", request=pickled(floor=96), response=pickled(floor=96),
+           idempotent=True, timeout=15.0)
+    def sub(self, payload: Any, ctx: RpcContext) -> Generator:
+        peer_id, topics = payload
+        self.pubsub.peer_topics[peer_id] = set(topics)
+        yield ctx.cpu(2e-6)
+        return sorted(self.pubsub.subscriptions)
+
+
 class PubSub:
     def __init__(self, node: "LatticaNode"):
         self.node = node
@@ -32,8 +73,7 @@ class PubSub:
         self.peer_topics: Dict[PeerId, Set[str]] = {}
         self._seen: "OrderedDict[bytes, None]" = OrderedDict()
         self.stats = {"published": 0, "delivered": 0, "forwarded": 0, "duplicates": 0}
-        node.router.register_unary("ps.msg", self._h_msg)
-        node.router.register_unary("ps.sub", self._h_sub)
+        node.serve(PubSubService(self))
 
     # -- subscription management ---------------------------------------------
     def subscribe(self, topic: str, callback: Callable[[str, Any, PeerId], None]) -> None:
@@ -45,19 +85,12 @@ class PubSub:
         if info is None:
             return None
         try:
-            conn = yield from self.node.connect_info(info)
-            yield from call_unary(self.node.host, conn, "ps.sub",
-                                  (self.node.peer_id, sorted(self.subscriptions)),
-                                  size=96)
+            stub = self.node.stub(PubSubService, info)
+            yield from stub.sub((self.node.peer_id,
+                                 sorted(self.subscriptions)))
         except (DialError, RpcError):
             pass
         return None
-
-    def _h_sub(self, payload: Any, ctx: RpcContext) -> Generator:
-        peer_id, topics = payload
-        self.peer_topics[peer_id] = set(topics)
-        yield ctx.cpu(2e-6)
-        return sorted(self.subscriptions), 96
 
     # -- message flow -----------------------------------------------------------
     def _msg_id(self, topic: str, data: Any, origin: PeerId, seq: int) -> bytes:
@@ -115,24 +148,9 @@ class PubSub:
     def _send_one(self, info: Any, topic: str, data: Any, mid: bytes,
                   size: int) -> Generator:
         try:
-            conn = yield from self.node.connect_info(info)
-            yield from call_unary(self.node.host, conn, "ps.msg",
-                                  (topic, data, mid, self.node.peer_id), size=size)
+            stub = self.node.stub(PubSubService, info)
+            yield from stub.msg((topic, data, mid, self.node.peer_id, size))
             self.stats["forwarded"] += 1
         except (DialError, RpcError):
             pass
         return None
-
-    def _h_msg(self, payload: Any, ctx: RpcContext) -> Generator:
-        topic, data, mid, from_peer = payload
-        yield ctx.cpu(3e-6)
-        if not self._mark_seen(mid):
-            self.stats["duplicates"] += 1
-            return True, 64
-        for cb in self.subscriptions.get(topic, []):
-            self.stats["delivered"] += 1
-            cb(topic, data, from_peer)
-        # re-flood to our mesh (eager push)
-        self.node.sim.process(self._forward(
-            topic, data, mid, 256, exclude={from_peer, self.node.peer_id}))
-        return True, 64

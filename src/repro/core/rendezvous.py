@@ -11,8 +11,8 @@ from __future__ import annotations
 from typing import Any, Dict, Generator, List, Tuple, TYPE_CHECKING
 
 from .dht import PeerInfo
-from .rpc import RpcContext, RpcError, call_unary
-from .simnet import DialError
+from .rpc import RpcContext
+from .service import Fixed, PEER_INFO_LIST, Service, unary
 
 if TYPE_CHECKING:  # pragma: no cover
     from .node import LatticaNode
@@ -20,42 +20,52 @@ if TYPE_CHECKING:  # pragma: no cover
 DEFAULT_TTL = 7200.0
 
 
+class RendezvousService(Service):
+    """Namespace registry: register under a fleet name, discover registrants.
+    Both methods are idempotent (re-register just refreshes the TTL)."""
+
+    name = "rdv"
+
+    def __init__(self, server: "RendezvousServer"):
+        self.server = server
+
+    @unary("rdv.register", request=Fixed(128), response=Fixed(64),
+           idempotent=True, timeout=15.0)
+    def register(self, payload: Any, ctx: RpcContext) -> Generator:
+        ns, info, ttl = payload
+        self.server.registrations.setdefault(ns, {})[info.peer_id.digest] = (
+            info, self.server.node.sim.now + ttl)
+        yield ctx.cpu(3e-6)
+        return True
+
+    @unary("rdv.discover", request=Fixed(96), response=PEER_INFO_LIST,
+           idempotent=True, timeout=15.0)
+    def discover(self, payload: Any, ctx: RpcContext) -> Generator:
+        ns = payload
+        now = self.server.node.sim.now
+        entries = self.server.registrations.get(ns, {})
+        live = [i for i, (info, exp) in entries.items() if exp > now]
+        yield ctx.cpu(3e-6)
+        return [entries[k][0] for k in live]
+
+
 class RendezvousServer:
     def __init__(self, node: "LatticaNode"):
         self.node = node
         self.registrations: Dict[str, Dict[bytes, Tuple[PeerInfo, float]]] = {}
-        node.router.register_unary("rdv.register", self._h_register)
-        node.router.register_unary("rdv.discover", self._h_discover)
-
-    def _h_register(self, payload: Any, ctx: RpcContext) -> Generator:
-        ns, info, ttl = payload
-        self.registrations.setdefault(ns, {})[info.peer_id.digest] = (
-            info, self.node.sim.now + ttl)
-        yield ctx.cpu(3e-6)
-        return True, 64
-
-    def _h_discover(self, payload: Any, ctx: RpcContext) -> Generator:
-        ns = payload
-        now = self.node.sim.now
-        entries = self.registrations.get(ns, {})
-        live = [i for i, (info, exp) in entries.items() if exp > now]
-        infos = [entries[k][0] for k in live]
-        yield ctx.cpu(3e-6)
-        return infos, 96 * max(len(infos), 1)
+        node.serve(RendezvousService(self))
 
 
 def register(node: "LatticaNode", rdv: PeerInfo, namespace: str,
              ttl: float = DEFAULT_TTL) -> Generator:
-    conn = yield from node.connect_info(rdv)
-    ok = yield from call_unary(node.host, conn, "rdv.register",
-                               (namespace, node.info(), ttl), size=128)
+    stub = node.stub(RendezvousService, rdv)
+    ok = yield from stub.register((namespace, node.info(), ttl))
     return ok
 
 
 def discover(node: "LatticaNode", rdv: PeerInfo, namespace: str) -> Generator:
-    conn = yield from node.connect_info(rdv)
-    infos = yield from call_unary(node.host, conn, "rdv.discover", namespace,
-                                  size=96)
+    stub = node.stub(RendezvousService, rdv)
+    infos = yield from stub.discover(namespace)
     for i in infos:
         node.remember(i)
     return infos

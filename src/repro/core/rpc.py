@@ -177,6 +177,13 @@ class RpcChannel:
             elif kind == "end":
                 self._remote_ended = True
                 self._wake_inbox()
+                # A graceful end must also wake senders blocked on credit,
+                # exactly like the DialError path: they re-check
+                # _remote_ended and raise instead of hanging forever.
+                for w in self._credit_waiters:
+                    if not w.triggered:
+                        w.succeed()
+                return  # "end" is the peer's final frame; park the pump
 
     def _wake_inbox(self) -> None:
         if self._inbox_waiter is not None and not self._inbox_waiter.triggered:

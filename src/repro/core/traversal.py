@@ -19,7 +19,14 @@ import itertools
 from typing import Dict, Generator, List, Optional, Set, Tuple
 
 from .peer import Multiaddr, PeerId
+from .service import stream_request
 from .simnet import Connection, DialError, Host, Network, Sim, Stream
+
+# NOTE: traversal control messages run *below* the typed service plane of
+# ``service.py`` — they execute while the connection (or even reachability)
+# is still being established, so no RPC router is addressable yet.  The
+# request/response exchanges that do run over streams share the service
+# layer's ``stream_request`` helper instead of hand-rolling send/recv/close.
 
 Addr = Tuple[str, int]
 
@@ -137,9 +144,7 @@ class Transport:
         """Returns measured RTT over the connection."""
         t0 = self.sim.now
         stream = conn.open_stream(PROTO_PING, self.host)
-        stream.send(("ping", t0), 64)
-        yield from stream.recv(timeout=10.0)
-        stream.close()
+        yield from stream_request(stream, ("ping", t0), 64, timeout=10.0)
         return self.sim.now - t0
 
     # ------------------------------------------------------------ hole punch
@@ -266,13 +271,12 @@ class Transport:
                 break
         if helper_conn is not None:
             fwd = helper_conn.open_stream(PROTO_AUTONAT_FWD, self.host)
-            fwd.send(("probe", addr), 96)
             try:
-                resp = yield from fwd.recv(timeout=5.0)
+                resp = yield from stream_request(fwd, ("probe", addr), 96,
+                                                 timeout=5.0)
                 ok = bool(resp[1])
             except DialError:
                 ok = False
-            fwd.close()
         else:
             ok = yield from self.probe_addr(tuple(addr))
         stream.send(("dialback", ok), 64)
@@ -284,13 +288,12 @@ class Transport:
             return self.reachability
         addr = sorted(self.observed_addrs)[0]
         stream = helper_conn.open_stream(PROTO_AUTONAT, self.host)
-        stream.send(("probe", addr), 96)
         try:
-            msg = yield from stream.recv(timeout=5.0)
+            msg = yield from stream_request(stream, ("probe", addr), 96,
+                                            timeout=5.0)
             ok = bool(msg[1])
         except DialError:
             ok = False
-        stream.close()
         self.reachability = "public" if ok else "private"
         return self.reachability
 
@@ -340,9 +343,9 @@ class Transport:
         """Client: reserve a slot on a relay (listen via circuit)."""
         self.host.handle(PROTO_RELAY_STOP, self._relay_stop_handler)
         stream = relay_conn.open_stream(PROTO_RELAY_RESERVE, self.host)
-        stream.send(("reserve", self.peer_id.digest, self.host.name), 96)
-        msg = yield from stream.recv(timeout=5.0)
-        stream.close()
+        msg = yield from stream_request(
+            stream, ("reserve", self.peer_id.digest, self.host.name), 96,
+            timeout=5.0)
         return bool(msg[1])
 
     def _relay_stop_handler(self, stream: Stream) -> Generator:
@@ -355,9 +358,9 @@ class Transport:
     def relay_connect(self, relay_conn: Connection, target: PeerId) -> Generator:
         """Client: open a circuit to ``target`` through a connected relay."""
         stream = relay_conn.open_stream(PROTO_RELAY_CONNECT, self.host)
-        stream.send(("connect", target.digest, self.host.name), 96)
-        msg = yield from stream.recv(timeout=10.0)
-        stream.close()
+        msg = yield from stream_request(
+            stream, ("connect", target.digest, self.host.name), 96,
+            timeout=10.0)
         if msg[0] != "ok":
             raise DialError(f"relay circuit failed: {msg[1]}")
         self.stats["relayed"] += 1

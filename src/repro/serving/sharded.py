@@ -23,7 +23,9 @@ import numpy as np
 
 from repro.core.dht import PeerInfo
 from repro.core.node import LatticaNode
-from repro.core.rpc import RpcContext, RpcError, call_unary
+from repro.core.rpc import RpcContext, RpcError
+from repro.core.service import (RpcStatus, Service, ServiceError,
+                                TensorDictCodec, unary)
 from repro.core.simnet import DialError
 from repro.models import decoder
 from repro.models.common import rms_norm
@@ -144,6 +146,28 @@ class ShardModule:
         return 2.0 * tokens * per_layer * self.n_layers
 
 
+class InferenceService(Service):
+    """One pipeline shard's RPC surface.  ``scope`` carries the fleet name
+    and shard index, so each shard serves ``infer.<fleet>.<i>``.  The infer
+    method is *not* idempotent (decode advances per-session KV caches);
+    failover is handled explicitly by :class:`ShardClient`."""
+
+    name = "infer"
+
+    def __init__(self, server: "ShardServer"):
+        self.server = server
+        self.scope = f"{server.fleet}.{server.shard_idx}"
+
+    @unary("infer", request=TensorDictCodec(), response=TensorDictCodec(),
+           timeout=120.0)
+    def infer(self, payload: Any, ctx: RpcContext) -> Generator:
+        if not self.server.alive:
+            raise ServiceError(RpcStatus.UNAVAILABLE,
+                               f"shard {self.server.shard_idx} is down")
+        resp = yield from self.server._handle(payload, ctx)
+        return resp
+
+
 class ShardServer:
     def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
                  shard_idx: int, module: ShardModule):
@@ -155,7 +179,7 @@ class ShardServer:
         self.sessions: Dict[Any, Dict[str, Any]] = {}
         self.alive = True
         self.stats = {"prefill": 0, "decode": 0, "score": 0}
-        node.router.register_unary(f"infer.{fleet}.{shard_idx}", self._handler)
+        node.serve(InferenceService(self))
 
     def announce(self) -> Generator:
         yield from self.node.dht.provide(shard_key(self.fleet, self.shard_idx))
@@ -165,9 +189,7 @@ class ShardServer:
         """Simulate a crash: all subsequent calls fail."""
         self.alive = False
 
-    def _handler(self, payload: Any, ctx: RpcContext) -> Generator:
-        if not self.alive:
-            raise RpcError(f"shard {self.shard_idx} is down")
+    def _handle(self, payload: Any, ctx: RpcContext) -> Generator:
         op = payload["op"]
         m = self.module
         if op == "prefill":
@@ -188,8 +210,7 @@ class ShardServer:
             else:
                 out = out
             yield ctx.cpu(m.flops(B * S) / PEER_FLOPS)
-            out_np = np.asarray(out)
-            return {"x": out_np}, out_np.nbytes
+            return {"x": np.asarray(out)}
         if op == "decode":
             self.stats["decode"] += 1
             cache = self.sessions[payload["session"]]
@@ -206,8 +227,7 @@ class ShardServer:
             if m.is_last:
                 out = m.head(out)[:, 0]
             yield ctx.cpu(m.flops(B) / PEER_FLOPS)
-            out_np = np.asarray(out)
-            return {"x": out_np}, out_np.nbytes
+            return {"x": np.asarray(out)}
         if op == "score":
             self.stats["score"] += 1
             x = jnp.asarray(payload["x"])
@@ -222,9 +242,8 @@ class ShardServer:
             if m.is_last:
                 out = m.head(out)
             yield ctx.cpu(m.flops(B * S) / PEER_FLOPS)
-            out_np = np.asarray(out)
-            return {"x": out_np}, out_np.nbytes
-        raise RpcError(f"unknown op {op}")
+            return {"x": np.asarray(out)}
+        raise ServiceError(RpcStatus.NOT_FOUND, f"unknown op {op}")
 
 
 class ShardClient:
@@ -247,20 +266,16 @@ class ShardClient:
                 p for p in provs if p.peer_id != self.node.peer_id]
         return self._providers[idx]
 
-    def _call_shard(self, idx: int, payload: Dict[str, Any],
-                    size: int) -> Generator:
+    def _call_shard(self, idx: int, payload: Dict[str, Any]) -> Generator:
         provs = yield from self._resolve(idx)
-        tried = 0
         last: Optional[Exception] = None
         for round_ in range(2):
             for info in list(provs):
-                tried += 1
                 self.stats["calls"] += 1
                 try:
-                    conn = yield from self.node.connect_info(info)
-                    resp = yield from call_unary(
-                        self.node.host, conn, f"infer.{self.fleet}.{idx}",
-                        payload, size=size, timeout=120.0)
+                    stub = self.node.stub(InferenceService, info,
+                                          scope=f"{self.fleet}.{idx}")
+                    resp = yield from stub.infer(payload)
                     return resp
                 except (RpcError, DialError) as e:
                     last = e
@@ -277,7 +292,7 @@ class ShardClient:
         for i in range(self.n_shards):
             payload = {"op": "prefill", "session": session, "x": x,
                        "max_len": max_len}
-            resp = yield from self._call_shard(i, payload, size=x.nbytes)
+            resp = yield from self._call_shard(i, payload)
             x = resp["x"]
         return session, x                        # x = last-position logits
 
@@ -285,7 +300,7 @@ class ShardClient:
         x: Any = token
         for i in range(self.n_shards):
             payload = {"op": "decode", "session": session, "x": x}
-            resp = yield from self._call_shard(i, payload, size=x.nbytes)
+            resp = yield from self._call_shard(i, payload)
             x = resp["x"]
         return x
 
@@ -293,7 +308,7 @@ class ShardClient:
         x: Any = tokens
         for i in range(self.n_shards):
             payload = {"op": "score", "x": x}
-            resp = yield from self._call_shard(i, payload, size=x.nbytes)
+            resp = yield from self._call_shard(i, payload)
             x = resp["x"]
         return x
 

@@ -8,3 +8,41 @@ os.environ.pop("XLA_FLAGS", None)
 _root = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, _root)                       # for the benchmarks package
 sys.path.insert(0, os.path.join(_root, "src"))
+
+# ---------------------------------------------------------------------------
+# hypothesis shim: several modules hard-import hypothesis for property tests.
+# When it isn't installed, install a stand-in whose @given/@settings turn the
+# decorated test into a clean runtime skip, so the rest of each module's
+# (non-property) tests still collect and run instead of aborting collection.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import types
+
+    import pytest as _pytest
+
+    def _skipping_decorator(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                _pytest.skip("hypothesis not installed")
+            skipper.__name__ = getattr(fn, "__name__", "property_test")
+            skipper.__doc__ = getattr(fn, "__doc__", None)
+            return skipper
+        return deco
+
+    class _AnyStrategy:
+        """Absorbs any strategy-construction expression at import time."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *_args, **_kwargs):
+            return self
+
+    _shim = types.ModuleType("hypothesis")
+    _shim.given = _skipping_decorator
+    _shim.settings = _skipping_decorator
+    _shim.strategies = _AnyStrategy()
+    _shim.__is_shim__ = True
+    sys.modules["hypothesis"] = _shim

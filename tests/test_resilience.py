@@ -80,4 +80,8 @@ def test_metrics_snapshot_and_dashboard():
     assert snap["n_connections"] >= 1          # bootstrapped
     dash = dashboard(fleet.all_nodes)
     assert "fleet:" in dash
-    assert len(dash.splitlines()) == len(fleet.all_nodes) + 4
+    assert len(dash.splitlines()) >= len(fleet.all_nodes) + 4
+    # per-method RPC section (fed by the service-layer metrics interceptor)
+    assert "per-method RPC" in dash
+    assert "id.exchange" in dash            # bootstrap identity exchanges
+    assert "kad.find_node" in dash          # DHT self-lookups

@@ -83,6 +83,32 @@ def test_streaming_backpressure_blocks_writer():
     assert res["max_outstanding"] <= (INIT_CREDIT // MSG) + 2
 
 
+def test_graceful_end_wakes_blocked_sender():
+    """Regression: a graceful "end" frame must wake credit-blocked senders.
+
+    The reader consumes one message (not enough to trigger a credit grant)
+    and ends the channel; a writer blocked in send() waiting for credit must
+    raise RpcError instead of deadlocking the simulation forever.
+    """
+    sim, a, b, conn = _pair()
+    MSG = 300 * 1024          # window = 1 MiB -> 4th send blocks on credit
+
+    def lazy_reader(chan, ctx):
+        yield from chan.recv()            # 300 KiB < grant threshold: no credit
+        chan.end()                        # graceful close, inbox not drained
+
+    b.router.register_streaming("t.lazy", lazy_reader)
+
+    def writer():
+        chan = yield from open_channel(a.host, conn, "t.lazy")
+        for i in range(8):
+            yield from chan.send(("blob", i), MSG)
+        return "all sent"
+
+    with pytest.raises(RpcError):
+        sim.run_process(writer(), until=sim.now + 60)
+
+
 def test_concurrent_unary_calls():
     sim, a, b, conn = _pair()
     served = []

@@ -1,0 +1,340 @@
+"""Typed service layer: error mapping, deadlines, retries, interceptors,
+codec-computed wire sizes, per-method metrics."""
+
+import pytest
+
+from repro.core import LatticaNode, Network, RpcStatus, ServiceError, Sim
+from repro.core.dht import PEERINFO_WIRE_SIZE, PeerInfo
+from repro.core.metrics import dashboard, rpc_method_stats
+from repro.core.peer import Multiaddr, PeerId
+from repro.core.service import (ByteLength, ClientInterceptor, CONTROL,
+                                DeclaredSizeCodec, Fixed, PEER_INFO,
+                                PEER_INFO_LIST, Service, ServerInterceptor,
+                                TensorDictCodec, pickled, streaming, unary)
+
+
+def _pair(seed=0):
+    sim = Sim(seed=seed)
+    net = Network(sim)
+    a = LatticaNode(net, "a", region="us", zone="a")
+    b = LatticaNode(net, "b", region="us", zone="a")
+    sim.run_process(a.connect_info(b.info()))
+    return sim, a, b
+
+
+class EchoService(Service):
+    name = "t"
+
+    def __init__(self):
+        self.calls = 0
+        self.fail_first = 0          # raise UNAVAILABLE for the first N calls
+        self.delay = 0.0
+
+    @unary("t.echo", request=Fixed(96), response=pickled(floor=64),
+           idempotent=True, timeout=5.0, backoff=0.01)
+    def echo(self, payload, ctx):
+        self.calls += 1
+        if self.calls <= self.fail_first:
+            raise ServiceError(RpcStatus.UNAVAILABLE, "induced flake")
+        if self.delay:
+            yield self.delay
+        yield ctx.cpu(1e-6)
+        return ("echo", payload)
+
+    @unary("t.write", request=Fixed(96), response=Fixed(64),
+           idempotent=False, timeout=5.0, backoff=0.01)
+    def write(self, payload, ctx):
+        self.calls += 1
+        if self.calls <= self.fail_first:
+            raise ServiceError(RpcStatus.UNAVAILABLE, "induced flake")
+        yield ctx.cpu(1e-6)
+        return True
+
+    @unary("t.boom", request=Fixed(96), response=Fixed(64), timeout=5.0)
+    def boom(self, payload, ctx):
+        yield ctx.cpu(1e-6)
+        raise RuntimeError("kaboom")
+
+    @unary("t.slow", request=Fixed(96), response=Fixed(64),
+           idempotent=False, timeout=0.5)
+    def slow(self, payload, ctx):
+        yield 10.0
+        return True
+
+    @streaming("t.squares")
+    def squares(self, chan, ctx):
+        for i in range(4):
+            yield from chan.send(i * i, 64)
+        chan.end()
+
+
+# ---------------------------------------------------------------- basics
+
+
+def test_unary_roundtrip_and_streaming():
+    sim, a, b = _pair()
+    b.serve(EchoService())
+    stub = a.stub(EchoService, b.info())
+
+    def run():
+        r = yield from stub.echo({"x": 1})
+        chan = yield from stub.squares()
+        got = []
+        try:
+            while True:
+                got.append((yield from chan.recv(timeout=5.0)))
+        except Exception:
+            pass
+        return r, got
+
+    r, got = sim.run_process(run())
+    assert r == ("echo", {"x": 1})
+    assert got == [0, 1, 4, 9]
+
+
+# ---------------------------------------------------------- error mapping
+
+
+def test_internal_error_is_typed():
+    sim, a, b = _pair()
+    b.serve(EchoService())
+    stub = a.stub(EchoService, b.info())
+
+    def run():
+        yield from stub.boom(None)
+
+    with pytest.raises(ServiceError) as ei:
+        sim.run_process(run())
+    assert ei.value.status is RpcStatus.INTERNAL
+    assert "kaboom" in ei.value.detail
+
+
+def test_unknown_method_maps_to_not_found():
+    sim, a, b = _pair()
+    # b does NOT serve EchoService
+    stub = a.stub(EchoService, b.info())
+
+    def run():
+        yield from stub.write(None)
+
+    with pytest.raises(ServiceError) as ei:
+        sim.run_process(run())
+    assert ei.value.status is RpcStatus.NOT_FOUND
+
+
+def test_unreachable_peer_maps_to_unavailable():
+    sim = Sim(seed=3)
+    net = Network(sim)
+    a = LatticaNode(net, "a")
+    ghost = PeerInfo(PeerId.from_name("ghost"), "ghost",
+                     (Multiaddr("203.0.250.1", 4001),))
+
+    def run():
+        stub = a.stub(EchoService, ghost)
+        yield from stub.write(None)
+
+    with pytest.raises(ServiceError) as ei:
+        sim.run_process(run(), until=sim.now + 600)
+    assert ei.value.status is RpcStatus.UNAVAILABLE
+
+
+def test_deadline_expiry():
+    sim, a, b = _pair()
+    b.serve(EchoService())
+    stub = a.stub(EchoService, b.info())
+
+    def run():
+        t0 = sim.now
+        try:
+            yield from stub.slow(None)
+            return None
+        except ServiceError as e:
+            return e.status, sim.now - t0
+
+    status, elapsed = sim.run_process(run())
+    assert status is RpcStatus.DEADLINE_EXCEEDED
+    assert 0.5 <= elapsed < 2.0              # spec timeout, not handler time
+
+
+# ------------------------------------------------------------------ retries
+
+
+def test_idempotent_retry_succeeds_on_second_attempt():
+    sim, a, b = _pair()
+    svc = b.serve(EchoService())
+    svc.fail_first = 1
+    stub = a.stub(EchoService, b.info())
+
+    def run():
+        r = yield from stub.echo("hi")
+        return r
+
+    assert sim.run_process(run()) == ("echo", "hi")
+    assert svc.calls == 2                    # first attempt flaked, retry won
+
+
+def test_non_idempotent_never_retries():
+    sim, a, b = _pair()
+    svc = b.serve(EchoService())
+    svc.fail_first = 1
+    stub = a.stub(EchoService, b.info())
+
+    def run():
+        yield from stub.write("hi")
+
+    with pytest.raises(ServiceError) as ei:
+        sim.run_process(run())
+    assert ei.value.status is RpcStatus.UNAVAILABLE
+    assert svc.calls == 1                    # exactly one attempt, no retry
+
+
+# -------------------------------------------------------------- interceptors
+
+
+def test_interceptor_ordering():
+    sim, a, b = _pair()
+    order = []
+
+    class Tracer(ClientInterceptor):
+        def __init__(self, tag):
+            self.tag = tag
+
+        def intercept(self, call, proceed):
+            order.append(f"{self.tag}>")
+            resp = yield from proceed(call)
+            order.append(f"<{self.tag}")
+            return resp
+
+    class ServerTracer(ServerInterceptor):
+        def __init__(self, tag):
+            self.tag = tag
+
+        def intercept(self, info, payload, ctx, proceed):
+            order.append(f"{self.tag}>")
+            resp = yield from proceed(payload, ctx)
+            order.append(f"<{self.tag}")
+            return resp
+
+    b.serve(EchoService(), interceptors=[ServerTracer("s1"),
+                                         ServerTracer("s2")])
+    stub = a.stub(EchoService, b.info(),
+                  interceptors=[Tracer("c1"), Tracer("c2")])
+
+    def run():
+        yield from stub.echo(1)
+
+    sim.run_process(run())
+    assert order == ["c1>", "c2>", "s1>", "s2>", "<s2", "<s1", "<c2", "<c1"]
+
+
+# ------------------------------------------------------------------- codecs
+
+
+def test_codec_sizes_match_historical_constants():
+    """Codec-computed sizes must stay within 2x of the hand-tuned wire-size
+    constants the call sites used to pass."""
+    info = PeerInfo(PeerId.from_name("x"), "x", (Multiaddr("1.2.3.4", 4001),))
+
+    def within_2x(computed, historical):
+        return historical / 2 <= computed <= historical * 2
+
+    assert PEER_INFO.size_of(info) == PEERINFO_WIRE_SIZE
+    assert PEER_INFO_LIST.size_of([info] * 5) == 5 * PEERINFO_WIRE_SIZE
+    assert PEER_INFO_LIST.size_of([]) == PEERINFO_WIRE_SIZE
+    assert CONTROL.size_of(None) == 64
+    # crdt.exchange used max(len(blob), 64)
+    blob = b"z" * 5000
+    assert ByteLength().size_of(blob) == 5000
+    assert ByteLength().size_of(b"") == 64
+    # ps.msg used a caller-declared size as the wire size
+    assert DeclaredSizeCodec().size_of(("t", "data", b"m", None, 192)) == 192
+    # id.exchange used size=96 for one PeerInfo
+    assert within_2x(pickled(floor=64).size_of((1, "small")), 64)
+    # infer.* used activation nbytes
+    import numpy as np
+    x = np.zeros((2, 8), dtype=np.float32)
+    assert TensorDictCodec().size_of({"op": "decode", "x": x}) == x.nbytes
+    assert Fixed(96).size_of("anything") == 96
+
+
+# ------------------------------------------------------------------ metrics
+
+
+def test_per_method_metrics_and_dashboard():
+    sim, a, b = _pair()
+    svc = b.serve(EchoService())
+    stub = a.stub(EchoService, b.info())
+    served_before = b.router.stats["unary_served"]   # identify from _pair
+
+    def run():
+        for i in range(5):
+            yield from stub.echo(i)
+        try:
+            yield from stub.boom(None)
+        except ServiceError:
+            pass
+
+    sim.run_process(run())
+    client = a.rpc_metrics.client
+    assert client["t.echo"].calls == 5 and client["t.echo"].errors == 0
+    assert client["t.boom"].calls == 1 and client["t.boom"].errors == 1
+    # router counters keep pre-service-layer semantics even though failures
+    # now travel in-band: errors = handler failures, unary_served = successes
+    assert b.router.stats["errors"] == 1
+    assert b.router.stats["unary_served"] == served_before + 5
+    assert client["t.echo"].percentile(0.50) > 0
+    assert client["t.echo"].percentile(0.95) >= client["t.echo"].percentile(0.50)
+    assert b.rpc_metrics.server["t.echo"].calls == 5
+    merged = rpc_method_stats([a, b])
+    assert merged["t.echo"].calls == 5
+    dash = dashboard([a, b])
+    assert "t.echo" in dash and "per-method RPC" in dash
+
+
+def test_conn_pinned_stub_fails_typed_after_close():
+    """A stub pinned to an explicit Connection (no PeerInfo) must raise a
+    typed UNAVAILABLE — not crash — when the connection dies, including on
+    the retry path of idempotent methods."""
+    sim, a, b = _pair()
+    b.serve(EchoService())
+    conn = a.host.connection_to(b.host)
+    stub = a.stub(EchoService, conn=conn)
+
+    def run():
+        r = yield from stub.echo("up")       # works while conn is live
+        conn.close()
+        try:
+            yield from stub.echo("down")     # idempotent: exercises retries
+            return r, None
+        except ServiceError as e:
+            return r, e.status
+
+    r, status = sim.run_process(run())
+    assert r == ("echo", "up")
+    assert status is RpcStatus.UNAVAILABLE
+
+
+def test_scoped_services_are_disambiguated():
+    sim, a, b = _pair()
+
+    class ShardLike(Service):
+        name = "sh"
+
+        def __init__(self, tag=None):
+            self.tag = tag
+            self.scope = tag
+
+        @unary("sh.op", request=Fixed(96), response=Fixed(64), timeout=5.0)
+        def op(self, payload, ctx):
+            yield ctx.cpu(1e-6)
+            return self.tag
+
+    b.serve(ShardLike("f.0"))
+    b.serve(ShardLike("f.1"))
+
+    def run():
+        r0 = yield from a.stub(ShardLike, b.info(), scope="f.0").op(None)
+        r1 = yield from a.stub(ShardLike, b.info(), scope="f.1").op(None)
+        return r0, r1
+
+    assert sim.run_process(run()) == ("f.0", "f.1")
