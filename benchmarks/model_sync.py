@@ -1,10 +1,21 @@
 """Decentralized-CDN dissemination (paper Fig. 1-2/3): one training cluster
 publishes a model version; N edge peers swarm-fetch it via DHT + Bitswap.
 As fetchers complete they re-provide, so dissemination time grows
-sub-linearly in fleet size."""
+sub-linearly in fleet size.
+
+The ``delta`` scenario exercises the hierarchical content plane: K
+successive versions of a per-tensor (v2-manifest) checkpoint, each mutating
+p% of the tensors.  Version N+1 fetchers should move bytes roughly
+proportional to p, not to the checkpoint size — the structural-sharing
+payoff that makes WAN model sync affordable.
+
+    PYTHONPATH=src python benchmarks/model_sync.py                # both
+    PYTHONPATH=src python benchmarks/model_sync.py --delta-smoke  # CI gate
+"""
 
 from __future__ import annotations
 
+import sys
 from typing import Generator, List
 
 import numpy as np
@@ -56,6 +67,62 @@ def _wait_all(sim, procs):
     yield sim.all_of(procs)
 
 
+def run_delta(n_versions: int = 4, mutate_frac: float = 0.1,
+              n_tensors: int = 20, tensor_kb: int = 384,
+              n_fetchers: int = 2) -> List[dict]:
+    """Publish K versions of a per-tensor checkpoint, mutating
+    ``mutate_frac`` of the tensors each step; fetchers follow every version.
+    Returns per-version rows with bytes-fetched and reuse fraction."""
+    fleet = make_fleet(n_fetchers + 1, seed=91, same_region="us")
+    sim = fleet.sim
+    seed_node = fleet.peers[0]
+    fetchers = fleet.peers[1:]
+    rng = np.random.default_rng(17)
+
+    def tensor(i: int, version: int) -> bytes:
+        # content is a pure function of (tensor, last-mutated-version)
+        return np.random.default_rng(1000 * i + version).integers(
+            0, 256, tensor_kb * 1024, dtype=np.uint8).tobytes()
+
+    versions = {i: 0 for i in range(n_tensors)}
+    n_mutate = max(1, int(round(mutate_frac * n_tensors)))
+    rows: List[dict] = []
+    for v in range(n_versions):
+        if v > 0:
+            for i in rng.choice(n_tensors, size=n_mutate, replace=False):
+                versions[int(i)] = v
+        parts = [(f"t{i}", tensor(i, versions[i]), b"")
+                 for i in range(n_tensors)]
+
+        def publish(parts=parts):
+            root = yield from seed_node.publish_tree_artifact(parts)
+            return root
+
+        root = sim.run_process(publish(), until=sim.now + 3600)
+        t0 = sim.now
+        before = [f.bitswap.stats["bytes_fetched"] for f in fetchers]
+
+        def fetch(node) -> Generator:
+            got = yield from node.fetch_artifact(root, reprovide=False)
+            assert got == b"".join(p[1] for p in parts)
+            node.pin_latest("delta-bench", root)
+
+        procs = [sim.process(fetch(f)) for f in fetchers]
+        sim.run_process(_wait_all(sim, procs), until=sim.now + 86400)
+        fetched = [f.bitswap.stats["bytes_fetched"] - b0
+                   for f, b0 in zip(fetchers, before)]
+        total = n_tensors * tensor_kb * 1024
+        rows.append({
+            "version": v,
+            "mutated": 0 if v == 0 else n_mutate,
+            "mean_bytes_fetched": sum(fetched) / len(fetched),
+            "full_bytes": total,
+            "reuse_frac": 1.0 - (sum(fetched) / len(fetched)) / total,
+            "makespan": sim.now - t0,
+        })
+    return rows
+
+
 def main(report: List[str]) -> None:
     report.append(f"# Model dissemination ({ARTIFACT_MB} MiB artifact, "
                   "1 seed, swarm re-provides)")
@@ -67,7 +134,38 @@ def main(report: List[str]) -> None:
                       f"{r['mean_fetch']:>12.2f} {r['seed_share']:>16.2f}")
 
 
+def main_delta(report: List[str]) -> None:
+    report.append("# Delta sync (per-tensor v2 manifests, 20 tensors, "
+                  "10% mutated per version)")
+    report.append(f"{'version':>7} {'mutated':>7} {'fetched_MiB':>11} "
+                  f"{'full_MiB':>8} {'reuse':>6} {'makespan_s':>10}")
+    for r in run_delta():
+        report.append(
+            f"{r['version']:>7} {r['mutated']:>7} "
+            f"{r['mean_bytes_fetched'] / 2**20:>11.2f} "
+            f"{r['full_bytes'] / 2**20:>8.2f} {r['reuse_frac']:>6.2f} "
+            f"{r['makespan']:>10.2f}")
+
+
+def delta_smoke() -> None:
+    """CI gate: with 10% of tensors mutated, every follow-up version must
+    fetch < 30% of a full checkpoint (acceptance criterion)."""
+    rows = run_delta(n_versions=3)
+    for r in rows[1:]:
+        frac = r["mean_bytes_fetched"] / r["full_bytes"]
+        assert frac < 0.30, (
+            f"delta regression: version {r['version']} fetched "
+            f"{frac:.0%} of a full checkpoint (gate: <30%)")
+    print("delta smoke ok: " + ", ".join(
+        f"v{r['version']}={r['mean_bytes_fetched'] / r['full_bytes']:.1%}"
+        for r in rows[1:]) + " of full fetch (gate <30%)")
+
+
 if __name__ == "__main__":
+    if "--delta-smoke" in sys.argv:
+        delta_smoke()
+        sys.exit(0)
     out: List[str] = []
     main(out)
+    main_delta(out)
     print("\n".join(out))

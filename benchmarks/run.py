@@ -7,6 +7,7 @@ Sections:
     nat         NAT traversal success rate (paper §4, ~70% direct)
     dht         Kademlia lookup scaling (O(log N))
     cdn         model dissemination via Bitswap (Fig. 1-2/3)
+    delta       per-tensor delta sync (v2 manifests, bytes ∝ churn)
     crdt        replicated-store convergence
     shards      sharded inference + failover (Fig. 1-4)
     roofline    arch × shape roofline terms from the dry-run artifacts
@@ -29,6 +30,7 @@ SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
     ("nat", nat_traversal.main),
     ("dht", dht_lookup.main),
     ("cdn", model_sync.main),
+    ("delta", model_sync.main_delta),
     ("crdt", crdt_sync.main),
     ("shards", sharded_inference.main),
     ("roofline", roofline.main),

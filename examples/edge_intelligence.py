@@ -16,7 +16,8 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.checkpoint.lattica_ckpt import CheckpointRegistry
+from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
+                                           CheckpointService)
 from repro.configs import get_config
 from repro.core.fleet import make_fleet
 from repro.core.metrics import dashboard
@@ -44,7 +45,12 @@ def main():
     trainer = LatticaSyncTrainer(
         cfg, state, cosine_schedule(2e-3, 5, 100), data,
         node=cloud, fleet="edge-city", publish_every=10, step_seconds=1.0)
-    subs = [ModelSubscriber(e, cfg, "edge-city", like=state.params)
+    # resolve_from: edges poll the cloud's CheckpointService for 'latest';
+    # during the partition the RPC fails and they fall back to local
+    # knowledge (keep serving the stale model), after the heal one poll is
+    # enough to catch up — no anti-entropy lottery
+    subs = [ModelSubscriber(e, cfg, "edge-city", like=state.params,
+                            resolve_from=cloud.info())
             for e in edges]
     sim.process(trainer.run_mesh(60, log=None))
     for s in subs:
@@ -73,10 +79,17 @@ def main():
     print(f"[t={sim.now:5.0f}s] recovered: edge versions = {final}, "
           f"trainer latest = {latest}")
     assert all(f >= latest for f in final), "edges failed to catch up"
+    # each edge agrees with the cloud's CheckpointService on 'latest'
+    # (resolved over one RPC, not by waiting for register gossip)
+    cloud_latest = CheckpointRegistry(cloud, "edge-city").latest()
     for s in subs:
-        assert (CheckpointRegistry(s.node, "edge-city").latest()
-                == CheckpointRegistry(cloud, "edge-city").latest())
-    print("\nregistry consistent everywhere; edges caught up after heal.")
+        def resolve(s=s):
+            stub = s.node.stub(CheckpointService, cloud.info())
+            return (yield from stub.latest("edge-city"))
+        assert sim.run_process(resolve(), until=sim.now + 60) == cloud_latest
+        assert s.current_step == cloud_latest[0]
+    print("\nlatest resolved consistently everywhere; "
+          "edges caught up after heal.")
     print("\n== fleet dashboard ==")
     print(dashboard([cloud] + edges))
 

@@ -5,8 +5,10 @@
 Walks through the paper's four scenarios at toy scale:
   1. connectivity across NATs (AutoNAT -> relay -> DCUtR upgrade)
   2. content-addressed artifact publish + swarm fetch (decentralized CDN)
-  3. CRDT replicated store convergence
-  4. a typed RPC service (MethodSpec-declared unary + streaming methods,
+  3. delta-aware checkpoints: per-tensor DAGs, so a new version only moves
+     the tensors that changed (hierarchical v2 manifests)
+  4. CRDT replicated store convergence
+  5. a typed RPC service (MethodSpec-declared unary + streaming methods,
      called through a generated stub)
 """
 
@@ -52,7 +54,40 @@ def main():
     print(f"== 2. published {len(blob)//1024} KiB as {root}; "
           f"fetched ok={ok} in {dt:.2f}s (sim) ==")
 
-    # -- 3. CRDT store --------------------------------------------------------
+    # -- 3. delta-aware checkpoints -------------------------------------------
+    # Each tensor becomes its own sub-DAG under a hierarchical manifest, so
+    # version 2 reuses the unchanged tensors' CIDs verbatim: fetchers only
+    # swarm the changed sub-DAGs, and publishers report the reuse fraction.
+    import pickle
+
+    import numpy as np
+
+    from repro.checkpoint.lattica_ckpt import (fetch_checkpoint,
+                                               publish_checkpoint)
+    from repro.core.cid import decode_manifest_v2
+
+    rng = np.random.default_rng(0)
+    params_v1 = {f"layer{i}/w": rng.integers(0, 256, 96 * 1024, dtype=np.uint8)
+                 for i in range(8)}
+    params_v2 = dict(params_v1)
+    params_v2["layer3/w"] = rng.integers(0, 256, 96 * 1024, dtype=np.uint8)
+
+    def sync_versions():
+        r1 = yield from publish_checkpoint(a, params_v1, 1, "quickstart")
+        yield from fetch_checkpoint(b, r1, like=params_v1, fleet="quickstart")
+        base_bytes = b.bitswap.stats["bytes_fetched"]
+        r2 = yield from publish_checkpoint(a, params_v2, 2, "quickstart",
+                                           base=r1)
+        yield from fetch_checkpoint(b, r2, like=params_v1, fleet="quickstart")
+        meta = pickle.loads(decode_manifest_v2(a.blockstore.peek(r2))[2])
+        return meta["delta"], b.bitswap.stats["bytes_fetched"] - base_bytes
+
+    delta, v2_bytes = sim.run_process(sync_versions())
+    print(f"== 3. checkpoint v2 (1 of 8 tensors changed): publisher reused "
+          f"{delta['reused_bytes']//1024} KiB, new {delta['new_bytes']//1024} "
+          f"KiB; fetcher moved only {v2_bytes//1024} KiB ==")
+
+    # -- 4. CRDT store --------------------------------------------------------
     a.store.counter("train/steps").increment(a.host.name, 42)
     b.store.orset("train/ckpts").add("v1", b.host.name)
 
@@ -60,12 +95,12 @@ def main():
         yield from a.sync_crdt_with(b.info())
 
     sim.run_process(sync())
-    print(f"== 3. CRDT store converged: digests equal = "
+    print(f"== 4. CRDT store converged: digests equal = "
           f"{a.store.digest() == b.store.digest()}, "
           f"steps={b.store.counter('train/steps').value()}, "
           f"ckpts={a.store.orset('train/ckpts').value()} ==")
 
-    # -- 4. typed RPC service -------------------------------------------------
+    # -- 5. typed RPC service -------------------------------------------------
     # Declare methods with MethodSpecs: wire name, codecs (which compute the
     # simulated wire size from the payload), idempotency and deadline.  The
     # handler returns just the response — no hand-passed size constants.
@@ -99,7 +134,7 @@ def main():
         return x, got
 
     x, squares = sim.run_process(rpc())
-    print(f"== 4. unary double(21)={x}; streamed squares={squares} ==")
+    print(f"== 5. unary double(21)={x}; streamed squares={squares} ==")
 
     # -- fleet dashboard -------------------------------------------------------
     from repro.core.metrics import dashboard

@@ -19,7 +19,8 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.checkpoint.lattica_ckpt import CheckpointRegistry
+from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
+                                           fetch_latest_from)
 from repro.configs import get_config
 from repro.core.fleet import make_fleet
 from repro.data import make_batch_iterator
@@ -61,7 +62,10 @@ def main():
         node=trainer_node, fleet="rl-fleet",
         publish_every=args.publish_every, step_seconds=0.5)
 
-    subs = [ModelSubscriber(n, cfg, "rl-fleet", like=state.params)
+    # resolve_from: followers ask the trainer's CheckpointService for the
+    # latest version each poll instead of waiting for CRDT anti-entropy
+    subs = [ModelSubscriber(n, cfg, "rl-fleet", like=state.params,
+                            resolve_from=trainer_node.info())
             for n in (edge_a, edge_b)]
     procs = [sim.process(trainer.run_mesh(args.steps))]
     procs += [sim.process(s.follow(interval=3.0, until_step=args.steps - 1))
@@ -71,16 +75,26 @@ def main():
     print(f"\ntrainer: loss {trainer.history[0]['loss']:.3f} -> "
           f"{trainer.history[-1]['loss']:.3f} over {args.steps} steps, "
           f"{len(trainer.published)} versions published")
+    latest_step, latest_root = CheckpointRegistry(
+        trainer_node, "rl-fleet").latest()
     for s, name in zip(subs, ("edge_a", "edge_b")):
         log = s.fetch_log
-        total_mb = sum(1 for _ in log)
         print(f"{name} ({s.node.host.name}, "
               f"{s.node.transport.reachability}): followed to step "
               f"{s.current_step}; {len(log)} fetches, last took "
               f"{log[-1]['t_fetch']:.2f}s (sim)")
-        reg = CheckpointRegistry(s.node, "rl-fleet")
-        assert reg.latest() == CheckpointRegistry(
-            trainer_node, "rl-fleet").latest(), "registry diverged!"
+        # converge on 'latest' via the trainer's CheckpointService (one
+        # RPC) rather than waiting for CRDT anti-entropy to gossip the
+        # register here; unchanged-tensor sub-DAGs make this fetch cheap
+        def final_resolve(s=s):
+            step, params = yield from fetch_latest_from(
+                s.node, trainer_node.info(), "rl-fleet", like=state.params)
+            return step, params
+        step, params = sim.run_process(final_resolve(), until=sim.now + 600)
+        assert step == latest_step, (
+            f"{name} resolved step {step} != trainer latest {latest_step}")
+        s.params = params
+        s.current_step = step
     import numpy as np
     for s in subs:
         for a, b in zip(jax.tree.leaves(trainer.state.params),

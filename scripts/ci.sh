@@ -1,11 +1,9 @@
 #!/usr/bin/env bash
-# Reproducible test entrypoint: RPC throughput smoke check + tier-1 suite.
+# Reproducible test entrypoint: RPC throughput smoke + content-plane delta
+# smoke + tier-1 suite (kernel tests run as their own gating step so a
+# kernel failure still shows the rest of the suite's results).
 #   ./scripts/ci.sh                 run everything
 #   SKIP_BENCH=1 ./scripts/ci.sh    tests only
-#
-# tests/test_kernels.py has known-failing seed tests; with a bare `-x` they
-# would abort the run before most of the suite executes.  They are run
-# separately, non-gating, so the rest of the suite is the hard gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,9 +11,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [ -z "${SKIP_BENCH:-}" ]; then
     python benchmarks/rpc_throughput.py --smoke
+    # content-plane delta smoke: correctness (reuse-fraction gate) is
+    # gating, the printed timings are informational only
+    python benchmarks/model_sync.py --delta-smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py
 
-echo "--- kernels (known seed failures, non-gating) ---"
-python -m pytest -q tests/test_kernels.py || true
+python -m pytest -q tests/test_kernels.py

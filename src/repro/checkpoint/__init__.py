@@ -1,10 +1,13 @@
-from .serial import params_from_bytes, params_to_bytes
+from .serial import (leaf_from_part, params_from_bytes, params_from_parts,
+                     params_to_bytes, params_to_parts)
 from .lattica_ckpt import (CheckpointRegistry, CheckpointService,
-                           fetch_checkpoint, fetch_latest, fetch_latest_from,
-                           publish_checkpoint, serve_checkpoints)
+                           checkpoint_delta, fetch_checkpoint, fetch_latest,
+                           fetch_latest_from, publish_checkpoint,
+                           serve_checkpoints)
 from .local import load_local, save_local
 
-__all__ = ["params_to_bytes", "params_from_bytes", "CheckpointRegistry",
-           "CheckpointService", "publish_checkpoint", "fetch_checkpoint",
-           "fetch_latest", "fetch_latest_from", "serve_checkpoints",
-           "save_local", "load_local"]
+__all__ = ["params_to_bytes", "params_from_bytes", "params_to_parts",
+           "params_from_parts", "leaf_from_part", "CheckpointRegistry",
+           "CheckpointService", "checkpoint_delta", "publish_checkpoint",
+           "fetch_checkpoint", "fetch_latest", "fetch_latest_from",
+           "serve_checkpoints", "save_local", "load_local"]

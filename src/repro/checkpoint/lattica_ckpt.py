@@ -8,20 +8,31 @@ CRDT store is the *model version registry*:
   * ``ckpt/<fleet>``            ORSet of (step, root-CID) — every version
   * ``ckpt/<fleet>/latest``     LWW register → (step, root-CID)
   * ``steps/<fleet>``           GCounter of total optimizer steps
+
+Versions are *delta-friendly*: each pytree leaf is serialized as its own
+sub-DAG under a hierarchical (v2) root manifest, so consecutive versions
+share the sub-root CIDs of unchanged tensors and fetchers only move the
+changed ones.  ``publish_checkpoint(base=...)`` reports new-vs-reused
+block/byte stats in the announcement meta; fetchers pin the latest fetched
+version per fleet (older ones become evictable under a blockstore budget).
 """
 
 from __future__ import annotations
 
 import pickle
-from typing import Any, Generator, List, Optional, Tuple
+from typing import Any, Dict, Generator, List, Optional, Tuple
 
-from repro.core.cid import CID
+from repro.core.bitswap import FetchError
+from repro.core.cid import (CID, CODEC_DAG, build_tree_dag, dag_reachable,
+                            decode_manifest_v2, encode_manifest_v2,
+                            manifest_version, read_dag)
 from repro.core.dht import PeerInfo
 from repro.core.node import LatticaNode
 from repro.core.rpc import RpcContext
 from repro.core.service import Fixed, Service, pickled, unary
 
-from .serial import params_from_bytes, params_to_bytes
+from .serial import (leaf_from_part, params_from_bytes, params_from_parts,
+                     params_to_parts)
 
 
 class CheckpointRegistry:
@@ -101,20 +112,67 @@ def fetch_latest_from(node: LatticaNode, peer: PeerInfo, fleet: str,
         return None, None
     step, root = latest
     params = yield from fetch_checkpoint(node, root, like,
-                                         hint_providers=[peer])
+                                         hint_providers=[peer], fleet=fleet)
     CheckpointRegistry(node, fleet).record_fetched(step, root)
     return step, params
 
 
+def _classify_blocks(items, base_set) -> Dict[str, int]:
+    """Split ``(cid, size)`` pairs into new vs reused against ``base_set``."""
+    stats = {"new_blocks": 0, "new_bytes": 0,
+             "reused_blocks": 0, "reused_bytes": 0}
+    for c, size in items:
+        kind = "reused" if c in base_set else "new"
+        stats[f"{kind}_blocks"] += 1
+        stats[f"{kind}_bytes"] += size
+    return stats
+
+
+def checkpoint_delta(node: LatticaNode, root: CID,
+                     base: Optional[CID]) -> Dict[str, int]:
+    """Block/byte sharing between two locally-held DAG roots: how much of
+    ``root`` is new vs reused verbatim from ``base``.  Blocks missing from
+    the local store count as new with size 0 (their bytes are unknown)."""
+    store = node.blockstore
+    base_set = set(dag_reachable(base, store.peek)) if base is not None else set()
+    blk = store.peek
+    return _classify_blocks(
+        ((c, len(blk(c)) if blk(c) is not None else 0)
+         for c in dag_reachable(root, store.peek)), base_set)
+
+
 def publish_checkpoint(node: LatticaNode, params: Any, step: int,
-                       fleet: str) -> Generator:
-    """Serialize → chunk → provide on the DHT → announce → record in CRDT.
-    Returns the root CID."""
+                       fleet: str, base: Optional[CID] = None) -> Generator:
+    """Per-tensor chunk → provide on the DHT → announce → record in CRDT.
+
+    Each pytree leaf becomes its own sub-DAG under a hierarchical (v2) root
+    manifest, so a new version reuses the sub-root CIDs of unchanged tensors
+    verbatim and fetchers only swarm what changed.  With ``base`` (the
+    previous version's root), delta stats (new vs reused blocks/bytes) are
+    embedded in the announcement meta.  Returns the root CID.
+    """
     reg = CheckpointRegistry(node, fleet)
-    data = params_to_bytes(params)
-    meta = pickle.dumps({"step": step, "fleet": fleet, "bytes": len(data)})
-    root = yield from node.publish_artifact(data, meta=meta,
-                                            announce_topic=reg.topic)
+    parts = params_to_parts(params)
+    dag = build_tree_dag(parts)
+    delta = None
+    if base is not None:
+        base_set = set(dag_reachable(base, node.blockstore.peek))
+        delta = _classify_blocks(
+            ((c, len(blk)) for c, blk in dag.blocks.items()), base_set)
+    meta = pickle.dumps({"step": step, "fleet": fleet,
+                         "bytes": dag.total_size, "delta": delta,
+                         "publisher": node.info()})
+    # re-encode only the root manifest with the final meta (the sub-DAGs —
+    # all the hashing work — are reused as built)
+    manifest = encode_manifest_v2(dag.entries, dag.total_size, meta)
+    blocks = dict(dag.blocks)
+    del blocks[dag.root]
+    root = CID.for_data(manifest, CODEC_DAG)
+    blocks[root] = manifest
+    yield from node.bitswap.publish_dag(blocks, root)
+    node.pin_latest(f"ckpt/{fleet}", root)
+    yield from node.pubsub.publish(
+        reg.topic, ("artifact", root, dag.total_size, meta), size=192)
     reg.record(step, root)
     node.store.counter(f"steps/{fleet}").increment(node.host.name, 1)
     return root
@@ -122,10 +180,33 @@ def publish_checkpoint(node: LatticaNode, params: Any, step: int,
 
 def fetch_checkpoint(node: LatticaNode, root: CID, like: Any = None,
                      hint_providers: Optional[List[PeerInfo]] = None,
-                     ) -> Generator:
-    """Swarm-fetch a model version; returns the params pytree."""
-    data = yield from node.fetch_artifact(root, hint_providers)
-    return params_from_bytes(data, like)
+                     fleet: Optional[str] = None) -> Generator:
+    """Swarm-fetch a model version; returns the params pytree.
+
+    Hierarchical (v2) roots reassemble per-tensor — sub-DAGs already in the
+    local store (tensors unchanged since the last fetched version) are not
+    re-fetched.  Flat (v1) roots take the legacy whole-blob path.  With
+    ``fleet``, the fetched root is pinned as that fleet's latest (evicting
+    older versions under a blockstore budget)."""
+    yield from node.fetch_artifact(root, hint_providers, assemble=False)
+    manifest = node.blockstore.peek(root)
+    try:
+        # store blocks were verified on put; skip re-hashing on reassembly
+        if manifest is not None and manifest_version(manifest) == 2:
+            entries = decode_manifest_v2(manifest)[0]
+            flat = {e.name: leaf_from_part(
+                        read_dag(e.cid, node.blockstore.get, verify=False),
+                        e.meta)
+                    for e in entries}
+            params = params_from_parts(flat, like)
+        else:
+            params = params_from_bytes(
+                read_dag(root, node.blockstore.get, verify=False), like)
+    except (KeyError, ValueError) as e:
+        raise FetchError(str(e)) from e
+    if fleet is not None:
+        node.pin_latest(f"ckpt/{fleet}", root)
+    return params
 
 
 def fetch_latest(node: LatticaNode, fleet: str, like: Any = None,
@@ -137,5 +218,5 @@ def fetch_latest(node: LatticaNode, fleet: str, like: Any = None,
     if latest is None:
         return None, None
     step, root = latest
-    params = yield from fetch_checkpoint(node, root, like)
+    params = yield from fetch_checkpoint(node, root, like, fleet=fleet)
     return step, params

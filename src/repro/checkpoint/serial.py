@@ -3,6 +3,15 @@
 Deterministic layout (sorted key-paths) so identical params always produce
 identical CIDs — the property that makes checkpoints deduplicate across the
 mesh and lets unchanged chunks skip re-transfer between model versions.
+
+Two granularities:
+
+* ``params_to_bytes`` / ``params_from_bytes`` — the whole tree as one flat
+  blob (local checkpoints, v1 flat-manifest artifacts).
+* ``params_to_parts`` / ``params_from_parts`` — one ``(path, raw-bytes,
+  dtype/shape-meta)`` part per leaf, feeding the hierarchical (v2) manifest
+  path: each tensor becomes its own sub-DAG, so a new version's root
+  manifest reuses the sub-root CIDs of unchanged tensors verbatim.
 """
 
 from __future__ import annotations
@@ -46,6 +55,41 @@ def params_to_bytes(params: Any) -> bytes:
     return b"".join([_MAGIC, struct.pack(">I", len(head)), head] + blobs)
 
 
+def params_to_parts(params: Any) -> List[Tuple[str, bytes, bytes]]:
+    """Per-leaf parts ``(path, raw bytes, pickled (dtype, shape))``, sorted
+    by path — the unit of structural sharing for delta-friendly DAGs."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    entries = sorted(
+        ((_path_str(path), np.asarray(leaf)) for path, leaf in leaves_with_paths),
+        key=lambda kv: kv[0])
+    return [(name, np.ascontiguousarray(arr).tobytes(),
+             pickle.dumps((str(arr.dtype), tuple(arr.shape))))
+            for name, arr in entries]
+
+
+def leaf_from_part(raw: bytes, meta: bytes) -> np.ndarray:
+    """Decode one part's bytes back into an ndarray using its dtype/shape
+    meta (the v2 manifest entry's ``meta`` field)."""
+    dtype, shape = pickle.loads(meta)
+    count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    return np.frombuffer(raw, dtype=np.dtype(dtype), count=count).reshape(shape)
+
+
+def params_from_parts(flat: Dict[str, np.ndarray], like: Any = None) -> Any:
+    """Restore a ``{path: ndarray}`` mapping into the structure of ``like``
+    (or return the mapping itself when ``like`` is None)."""
+    if like is None:
+        return flat
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths_and_leaves[0]:
+        name = _path_str(path)
+        arr = flat[name]
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), (name, arr.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(paths_and_leaves[1], leaves)
+
+
 def params_from_bytes(data: bytes, like: Any = None) -> Any:
     assert data[:4] == _MAGIC, "not a checkpoint blob"
     (hlen,) = struct.unpack(">I", data[4:8])
@@ -58,14 +102,4 @@ def params_from_bytes(data: bytes, like: Any = None) -> Any:
             count=int(np.prod(shape, dtype=np.int64)) if shape else 1,
         ).reshape(shape)
         flat[name] = arr
-    if like is None:
-        return flat
-    # restore into the structure of ``like``
-    paths_and_leaves = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for path, leaf in paths_and_leaves[0]:
-        name = _path_str(path)
-        arr = flat[name]
-        assert tuple(arr.shape) == tuple(np.shape(leaf)), (name, arr.shape)
-        leaves.append(arr)
-    return jax.tree_util.tree_unflatten(paths_and_leaves[1], leaves)
+    return params_from_parts(flat, like)

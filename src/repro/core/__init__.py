@@ -15,7 +15,10 @@ The paper's contribution, as composable pieces:
 * :mod:`repro.core.node` — ``LatticaNode``, the composed SDK surface
 """
 
-from .cid import CID, DAG, build_dag, chunk, decode_manifest, encode_manifest
+from .cid import (CID, DAG, ManifestEntry, build_dag, build_tree_dag, chunk,
+                  dag_reachable, decode_manifest, decode_manifest_v2,
+                  encode_manifest, encode_manifest_v2, manifest_children,
+                  manifest_version, read_dag)
 from .crdt import (GCounter, LWWRegister, MVRegister, ORSet, PNCounter,
                    ReplicatedStore)
 from .dht import KademliaDHT, KadService, PeerInfo, RoutingTable
@@ -29,7 +32,10 @@ from .service import (ClientInterceptor, Codec, Fixed, MethodSpec,
 from .simnet import Connection, DialError, Host, Network, Sim, Stream
 
 __all__ = [
-    "CID", "DAG", "build_dag", "chunk", "decode_manifest", "encode_manifest",
+    "CID", "DAG", "ManifestEntry", "build_dag", "build_tree_dag", "chunk",
+    "dag_reachable", "decode_manifest", "decode_manifest_v2",
+    "encode_manifest", "encode_manifest_v2", "manifest_children",
+    "manifest_version", "read_dag",
     "GCounter", "LWWRegister", "MVRegister", "ORSet", "PNCounter",
     "ReplicatedStore", "KademliaDHT", "KadService", "PeerInfo",
     "RoutingTable", "NATBox", "NATKind", "CrdtSyncService",

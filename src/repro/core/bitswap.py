@@ -1,19 +1,32 @@
 """Bitswap-style block exchange (the paper's decentralized-CDN layer).
 
 Wantlist-driven parallel block fetch: a session resolves providers via the
-DHT (or a rendezvous hint), pulls the manifest, then swarms the leaf blocks
-across every live provider with a bounded in-flight window.  Each block is
-hash-verified against its CID on arrival; fetched blocks are stored and
-re-provided, so popular artifacts gain seeders as they spread — this is what
-makes RL fleet-wide model dissemination scale in the paper's Scenario 3.
+DHT (or a rendezvous hint), pulls the root manifest, then swarms the missing
+blocks across every live provider with a bounded in-flight window.  Each
+block is hash-verified against its CID on arrival; fetched blocks are stored
+and re-provided, so popular artifacts gain seeders as they spread — this is
+what makes RL fleet-wide model dissemination scale in the paper's Scenario 3.
+
+Hierarchical (v2) manifests are fetched recursively: the root manifest names
+sub-DAG roots, any *missing* sub-manifests are pulled next, and then every
+missing leaf across all sub-DAGs is striped over the providers in one
+scheduling pass — sub-DAGs already in the local store (unchanged tensors
+from a previous version) cost zero bytes.
+
+Provider selection is *scored*, not round-robin: each peer carries an EWMA
+of delivered throughput plus a failure penalty (``ProviderScore``), and
+stripe assignment weights fast peers proportionally.  A cheap ``bs.have``
+unary lets the retry path skip providers that lack a block instead of
+burning the full 120 s ``bs.get`` deadline on them.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, Dict, Generator, List, Optional, Set, TYPE_CHECKING
+from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
 
-from .cid import CID, decode_manifest
+from .cid import (CID, CODEC_DAG, decode_manifest, decode_manifest_v2,
+                  manifest_children, manifest_version, read_dag)
 from .dht import PeerInfo
 from .rpc import RpcChannel, RpcContext, RpcError
 from .service import CodecFn, Fixed, Service, streaming, unary
@@ -33,18 +46,56 @@ class FetchError(Exception):
     pass
 
 
+class ProviderScore:
+    """Per-provider quality estimate: EWMA of delivered bytes/second with a
+    multiplicative failure penalty.  New providers start optimistic so they
+    get sampled; the penalty halves the score per recent failure and decays
+    on the next success."""
+
+    __slots__ = ("ewma_bps", "failures")
+
+    ALPHA = 0.3
+    OPTIMISTIC_BPS = 16e6
+
+    def __init__(self) -> None:
+        self.ewma_bps: float = self.OPTIMISTIC_BPS
+        self.failures: int = 0
+
+    def record(self, nbytes: int, seconds: float) -> None:
+        bps = nbytes / max(seconds, 1e-9)
+        self.ewma_bps = (1 - self.ALPHA) * self.ewma_bps + self.ALPHA * bps
+        if self.failures:
+            self.failures -= 1
+
+    def fail(self) -> None:
+        self.failures += 1
+
+    def value(self) -> float:
+        return self.ewma_bps * (0.5 ** min(self.failures, 10))
+
+
 _BLOCK_RESP = CodecFn(
     "block_resp",
     lambda p: max(len(p[1]), 64) if p[0] == "block" and p[1] else 64)
 
 
 class BitswapService(Service):
-    """Block exchange: per-block unary gets + bulk streaming fetch."""
+    """Block exchange: per-block unary gets, presence probes, and bulk
+    streaming fetch."""
 
     name = "bs"
 
     def __init__(self, bitswap: "Bitswap"):
         self.bitswap = bitswap
+
+    @unary("bs.have", request=Fixed(64), response=Fixed(8),
+           idempotent=True, timeout=10.0)
+    def have(self, payload: Any, ctx: RpcContext) -> Generator:
+        """Presence probe: do we hold this block?  Cheap enough that a
+        fetcher can ask before committing to a 120 s ``bs.get``."""
+        cid: CID = payload
+        yield ctx.cpu(1e-6)
+        return self.bitswap.node.blockstore.has(cid)
 
     @unary("bs.get", request=Fixed(BLOCK_REQ_SIZE), response=_BLOCK_RESP,
            idempotent=True, timeout=120.0)
@@ -88,8 +139,31 @@ class Bitswap:
         self.node = node
         self.stats = {"blocks_served": 0, "blocks_fetched": 0,
                       "bytes_served": 0, "bytes_fetched": 0, "retries": 0,
-                      "stream_sessions": 0}
+                      "stream_sessions": 0, "have_probes": 0,
+                      "have_skips": 0}
+        self.scores: Dict[bytes, ProviderScore] = {}
         node.serve(BitswapService(self))
+
+    # ----------------------------------------------------------- scoring
+    def score(self, info: PeerInfo) -> ProviderScore:
+        s = self.scores.get(info.peer_id.digest)
+        if s is None:
+            s = self.scores[info.peer_id.digest] = ProviderScore()
+        return s
+
+    def _stripe(self, wanted: List[CID],
+                live: List[PeerInfo]) -> List[List[CID]]:
+        """Assign blocks to providers proportionally to their scores: each
+        block goes to the provider with the best score-per-assigned-block
+        ratio (greedy weighted fill — a fast peer gets a proportionally
+        longer stripe than a slow or flaky one)."""
+        weights = [max(self.score(p).value(), 1.0) for p in live]
+        stripes: List[List[CID]] = [[] for _ in live]
+        for c in wanted:
+            idx = max(range(len(live)),
+                      key=lambda i: weights[i] / (len(stripes[i]) + 1))
+            stripes[idx].append(c)
+        return stripes
 
     # ------------------------------------------------------------- client
     def _fetch_blocks_stream(self, info: PeerInfo,
@@ -97,6 +171,8 @@ class Bitswap:
         """Bulk fetch over one streaming channel; returns {cid: bytes} for
         whatever verified blocks arrived (partial on provider failure)."""
         got: Dict[CID, bytes] = {}
+        sim = self.node.sim
+        t0 = sim.now
         try:
             stub = self.node.stub(BitswapService, info)
             chan = yield from stub.fetch()
@@ -107,98 +183,123 @@ class Bitswap:
                     got[cid] = block
         except (DialError, RpcError):
             pass
+        nbytes = sum(len(b) for b in got.values())
+        if got:
+            self.score(info).record(nbytes, sim.now - t0)
+        if len(got) < len(cids):
+            self.score(info).fail()
         return got
 
-    def _fetch_block(self, info: PeerInfo, cid: CID) -> Generator:
-        """Fetch one block from one provider; returns bytes or None."""
+    def _probe_have(self, info: PeerInfo, cid: CID) -> Generator:
+        """True/False/None(=unreachable) presence probe."""
+        self.stats["have_probes"] += 1
+        try:
+            stub = self.node.stub(BitswapService, info)
+            return (yield from stub.have(cid))
+        except (DialError, RpcError):
+            return None
+
+    def _fetch_block(self, info: PeerInfo, cid: CID,
+                     probe: bool = False) -> Generator:
+        """Fetch one block from one provider; returns bytes or None.  With
+        ``probe``, a cheap ``bs.have`` runs first so a provider that lacks
+        the block costs a 10 s control round-trip, not a 120 s get."""
+        if probe:
+            has = yield from self._probe_have(info, cid)
+            if not has:
+                if has is False:
+                    self.stats["have_skips"] += 1
+                return None
+        sim = self.node.sim
+        t0 = sim.now
         try:
             stub = self.node.stub(BitswapService, info)
             resp = yield from stub.get(cid)
         except (DialError, RpcError):
+            self.score(info).fail()
             return None
         kind, block = resp
         if kind != "block" or block is None or not cid.verify(block):
+            self.score(info).fail()
             return None
+        self.score(info).record(len(block), sim.now - t0)
         return block
 
-    def fetch_dag(self, root: CID,
-                  hint_providers: Optional[List[PeerInfo]] = None) -> Generator:
-        """Fetch a manifest-rooted DAG; returns the reassembled bytes.
+    def _store_fetched(self, cid: CID, block: bytes,
+                       held: Optional[List[CID]] = None) -> None:
+        self.node.blockstore.put(cid, block)
+        if held is not None:
+            self.node.blockstore.hold(cid)
+            held.append(cid)
+        self.stats["blocks_fetched"] += 1
+        self.stats["bytes_fetched"] += len(block)
 
-        Providers come from hints (rendezvous / pubsub announcement) plus the
-        DHT provider records.  Leaf blocks are swarmed across providers with
-        a bounded window; failed providers are dropped and their assigned
-        blocks requeued on survivors.
-        """
+    def _fetch_one_of(self, cid: CID, providers: List[PeerInfo],
+                      probe: bool = False) -> Generator:
+        """Try providers in score order until one delivers ``cid``."""
+        ranked = sorted(providers, key=lambda p: -self.score(p).value())
+        for info in ranked:
+            block = yield from self._fetch_block(info, cid, probe=probe)
+            if block is not None:
+                return block
+            self.stats["retries"] += 1
+        return None
+
+    def _swarm_missing(self, wanted: List[CID], providers: List[PeerInfo],
+                       held: Optional[List[CID]] = None) -> Generator:
+        """One scheduling pass: stripe ``wanted`` across providers by score
+        (streaming plane when stripes are long enough), then a unary
+        failover phase with have-probes for whatever is still missing."""
         node = self.node
         sim = node.sim
-        if node.blockstore.has(root):
-            manifest = node.blockstore.get(root)
-        else:
-            manifest = None
-        providers: List[PeerInfo] = list(hint_providers or [])
+        missing = deque(
+            dict.fromkeys(c for c in wanted if not node.blockstore.has(c)))
+        if not missing:
+            return None
         if not providers:
-            providers = yield from node.dht.find_providers(root.key)
-        providers = [p for p in providers if p.peer_id != node.peer_id]
-        if manifest is None:
-            if not providers:
-                raise FetchError(f"no providers for {root}")
-            for info in providers:
-                manifest = yield from self._fetch_block(info, root)
-                if manifest is not None:
-                    break
-            if manifest is None:
-                raise FetchError(f"all providers failed serving manifest {root}")
-            node.blockstore.put(root, manifest)
-            self.stats["blocks_fetched"] += 1
-            self.stats["bytes_fetched"] += len(manifest)
-
-        children, total_size, _meta = decode_manifest(manifest)
-        # dedup: repeated content (identical chunks) shares one CID and is
-        # fetched once — content addressing's free deduplication
-        missing = deque(dict.fromkeys(
-            c for c in children if not node.blockstore.has(c)))
-        if missing and not providers:
-            providers = yield from node.dht.find_providers(root.key)
-            providers = [p for p in providers if p.peer_id != node.peer_id]
-            if not providers:
-                raise FetchError(f"no providers for leaves of {root}")
-
+            raise FetchError(f"no providers for {len(missing)} blocks")
         live = list(providers)
-        failures: Dict[bytes, int] = {}
 
         # ---- phase 1: bulk transfer over streaming channels --------------
-        # stripe the wantlist across providers; any block a provider fails
-        # to deliver falls through to the unary retry phase below
-        if len(missing) >= STREAM_FETCH_MIN * max(len(live), 1) and live:
-            stripes: List[List[CID]] = [[] for _ in live]
-            for i, cid in enumerate(missing):
-                stripes[i % len(live)].append(cid)
+        # any block a provider fails to deliver falls through to the unary
+        # retry phase below
+        if len(missing) >= STREAM_FETCH_MIN * max(len(live), 1):
+            stripes = self._stripe(list(missing), live)
 
             def stream_worker(idx: int) -> Generator:
+                if not stripes[idx]:
+                    return 0
                 got = yield from self._fetch_blocks_stream(
                     live[idx], stripes[idx])
                 for cid, block in got.items():
-                    node.blockstore.put(cid, block)
-                    self.stats["blocks_fetched"] += 1
-                    self.stats["bytes_fetched"] += len(block)
+                    self._store_fetched(cid, block, held)
                 self.stats["retries"] += len(stripes[idx]) - len(got)
                 return len(got)
 
             procs = [sim.process(stream_worker(i)) for i in range(len(live))]
             yield sim.all_of(procs)
             missing = deque(dict.fromkeys(
-                c for c in children if not node.blockstore.has(c)))
+                c for c in wanted if not node.blockstore.has(c)))
 
         # ---- phase 2: per-block unary with provider failover --------------
+        failures: Dict[bytes, int] = {}
+
         def worker(wid: int) -> Generator:
             while missing:
                 cid = missing.popleft()
+                if node.blockstore.has(cid):
+                    continue
                 got = None
                 tries = 0
                 while got is None and live and tries < 2 * len(live) + 2:
-                    info = live[(wid + tries) % len(live)]
-                    got = yield from self._fetch_block(info, cid)
+                    ranked = sorted(live,
+                                    key=lambda p: -self.score(p).value())
+                    info = ranked[(wid + tries) % len(ranked)]
+                    # first attempt goes straight to get; retries probe
+                    # bs.have first so block-less providers cost a control
+                    # RTT instead of the 120 s get deadline
+                    got = yield from self._fetch_block(info, cid,
+                                                       probe=tries > 0)
                     tries += 1
                     if got is None:
                         self.stats["retries"] += 1
@@ -208,26 +309,129 @@ class Bitswap:
                             live.remove(info)
                 if got is None:
                     raise FetchError(f"block {cid} unavailable")
-                node.blockstore.put(cid, got)
-                self.stats["blocks_fetched"] += 1
-                self.stats["bytes_fetched"] += len(got)
+                self._store_fetched(cid, got, held)
             return None
 
-        n_workers = min(MAX_IN_FLIGHT, max(len(live), 1), max(len(missing), 1))
+        n_workers = min(MAX_IN_FLIGHT, max(len(live), 1),
+                        max(len(missing), 1))
         procs = [sim.process(worker(i)) for i in range(n_workers)]
         if procs:
             yield sim.all_of(procs)
+        return None
 
-        parts = []
-        for c in children:
-            blk = node.blockstore.get(c)
-            if blk is None:
-                raise FetchError(f"block {c} missing after fetch")
-            parts.append(blk)
-        data = b"".join(parts)
-        if len(data) != total_size:
-            raise FetchError("reassembled size mismatch")
-        return data
+    def _resolve_providers(self, root: CID,
+                           hint_providers: Optional[List[PeerInfo]],
+                           ) -> Generator:
+        providers: List[PeerInfo] = list(hint_providers or [])
+        if not providers:
+            providers = yield from self.node.dht.find_providers(root.key)
+        return [p for p in providers if p.peer_id != self.node.peer_id]
+
+    def fetch_dag(self, root: CID,
+                  hint_providers: Optional[List[PeerInfo]] = None,
+                  assemble: bool = True) -> Generator:
+        """Fetch a manifest-rooted DAG (flat v1 or hierarchical v2).
+
+        Providers come from hints (rendezvous / pubsub announcement) plus the
+        DHT provider records.  For v2 roots, sub-manifests missing locally
+        are pulled first, then all missing leaves across every sub-DAG are
+        swarmed in one scored scheduling pass — sub-DAGs already present
+        (unchanged entries vs an earlier version) are skipped entirely.
+
+        Returns the reassembled bytes, or ``None`` with every block resident
+        in the local store when ``assemble`` is False (structure-aware
+        callers reassemble per entry themselves; they should pin the root
+        before their next store write, since the session's transfer-holds
+        are released on return).
+        """
+        node = self.node
+        providers: List[PeerInfo] = []
+        # transfer-holds: every block this session touches is exempt from
+        # LRU eviction until the fetch (incl. assembly) completes, so a
+        # tight blockstore budget can't cannibalize a version mid-transfer
+        held: List[CID] = []
+
+        def hold_local(cid: CID) -> None:
+            if node.blockstore.has(cid):
+                node.blockstore.hold(cid)
+                held.append(cid)
+
+        def need_providers() -> Generator:
+            if not providers:
+                got = yield from self._resolve_providers(root, hint_providers)
+                providers.extend(got)
+            return providers
+
+        try:
+            manifest = node.blockstore.get(root)
+            if manifest is not None:
+                hold_local(root)
+            else:
+                yield from need_providers()
+                if not providers:
+                    raise FetchError(f"no providers for {root}")
+                manifest = yield from self._fetch_one_of(
+                    root, providers, probe=len(providers) > 1)
+                if manifest is None:
+                    raise FetchError(
+                        f"all providers failed serving manifest {root}")
+                self._store_fetched(root, manifest, held)
+
+            # collect the full leaf want-list, pulling missing sub-manifests
+            if manifest_version(manifest) == 1:
+                leaves = decode_manifest(manifest)[0]
+            else:
+                entries = decode_manifest_v2(manifest)[0]
+                sub_missing = []
+                for e in entries:
+                    if e.cid.codec != CODEC_DAG:
+                        continue
+                    if node.blockstore.has(e.cid):
+                        hold_local(e.cid)    # resident sub-manifests must
+                        # survive evictions caused by the leaf swarm's puts
+                    else:
+                        sub_missing.append(e.cid)
+                if sub_missing:
+                    yield from need_providers()
+                    yield from self._swarm_missing(sub_missing, providers,
+                                                   held)
+                leaves = []
+                for e in entries:
+                    if e.cid.codec != CODEC_DAG:
+                        leaves.append(e.cid)
+                        continue
+                    sub = node.blockstore.peek(e.cid)
+                    if sub is None:
+                        raise FetchError(
+                            f"sub-manifest {e.cid} missing after fetch")
+                    leaves.extend(manifest_children(sub))
+
+            # dedup: repeated content (identical chunks) shares one CID and
+            # is fetched once — content addressing's free deduplication
+            wanted = list(dict.fromkeys(leaves))
+            to_fetch = []
+            for c in wanted:
+                if node.blockstore.has(c):
+                    hold_local(c)
+                else:
+                    to_fetch.append(c)
+            if to_fetch:
+                yield from need_providers()
+                if not providers:
+                    raise FetchError(f"no providers for leaves of {root}")
+                yield from self._swarm_missing(to_fetch, providers, held)
+
+            if not assemble:
+                return None
+            try:
+                # blocks were hash-verified on arrival and again by the
+                # store's put — skip a third sha256 pass per block
+                return read_dag(root, node.blockstore.get, verify=False)
+            except (KeyError, ValueError) as e:
+                raise FetchError(str(e)) from e
+        finally:
+            for c in held:
+                node.blockstore.release(c)
 
     def publish_dag(self, dag_blocks: Dict[CID, bytes], root: CID,
                     announce: bool = True) -> Generator:

@@ -4,14 +4,28 @@ CIDs follow the multihash spirit: ``<version><codec><sha256 digest>``.  Large
 artifacts (model checkpoints) are split into fixed-size chunks, each chunk
 becoming a leaf block; a manifest block (codec ``dag``) lists the child CIDs
 in order so any peer can verify and reassemble the artifact.
+
+Two manifest layouts coexist on the wire, distinguished by magic:
+
+* **v1 flat** (``LDAG``): an ordered list of leaf-chunk CIDs + total size.
+  Produced by :func:`build_dag`; the right shape for opaque byte blobs.
+* **v2 hierarchical** (``LDG2``): an ordered list of *named entries*, each
+  pointing at a sub-DAG root (or a raw leaf) with its size and a per-entry
+  meta blob.  Produced by :func:`build_tree_dag`; the shape that makes
+  *structural sharing* between artifact versions real: a checkpoint whose
+  root lists one sub-DAG per tensor reuses the sub-root CIDs of unchanged
+  tensors verbatim, so a fetcher only swarms the sub-DAGs it lacks.
+
+Decoders dispatch on the magic (:func:`manifest_version`), so v2-aware
+nodes still read every v1 manifest ever published.
 """
 
 from __future__ import annotations
 
 import hashlib
 import struct
-from dataclasses import dataclass
-from typing import Dict, Iterable, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 CHUNK_SIZE = 256 * 1024  # 256 KiB, matching Bitswap-typical block size
 
@@ -58,7 +72,21 @@ def chunk(data: bytes, chunk_size: int = CHUNK_SIZE) -> List[bytes]:
 
 # -- Merkle DAG manifests ----------------------------------------------------
 
-_MAGIC = b"LDAG"
+_MAGIC = b"LDAG"       # v1: flat chunk list
+_MAGIC2 = b"LDG2"      # v2: named sub-DAG entries
+
+
+def manifest_version(data: bytes) -> int:
+    """1 for flat v1, 2 for hierarchical v2; raises on anything else."""
+    if data[:4] == _MAGIC:
+        return 1
+    if data[:4] == _MAGIC2:
+        return 2
+    raise ValueError("not a manifest block")
+
+
+def is_manifest(data: bytes) -> bool:
+    return data[:4] in (_MAGIC, _MAGIC2)
 
 
 def encode_manifest(children: Sequence[CID], total_size: int,
@@ -87,15 +115,83 @@ def decode_manifest(data: bytes) -> Tuple[List[CID], int, bytes]:
     return children, total_size, meta
 
 
+# -- v2 hierarchical manifests -----------------------------------------------
+
+
+@dataclass(frozen=True)
+class ManifestEntry:
+    """One named sub-DAG in a v2 root manifest.
+
+    ``cid`` is either a sub-manifest root (``CODEC_DAG``) or a raw leaf
+    (``CODEC_RAW``); ``size`` is the decoded byte length of the entry's
+    content; ``meta`` is opaque per-entry metadata (e.g. a tensor's
+    dtype/shape) that travels in the *root* manifest so entry content stays
+    a pure function of its bytes — maximizing sub-DAG reuse across versions.
+    """
+
+    name: str
+    cid: CID
+    size: int
+    meta: bytes = b""
+
+
+def encode_manifest_v2(entries: Sequence[ManifestEntry], total_size: int,
+                       meta: bytes = b"") -> bytes:
+    out = [_MAGIC2, struct.pack(">QI", total_size, len(entries))]
+    for e in entries:
+        name = e.name.encode("utf-8")
+        out.append(struct.pack(">H", len(name)))
+        out.append(name)
+        out.append(struct.pack(">B", e.cid.codec))
+        out.append(e.cid.digest)
+        out.append(struct.pack(">QI", e.size, len(e.meta)))
+        out.append(e.meta)
+    out.append(struct.pack(">I", len(meta)))
+    out.append(meta)
+    return b"".join(out)
+
+
+def decode_manifest_v2(data: bytes) -> Tuple[List[ManifestEntry], int, bytes]:
+    assert data[:4] == _MAGIC2, "not a v2 manifest block"
+    total_size, n = struct.unpack(">QI", data[4:16])
+    off = 16
+    entries: List[ManifestEntry] = []
+    for _ in range(n):
+        (name_len,) = struct.unpack(">H", data[off:off + 2])
+        off += 2
+        name = data[off:off + name_len].decode("utf-8")
+        off += name_len
+        codec = data[off]
+        digest = data[off + 1:off + 33]
+        off += 33
+        size, meta_len = struct.unpack(">QI", data[off:off + 12])
+        off += 12
+        meta = data[off:off + meta_len]
+        off += meta_len
+        entries.append(ManifestEntry(name, CID(codec, digest), size, meta))
+    (meta_len,) = struct.unpack(">I", data[off:off + 4])
+    meta = data[off + 4:off + 4 + meta_len]
+    return entries, total_size, meta
+
+
+def manifest_children(data: bytes) -> List[CID]:
+    """Direct children of a manifest block, either version."""
+    if manifest_version(data) == 1:
+        return decode_manifest(data)[0]
+    return [e.cid for e in decode_manifest_v2(data)[0]]
+
+
 @dataclass
 class DAG:
     root: CID
     blocks: Dict[CID, bytes]
     total_size: int
+    #: v2 only: the root manifest's entries, in order
+    entries: List[ManifestEntry] = field(default_factory=list)
 
 
 def build_dag(data: bytes, chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> DAG:
-    """Chunk ``data`` into leaf blocks + one manifest root block."""
+    """Chunk ``data`` into leaf blocks + one flat (v1) manifest root block."""
     leaves = chunk(data, chunk_size)
     blocks: Dict[CID, bytes] = {}
     children: List[CID] = []
@@ -109,6 +205,29 @@ def build_dag(data: bytes, chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> D
     return DAG(root=root, blocks=blocks, total_size=len(data))
 
 
+def build_tree_dag(parts: Sequence[Tuple[str, bytes, bytes]],
+                   chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> DAG:
+    """Build a hierarchical (v2) DAG: one sub-DAG per ``(name, data, meta)``
+    part, rooted in a named-entry manifest.
+
+    Identical part bytes (across parts, or vs a previously built version)
+    hash to the identical sub-root CID — that is the structural-sharing
+    property the delta-sync path relies on.
+    """
+    blocks: Dict[CID, bytes] = {}
+    entries: List[ManifestEntry] = []
+    total = 0
+    for name, data, part_meta in parts:
+        sub = build_dag(data, chunk_size=chunk_size)
+        blocks.update(sub.blocks)
+        entries.append(ManifestEntry(name, sub.root, len(data), part_meta))
+        total += len(data)
+    manifest = encode_manifest_v2(entries, total, meta)
+    root = CID.for_data(manifest, CODEC_DAG)
+    blocks[root] = manifest
+    return DAG(root=root, blocks=blocks, total_size=total, entries=entries)
+
+
 def reassemble(root_block: bytes, fetch: Dict[CID, bytes]) -> bytes:
     children, total_size, _meta = decode_manifest(root_block)
     parts = []
@@ -120,3 +239,52 @@ def reassemble(root_block: bytes, fetch: Dict[CID, bytes]) -> bytes:
     data = b"".join(parts)
     assert len(data) == total_size
     return data
+
+
+def read_dag(root: CID, get: Callable[[CID], Optional[bytes]],
+             verify: bool = True) -> bytes:
+    """Reassemble a DAG of either manifest version from a block getter.
+
+    Raises ``KeyError`` on a missing block and ``ValueError`` on a
+    hash-verification failure, so callers can distinguish "fetch more"
+    from "corrupt data".  ``verify=False`` skips the per-block sha256 —
+    correct when the getter is a store that already verified on put
+    (``BlockStore``); keep the default for untrusted mappings.
+    """
+    block = get(root)
+    if block is None:
+        raise KeyError(f"missing block {root}")
+    if verify and not root.verify(block):
+        raise ValueError(f"block {root} failed verification")
+    if root.codec == CODEC_RAW:
+        return block
+    if manifest_version(block) == 1:
+        children, total_size, _ = decode_manifest(block)
+        data = b"".join(read_dag(c, get, verify) for c in children)
+    else:
+        entries, total_size, _ = decode_manifest_v2(block)
+        data = b"".join(read_dag(e.cid, get, verify) for e in entries)
+    if len(data) != total_size:
+        raise ValueError(f"reassembled size mismatch under {root}")
+    return data
+
+
+def dag_reachable(root: CID,
+                  get: Callable[[CID], Optional[bytes]]) -> List[CID]:
+    """All CIDs reachable from ``root`` through manifests resolvable via
+    ``get`` (deduplicated, pre-order).  Children whose blocks are absent are
+    still listed — their sub-trees just aren't expanded."""
+    seen: Dict[CID, None] = {}
+    stack = [root]
+    while stack:
+        c = stack.pop()
+        if c in seen:
+            continue
+        seen[c] = None
+        if c.codec != CODEC_DAG:
+            continue
+        block = get(c)
+        if block is None or not is_manifest(block):
+            continue
+        stack.extend(reversed(manifest_children(block)))
+    return list(seen)

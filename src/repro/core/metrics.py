@@ -36,12 +36,15 @@ def node_snapshot(node: "LatticaNode") -> Dict[str, Any]:
         "dht_provider_keys": len(node.dht.providers),
         "blocks": len(node.blockstore),
         "bytes_stored": node.blockstore.bytes_stored,
+        "store_capacity": node.blockstore.capacity,
+        "pinned_roots": len(node.blockstore.pinned_roots),
         "crdt_keys": len(node.store.entries),
     }
     for prefix, stats in (("transport", t.stats),
                           ("rpc", node.router.stats),
                           ("dht", node.dht.stats),
                           ("pubsub", node.pubsub.stats),
+                          ("store", node.blockstore.stats),
                           ("bitswap", node.bitswap.stats)):
         for k, v in stats.items():
             snap[f"{prefix}.{k}"] = v
@@ -51,6 +54,7 @@ def node_snapshot(node: "LatticaNode") -> Dict[str, Any]:
 _DASH_COLS = [
     ("name", 8), ("region", 6), ("reachability", 9), ("n_connections", 5),
     ("dht_table", 6), ("blocks", 7), ("bytes_stored", 12),
+    ("pinned_roots", 4), ("store.evictions", 6),
     ("bitswap.bytes_served", 12), ("bitswap.bytes_fetched", 12),
     ("rpc.unary_served", 8),
 ]

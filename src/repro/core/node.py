@@ -16,7 +16,7 @@ from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
 
 from .bitswap import Bitswap
 from .blockstore import BlockStore
-from .cid import CID, build_dag
+from .cid import CID, build_dag, build_tree_dag
 from .crdt import ReplicatedStore
 from .dht import KademliaDHT, PeerInfo
 from .peer import Multiaddr, PeerId
@@ -74,7 +74,8 @@ class LatticaNode:
     def __init__(self, net: Network, name: str, region: str = "us",
                  zone: str = "a", nat: Optional[Any] = None, cores: int = 4,
                  serve_rendezvous: bool = False,
-                 machine: Optional[str] = None):
+                 machine: Optional[str] = None,
+                 store_budget: Optional[int] = None):
         self.net = net
         self.sim: Sim = net.sim
         self.host: Host = net.host(name, region=region, zone=zone, nat=nat,
@@ -84,7 +85,8 @@ class LatticaNode:
         self.router = RpcRouter(self.host)
         self.rpc_metrics = RpcMetrics()
         self._stub_cache: Dict[Any, Stub] = {}
-        self.blockstore = BlockStore()
+        self.blockstore = BlockStore(capacity=store_budget)
+        self._pinned_latest: Dict[str, CID] = {}
         self.store = ReplicatedStore(replica=name)
         self.peers: Dict[PeerId, PeerInfo] = {}
         self.infos_by_host: Dict[str, PeerInfo] = {}
@@ -307,20 +309,60 @@ class LatticaNode:
                 continue
 
     # ------------------------------------------------------------- artifacts
+    def pin_latest(self, tag: str, root: CID) -> None:
+        """Pin ``root`` as the latest version of lineage ``tag`` (a fleet,
+        an artifact family) and unpin the previous holder — older versions
+        become evictable under the blockstore budget while the newest one
+        survives any churn."""
+        prev = self._pinned_latest.get(tag)
+        if prev == root:
+            return
+        self.blockstore.pin(root)
+        if prev is not None:
+            self.blockstore.unpin(prev)
+        self._pinned_latest[tag] = root
+
     def publish_artifact(self, data: bytes, meta: bytes = b"",
-                         announce_topic: Optional[str] = None) -> Generator:
-        """Chunk + store + provide an artifact; returns the root CID."""
+                         announce_topic: Optional[str] = None,
+                         pin: bool = True) -> Generator:
+        """Chunk + store + provide a flat (v1) artifact; returns the root
+        CID.  Raw byte blobs keep the flat manifest — the hierarchical path
+        is :meth:`publish_tree_artifact`."""
         dag = build_dag(data, meta=meta)
         yield from self.bitswap.publish_dag(dag.blocks, dag.root)
+        if pin:
+            self.blockstore.pin(dag.root)
         if announce_topic is not None:
             yield from self.pubsub.publish(
                 announce_topic, ("artifact", dag.root, len(data), meta), size=192)
         return dag.root
 
+    def publish_tree_artifact(self, parts: List[Any], meta: bytes = b"",
+                              announce_topic: Optional[str] = None,
+                              pin: bool = True) -> Generator:
+        """Publish ``[(name, data, part_meta), ...]`` as a hierarchical (v2)
+        DAG — one sub-DAG per part, so parts unchanged since an earlier
+        version reuse their sub-root CIDs (and cost fetchers zero bytes).
+        Returns the root CID."""
+        dag = build_tree_dag(parts, meta=meta)
+        yield from self.bitswap.publish_dag(dag.blocks, dag.root)
+        if pin:
+            self.blockstore.pin(dag.root)
+        if announce_topic is not None:
+            yield from self.pubsub.publish(
+                announce_topic,
+                ("artifact", dag.root, dag.total_size, meta), size=192)
+        return dag.root
+
     def fetch_artifact(self, root: CID,
                        hint_providers: Optional[List[PeerInfo]] = None,
-                       reprovide: bool = True) -> Generator:
-        data = yield from self.bitswap.fetch_dag(root, hint_providers)
+                       reprovide: bool = True,
+                       assemble: bool = True) -> Generator:
+        """Swarm-fetch a DAG of either manifest version.  With
+        ``assemble=False`` the blocks land in the local store and ``None``
+        is returned (structure-aware callers reassemble per entry)."""
+        data = yield from self.bitswap.fetch_dag(root, hint_providers,
+                                                 assemble=assemble)
         if reprovide:
             yield from self.dht.provide(root.key)
         return data

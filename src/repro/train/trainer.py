@@ -18,8 +18,11 @@ import jax
 import numpy as np
 
 from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
+                                           CheckpointService,
                                            fetch_checkpoint,
-                                           publish_checkpoint)
+                                           publish_checkpoint,
+                                           serve_checkpoints)
+from repro.core.dht import PeerInfo
 from repro.core.cid import CID
 from repro.core.node import LatticaNode
 from repro.models.config import ModelConfig
@@ -69,10 +72,13 @@ class LatticaSyncTrainer(Trainer):
         self.publish_every = publish_every
         self.step_seconds = step_seconds
         self.published: List[CID] = []
+        serve_checkpoints(node)   # subscribers may resolve 'latest' directly
 
     def run_mesh(self, n_steps: int,
                  log: Optional[Callable[[str], None]] = print) -> Generator:
-        """A sim-process: train; every ``publish_every`` steps, publish."""
+        """A sim-process: train; every ``publish_every`` steps, publish.
+        Each publish passes the previous version as ``base`` so the
+        announcement carries delta stats (new vs reused blocks/bytes)."""
         for i in range(n_steps):
             batch = next(self.data)
             self.state, metrics = self.step_fn(self.state, batch)
@@ -81,24 +87,50 @@ class LatticaSyncTrainer(Trainer):
             self.history.append(rec)
             yield self.step_seconds                    # wall-clock of the step
             if (i + 1) % self.publish_every == 0 or i == n_steps - 1:
+                base = self.published[-1] if self.published else None
                 root = yield from publish_checkpoint(
-                    self.node, self.state.params, i + 1, self.fleet)
+                    self.node, self.state.params, i + 1, self.fleet,
+                    base=base)
                 self.published.append(root)
+                yield from self._gossip_registry()
                 if log is not None:
                     log(f"[{self.node.host.name}] published step {i+1} "
                         f"loss={rec['loss']:.4f} root={root}")
         return self.published
 
+    def _gossip_registry(self, fanout: int = 3) -> Generator:
+        """Push the fresh registry entry to a few random peers right after a
+        publish.  Anti-entropy is symmetric, so subscribers' own random
+        sync rounds then converge epidemically instead of depending on
+        someone happening to dial the (possibly NAT'd) trainer directly."""
+        sim = self.node.sim
+        peers = sorted(self.node.peers, key=lambda p: p.digest)
+        if not peers:
+            return None
+        for pid in sim.rng.sample(peers, min(fanout, len(peers))):
+            try:
+                yield from self.node.sync_crdt_with(self.node.peers[pid])
+            except Exception:        # noqa: BLE001 — unreachable peer
+                continue
+        return None
+
 
 class ModelSubscriber:
-    """Inference-cluster side: follow a fleet's model versions."""
+    """Inference-cluster side: follow a fleet's model versions.
+
+    With ``resolve_from`` (the publisher's PeerInfo), each poll also asks
+    that peer's ``CheckpointService`` for the fleet's latest version —
+    convergence no longer waits on CRDT anti-entropy reaching this replica
+    (best-effort: a partition just falls back to local knowledge).
+    """
 
     def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
-                 like: Any = None):
+                 like: Any = None, resolve_from: Optional[PeerInfo] = None):
         self.node = node
         self.cfg = cfg
         self.fleet = fleet
         self.like = like
+        self.resolve_from = resolve_from
         self.registry = CheckpointRegistry(node, fleet)
         self.current_step = -1
         self.params: Any = None
@@ -109,34 +141,57 @@ class ModelSubscriber:
     def _on_announce(self, topic: str, data: Any, frm: Any) -> None:
         self._announced.append(data)
 
-    def _best_known(self) -> Optional[Any]:
-        """Newest version from the CRDT register AND live announcements."""
+    def _best_known(self) -> Any:
+        """Newest version from the CRDT register AND live announcements;
+        returns ((step, root) or None, publisher PeerInfo or None)."""
         import pickle
 
         best = self.registry.latest()
+        publisher: Optional[PeerInfo] = None
         for d in self._announced:
             if not (isinstance(d, tuple) and d and d[0] == "artifact"):
                 continue
             try:
-                step = pickle.loads(d[3])["step"]
+                meta = pickle.loads(d[3])
+                step = meta["step"]
             except Exception:        # noqa: BLE001 — malformed announcement
                 continue
             if best is None or step > best[0]:
                 best = (step, d[1])
+                publisher = meta.get("publisher")
         self._announced.clear()
-        return best
+        return best, publisher
+
+    def _resolve_remote(self) -> Generator:
+        """Ask the publisher's CheckpointService for its latest (step, root);
+        None when unset or unreachable."""
+        if self.resolve_from is None:
+            return None
+        try:
+            stub = self.node.stub(CheckpointService, self.resolve_from)
+            return (yield from stub.latest(self.fleet))
+        except Exception:            # noqa: BLE001 — partition/dead peer
+            return None
 
     def poll_and_fetch(self) -> Generator:
-        """Fetch the newest known version (CRDT register or pubsub
-        announcement) if newer than ours.  Returns the step, or None."""
-        latest = self._best_known()
+        """Fetch the newest known version (CheckpointService resolution,
+        CRDT register, or pubsub announcement) if newer than ours.  Returns
+        the step, or None."""
+        latest, publisher = self._best_known()
+        remote = yield from self._resolve_remote()
+        if remote is not None and (latest is None or remote[0] > latest[0]):
+            latest = remote
+            publisher = self.resolve_from
         if latest is None:
             return None
         step, root = latest
         if step <= self.current_step:
             return None
         t0 = self.node.sim.now
-        params = yield from fetch_checkpoint(self.node, root, self.like)
+        hints = [publisher] if publisher is not None else None
+        params = yield from fetch_checkpoint(self.node, root, self.like,
+                                             hint_providers=hints,
+                                             fleet=self.fleet)
         self.fetch_log.append({
             "step": step, "t_fetch": self.node.sim.now - t0,
             "bytes": self.node.bitswap.stats["bytes_fetched"]})
@@ -145,6 +200,14 @@ class ModelSubscriber:
         # note the version in our ORSet replica (never the LWW pointer —
         # see CheckpointRegistry.record_fetched)
         self.registry.record_fetched(step, root)
+        if publisher is not None:
+            # one direct anti-entropy round with the publisher pins the LWW
+            # register to what we just fetched — registry convergence no
+            # longer waits on random gossip reaching this replica
+            try:
+                yield from self.node.sync_crdt_with(publisher)
+            except Exception:        # noqa: BLE001 — partition/dead peer
+                pass
         return step
 
     def follow(self, interval: float = 5.0, until_step: int = 10**9) -> Generator:
