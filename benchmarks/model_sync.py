@@ -9,8 +9,16 @@ p% of the tensors.  Version N+1 fetchers should move bytes roughly
 proportional to p, not to the checkpoint size — the structural-sharing
 payoff that makes WAN model sync affordable.
 
-    PYTHONPATH=src python benchmarks/model_sync.py                # both
+The ``shifted`` scenario exercises content-defined chunking: version 2
+*inserts* bytes near the front of a large part (a grown vocabulary, appended
+optimizer state).  Under fixed-size chunking every downstream boundary
+shifts and essentially no leaf block is reused; under a ``cdc`` ChunkSpec
+boundaries re-synchronize right after the edit and the unchanged tail keeps
+its leaf CIDs.
+
+    PYTHONPATH=src python benchmarks/model_sync.py                # all
     PYTHONPATH=src python benchmarks/model_sync.py --delta-smoke  # CI gate
+    PYTHONPATH=src python benchmarks/model_sync.py --cdc-smoke    # CI gate
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ from typing import Generator, List
 
 import numpy as np
 
+from repro.core.cid import CODEC_RAW, ChunkSpec, dag_reachable
 from repro.core.fleet import make_fleet
 
 ARTIFACT_MB = 8
@@ -123,6 +132,57 @@ def run_delta(n_versions: int = 4, mutate_frac: float = 0.1,
     return rows
 
 
+def run_shifted(strategy: str, part_mb: int = 2, edit_at: int = 4096,
+                grow: int = 1536) -> dict:
+    """Publish v1 of a checkpoint-shaped artifact, then v2 with ``grow``
+    bytes inserted at offset ``edit_at`` of the big part (everything after
+    the edit shifts).  Returns leaf-level byte reuse between the two DAGs
+    plus what a follower actually moved over the mesh."""
+    spec = (ChunkSpec.cdc(avg_size=64 * 1024) if strategy == "cdc"
+            else ChunkSpec(strategy="fixed", chunk_size=64 * 1024))
+    fleet = make_fleet(3, seed=101, same_region="us")
+    sim = fleet.sim
+    seed_node, fetcher = fleet.peers[0], fleet.peers[1]
+    rng = np.random.default_rng(55)
+    vocab = rng.integers(0, 256, part_mb * 2**20, dtype=np.uint8).tobytes()
+    head = rng.integers(0, 256, 128 * 1024, dtype=np.uint8).tobytes()
+    vocab2 = (vocab[:edit_at]
+              + rng.integers(0, 256, grow, dtype=np.uint8).tobytes()
+              + vocab[edit_at:])
+    parts1 = [("head", head, b""), ("vocab", vocab, b"")]
+    parts2 = [("head", head, b""), ("vocab", vocab2, b"")]
+
+    def publish(parts):
+        root = yield from seed_node.publish_tree_artifact(parts, spec=spec)
+        return root
+
+    def leaf_bytes(root) -> dict:
+        peek = seed_node.blockstore.peek
+        return {c: len(peek(c)) for c in dag_reachable(root, peek)
+                if c.codec == CODEC_RAW and peek(c) is not None}
+
+    def fetch(root, parts):
+        got = yield from fetcher.fetch_artifact(root, reprovide=False)
+        assert got == b"".join(p[1] for p in parts)
+        fetcher.pin_latest("shift-bench", root)
+
+    r1 = sim.run_process(publish(parts1), until=sim.now + 3600)
+    sim.run_process(fetch(r1, parts1), until=sim.now + 86400)
+    before = fetcher.bitswap.stats["bytes_fetched"]
+    r2 = sim.run_process(publish(parts2), until=sim.now + 3600)
+    sim.run_process(fetch(r2, parts2), until=sim.now + 86400)
+    l1, l2 = leaf_bytes(r1), leaf_bytes(r2)
+    total2 = sum(l2.values())
+    reused = sum(size for c, size in l2.items() if c in l1)
+    return {
+        "strategy": strategy,
+        "leaf_reuse": reused / total2,
+        "n_leaves": len(l2),
+        "full_bytes": total2,
+        "fetched_bytes": fetcher.bitswap.stats["bytes_fetched"] - before,
+    }
+
+
 def main(report: List[str]) -> None:
     report.append(f"# Model dissemination ({ARTIFACT_MB} MiB artifact, "
                   "1 seed, swarm re-provides)")
@@ -147,6 +207,36 @@ def main_delta(report: List[str]) -> None:
             f"{r['makespan']:>10.2f}")
 
 
+def main_shifted(report: List[str]) -> None:
+    report.append("# Shifted-edit delta (1.5 KiB inserted at 4 KiB of a "
+                  "2 MiB part; 64 KiB chunks)")
+    report.append(f"{'strategy':>8} {'leaves':>6} {'leaf_reuse':>10} "
+                  f"{'fetched_KiB':>11} {'full_KiB':>8}")
+    for strategy in ("fixed", "cdc"):
+        r = run_shifted(strategy)
+        report.append(f"{r['strategy']:>8} {r['n_leaves']:>6} "
+                      f"{r['leaf_reuse']:>10.2%} "
+                      f"{r['fetched_bytes'] / 1024:>11.0f} "
+                      f"{r['full_bytes'] / 1024:>8.0f}")
+
+
+def cdc_smoke() -> None:
+    """CI gate: a byte-shifting edit must keep >= 60% leaf-byte reuse under
+    CDC while fixed-size chunking stays < 10% (acceptance criterion)."""
+    cdc = run_shifted("cdc")
+    fixed = run_shifted("fixed")
+    assert cdc["leaf_reuse"] >= 0.60, (
+        f"cdc regression: shifted edit reused only {cdc['leaf_reuse']:.0%} "
+        "of leaf bytes (gate: >=60%)")
+    assert fixed["leaf_reuse"] < 0.10, (
+        f"fixed-chunk baseline unexpectedly reused {fixed['leaf_reuse']:.0%} "
+        "of leaf bytes after a shifted edit — the scenario no longer shifts "
+        "boundaries and the CDC gate proves nothing")
+    print(f"cdc smoke ok: leaf reuse cdc={cdc['leaf_reuse']:.1%} vs "
+          f"fixed={fixed['leaf_reuse']:.1%} after a shifted edit "
+          "(gates: >=60% / <10%)")
+
+
 def delta_smoke() -> None:
     """CI gate: with 10% of tensors mutated, every follow-up version must
     fetch < 30% of a full checkpoint (acceptance criterion)."""
@@ -165,7 +255,11 @@ if __name__ == "__main__":
     if "--delta-smoke" in sys.argv:
         delta_smoke()
         sys.exit(0)
+    if "--cdc-smoke" in sys.argv:
+        cdc_smoke()
+        sys.exit(0)
     out: List[str] = []
     main(out)
     main_delta(out)
+    main_shifted(out)
     print("\n".join(out))

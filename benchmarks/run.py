@@ -8,6 +8,7 @@ Sections:
     dht         Kademlia lookup scaling (O(log N))
     cdn         model dissemination via Bitswap (Fig. 1-2/3)
     delta       per-tensor delta sync (v2 manifests, bytes ∝ churn)
+    shifted     shifted-edit delta (CDC vs fixed chunk boundary stability)
     crdt        replicated-store convergence
     shards      sharded inference + failover (Fig. 1-4)
     roofline    arch × shape roofline terms from the dry-run artifacts
@@ -31,6 +32,7 @@ SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
     ("dht", dht_lookup.main),
     ("cdn", model_sync.main),
     ("delta", model_sync.main_delta),
+    ("shifted", model_sync.main_shifted),
     ("crdt", crdt_sync.main),
     ("shards", sharded_inference.main),
     ("roofline", roofline.main),

@@ -14,6 +14,9 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # content-plane delta smoke: correctness (reuse-fraction gate) is
     # gating, the printed timings are informational only
     python benchmarks/model_sync.py --delta-smoke
+    # shifted-edit smoke: content-defined chunking must keep leaf-byte
+    # reuse high when an insert shifts every downstream byte
+    python benchmarks/model_sync.py --cdc-smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

@@ -23,12 +23,13 @@ import pickle
 from typing import Any, Dict, Generator, List, Optional, Tuple
 
 from repro.core.bitswap import FetchError
-from repro.core.cid import (CID, CODEC_DAG, build_tree_dag, dag_reachable,
-                            decode_manifest_v2, encode_manifest_v2,
-                            manifest_version, read_dag)
+from repro.core.cid import (CID, CODEC_DAG, ChunkSpec, build_tree_dag,
+                            dag_reachable, decode_manifest_v2,
+                            encode_manifest_v2, manifest_version, read_dag)
 from repro.core.dht import PeerInfo
 from repro.core.node import LatticaNode
 from repro.core.rpc import RpcContext
+from repro.core.safepickle import restricted_loads
 from repro.core.service import Fixed, Service, pickled, unary
 
 from .serial import (leaf_from_part, params_from_bytes, params_from_parts,
@@ -141,19 +142,63 @@ def checkpoint_delta(node: LatticaNode, root: CID,
          for c in dag_reachable(root, store.peek)), base_set)
 
 
+#: classes a checkpoint announcement's pickled meta may legitimately carry
+#: (the publisher's PeerInfo); everything else is refused — announcement
+#: meta arrives off pubsub / fetched manifests, i.e. from untrusted peers,
+#: and an open ``pickle.loads`` there is an arbitrary-code-execution vector
+_META_ALLOWED = frozenset({
+    ("repro.core.dht", "PeerInfo"),
+    ("repro.core.peer", "PeerId"),
+    ("repro.core.peer", "Multiaddr"),
+})
+
+
+def safe_meta_loads(raw: bytes) -> Any:
+    """Decode a checkpoint announcement/manifest meta blob without giving
+    the sender code execution: only the allowlisted PeerInfo classes
+    resolve.  Raises ``ValueError`` on anything malformed or forbidden."""
+    return restricted_loads(raw, _META_ALLOWED)
+
+
+def chunk_spec_of(node: LatticaNode, root: CID) -> Optional[ChunkSpec]:
+    """The ``ChunkSpec`` recorded in a locally-held checkpoint root's meta,
+    or None when absent/undecodable.  Publishing a delta against ``base``
+    must chunk with the *same* spec the base used — identical boundaries are
+    what make unchanged content keep its leaf CIDs."""
+    manifest = node.blockstore.peek(root)
+    if manifest is None:
+        return None
+    try:
+        if manifest_version(manifest) != 2:
+            return None
+        meta = safe_meta_loads(decode_manifest_v2(manifest)[2])
+        return ChunkSpec.decode(meta["chunking"].encode("ascii"))
+    except Exception:        # noqa: BLE001 — older meta without a spec
+        return None
+
+
 def publish_checkpoint(node: LatticaNode, params: Any, step: int,
-                       fleet: str, base: Optional[CID] = None) -> Generator:
+                       fleet: str, base: Optional[CID] = None,
+                       spec: Optional[ChunkSpec] = None) -> Generator:
     """Per-tensor chunk → provide on the DHT → announce → record in CRDT.
 
     Each pytree leaf becomes its own sub-DAG under a hierarchical (v2) root
     manifest, so a new version reuses the sub-root CIDs of unchanged tensors
-    verbatim and fetchers only swarm what changed.  With ``base`` (the
-    previous version's root), delta stats (new vs reused blocks/bytes) are
-    embedded in the announcement meta.  Returns the root CID.
+    verbatim and fetchers only swarm what changed.  ``spec`` picks the
+    chunking strategy (a ``cdc`` spec additionally dedups *within-tensor*
+    byte-shifting edits); when omitted, the spec recorded in ``base``'s
+    manifest meta is reused so boundaries — and therefore unchanged-content
+    CIDs — reproduce exactly.  With ``base`` (the previous version's root),
+    delta stats (new vs reused blocks/bytes) are embedded in the
+    announcement meta.  Returns the root CID.
     """
     reg = CheckpointRegistry(node, fleet)
+    if spec is None and base is not None:
+        spec = chunk_spec_of(node, base)
+    if spec is None:
+        spec = ChunkSpec()
     parts = params_to_parts(params)
-    dag = build_tree_dag(parts)
+    dag = build_tree_dag(parts, spec=spec)
     delta = None
     if base is not None:
         base_set = set(dag_reachable(base, node.blockstore.peek))
@@ -161,6 +206,7 @@ def publish_checkpoint(node: LatticaNode, params: Any, step: int,
             ((c, len(blk)) for c, blk in dag.blocks.items()), base_set)
     meta = pickle.dumps({"step": step, "fleet": fleet,
                          "bytes": dag.total_size, "delta": delta,
+                         "chunking": spec.encode().decode("ascii"),
                          "publisher": node.info()})
     # re-encode only the root manifest with the final meta (the sub-DAGs —
     # all the hashing work — are reused as built)

@@ -12,18 +12,57 @@ Two granularities:
   dtype/shape-meta)`` part per leaf, feeding the hierarchical (v2) manifest
   path: each tensor becomes its own sub-DAG, so a new version's root
   manifest reuses the sub-root CIDs of unchanged tensors verbatim.
+
+Everything decoded here can arrive off the swarm, i.e. from untrusted
+peers, so the wire formats are deliberately dumb: JSON for the index and
+per-leaf dtype/shape meta, raw C-order bytes for tensor data.  Earlier
+releases pickled the index/meta; those artifacts still decode, but only
+through a restricted unpickler that refuses every class/global lookup —
+the legacy payloads are pure primitives, and blocking ``find_class``
+closes the arbitrary-code-execution path ``pickle.loads`` would open.
 """
 
 from __future__ import annotations
 
-import pickle
+import json
 import struct
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
 
-_MAGIC = b"LCK1"
+from repro.core.safepickle import restricted_loads
+
+_MAGIC = b"LCK1"    # legacy: pickled index (decoded via the safe shim only)
+_MAGIC2 = b"LCK2"   # current: JSON index
+
+
+def _safe_pickle_loads(raw: bytes) -> Any:
+    """Decode a legacy pickled index/meta: primitives only — no allowlist,
+    so any global resolution (the ACE hook) raises ``ValueError``."""
+    return restricted_loads(raw)
+
+
+def _checked_dtype(dtype: Any) -> np.dtype:
+    """Validate an untrusted dtype string.  Object/void dtypes would make
+    ``np.frombuffer`` reinterpret attacker bytes as Python object pointers —
+    that is memory corruption, not deserialization."""
+    if not isinstance(dtype, str):
+        raise ValueError(f"dtype must be a string, got {type(dtype).__name__}")
+    try:
+        dt = np.dtype(dtype)
+    except TypeError as e:
+        raise ValueError(f"bad dtype {dtype!r}") from e
+    if dt.hasobject or dt.kind in ("O", "V"):
+        raise ValueError(f"refusing unsafe dtype {dtype!r}")
+    return dt
+
+
+def _checked_shape(shape: Any) -> Tuple[int, ...]:
+    if not isinstance(shape, (list, tuple)) or not all(
+            isinstance(s, int) and s >= 0 for s in shape):
+        raise ValueError(f"bad shape {shape!r}")
+    return tuple(shape)
 
 
 def _path_str(path: Tuple) -> str:
@@ -43,36 +82,61 @@ def params_to_bytes(params: Any) -> bytes:
     entries = sorted(
         ((_path_str(path), np.asarray(leaf)) for path, leaf in leaves_with_paths),
         key=lambda kv: kv[0])
-    index: List[Tuple[str, str, Tuple[int, ...], int]] = []
+    index: List[Tuple[str, str, List[int], int]] = []
     blobs: List[bytes] = []
     off = 0
     for name, arr in entries:
         raw = np.ascontiguousarray(arr).tobytes()
-        index.append((name, str(arr.dtype), tuple(arr.shape), off))
+        index.append((name, str(arr.dtype), list(arr.shape), off))
         blobs.append(raw)
         off += len(raw)
-    head = pickle.dumps(index)
-    return b"".join([_MAGIC, struct.pack(">I", len(head)), head] + blobs)
+    head = json.dumps(index, separators=(",", ":")).encode("utf-8")
+    return b"".join([_MAGIC2, struct.pack(">I", len(head)), head] + blobs)
+
+
+def encode_leaf_meta(dtype: str, shape: Sequence[int]) -> bytes:
+    """Safe fixed encoding of a tensor's ``(dtype, shape)`` for v2 manifest
+    entry meta: compact JSON, deterministic, and decodable without pickle."""
+    return json.dumps({"dtype": dtype, "shape": list(shape)},
+                      separators=(",", ":"), sort_keys=True).encode("utf-8")
+
+
+def decode_leaf_meta(meta: bytes) -> Tuple[np.dtype, Tuple[int, ...]]:
+    """Decode entry meta from either the JSON encoding or (shim) a legacy
+    primitive-only pickle; raises ``ValueError`` on anything else."""
+    if meta[:1] == b"{":
+        try:
+            obj = json.loads(meta.decode("utf-8"))
+            dtype, shape = obj["dtype"], obj["shape"]
+        except (UnicodeDecodeError, ValueError, KeyError, TypeError) as e:
+            raise ValueError(f"bad leaf meta {meta!r}") from e
+    else:
+        decoded = _safe_pickle_loads(meta)
+        if not (isinstance(decoded, (tuple, list)) and len(decoded) == 2):
+            raise ValueError(f"bad legacy leaf meta {meta!r}")
+        dtype, shape = decoded[0], list(decoded[1])
+    return _checked_dtype(dtype), _checked_shape(shape)
 
 
 def params_to_parts(params: Any) -> List[Tuple[str, bytes, bytes]]:
-    """Per-leaf parts ``(path, raw bytes, pickled (dtype, shape))``, sorted
+    """Per-leaf parts ``(path, raw bytes, encoded (dtype, shape))``, sorted
     by path — the unit of structural sharing for delta-friendly DAGs."""
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
     entries = sorted(
         ((_path_str(path), np.asarray(leaf)) for path, leaf in leaves_with_paths),
         key=lambda kv: kv[0])
     return [(name, np.ascontiguousarray(arr).tobytes(),
-             pickle.dumps((str(arr.dtype), tuple(arr.shape))))
+             encode_leaf_meta(str(arr.dtype), arr.shape))
             for name, arr in entries]
 
 
 def leaf_from_part(raw: bytes, meta: bytes) -> np.ndarray:
     """Decode one part's bytes back into an ndarray using its dtype/shape
-    meta (the v2 manifest entry's ``meta`` field)."""
-    dtype, shape = pickle.loads(meta)
+    meta (the v2 manifest entry's ``meta`` field).  ``meta`` and ``raw`` are
+    both peer-supplied; malformed input raises ``ValueError``."""
+    dt, shape = decode_leaf_meta(meta)
     count = int(np.prod(shape, dtype=np.int64)) if shape else 1
-    return np.frombuffer(raw, dtype=np.dtype(dtype), count=count).reshape(shape)
+    return np.frombuffer(raw, dtype=dt, count=count).reshape(shape)
 
 
 def params_from_parts(flat: Dict[str, np.ndarray], like: Any = None) -> Any:
@@ -90,16 +154,43 @@ def params_from_parts(flat: Dict[str, np.ndarray], like: Any = None) -> Any:
     return jax.tree_util.tree_unflatten(paths_and_leaves[1], leaves)
 
 
-def params_from_bytes(data: bytes, like: Any = None) -> Any:
-    assert data[:4] == _MAGIC, "not a checkpoint blob"
+def _decode_index(data: bytes) -> Tuple[List, int]:
+    """Index + payload offset from a checkpoint blob of either magic."""
+    if len(data) < 8:
+        raise ValueError("truncated checkpoint blob")
+    magic = data[:4]
     (hlen,) = struct.unpack(">I", data[4:8])
-    index = pickle.loads(data[8:8 + hlen])
-    base = 8 + hlen
+    if 8 + hlen > len(data):
+        raise ValueError("truncated checkpoint index")
+    head = data[8:8 + hlen]
+    if magic == _MAGIC2:
+        try:
+            index = json.loads(head.decode("utf-8"))
+        except (UnicodeDecodeError, ValueError) as e:
+            raise ValueError(f"bad checkpoint index: {e}") from e
+    elif magic == _MAGIC:
+        index = _safe_pickle_loads(head)     # legacy shim, primitives only
+    else:
+        raise ValueError("not a checkpoint blob")
+    if not isinstance(index, list):
+        raise ValueError("checkpoint index is not a list")
+    return index, 8 + hlen
+
+
+def params_from_bytes(data: bytes, like: Any = None) -> Any:
+    index, base = _decode_index(data)
     flat: Dict[str, np.ndarray] = {}
-    for name, dtype, shape, off in index:
+    for entry in index:
+        if not (isinstance(entry, (list, tuple)) and len(entry) == 4):
+            raise ValueError(f"bad checkpoint index entry {entry!r}")
+        name, dtype, shape, off = entry
+        if not isinstance(name, str) or not isinstance(off, int) or off < 0:
+            raise ValueError(f"bad checkpoint index entry {entry!r}")
+        dt = _checked_dtype(dtype)
+        shp = _checked_shape(shape)
         arr = np.frombuffer(
-            data, dtype=np.dtype(dtype), offset=base + off,
-            count=int(np.prod(shape, dtype=np.int64)) if shape else 1,
-        ).reshape(shape)
+            data, dtype=dt, offset=base + off,
+            count=int(np.prod(shp, dtype=np.int64)) if shp else 1,
+        ).reshape(shp)
         flat[name] = arr
     return params_from_parts(flat, like)

@@ -15,10 +15,10 @@ The paper's contribution, as composable pieces:
 * :mod:`repro.core.node` — ``LatticaNode``, the composed SDK surface
 """
 
-from .cid import (CID, DAG, ManifestEntry, build_dag, build_tree_dag, chunk,
-                  dag_reachable, decode_manifest, decode_manifest_v2,
-                  encode_manifest, encode_manifest_v2, manifest_children,
-                  manifest_version, read_dag)
+from .cid import (CID, DAG, ChunkSpec, ManifestEntry, build_dag,
+                  build_tree_dag, chunk, dag_reachable, decode_manifest,
+                  decode_manifest_v2, encode_manifest, encode_manifest_v2,
+                  manifest_children, manifest_version, read_dag)
 from .crdt import (GCounter, LWWRegister, MVRegister, ORSet, PNCounter,
                    ReplicatedStore)
 from .dht import KademliaDHT, KadService, PeerInfo, RoutingTable
@@ -32,7 +32,8 @@ from .service import (ClientInterceptor, Codec, Fixed, MethodSpec,
 from .simnet import Connection, DialError, Host, Network, Sim, Stream
 
 __all__ = [
-    "CID", "DAG", "ManifestEntry", "build_dag", "build_tree_dag", "chunk",
+    "CID", "DAG", "ChunkSpec", "ManifestEntry", "build_dag",
+    "build_tree_dag", "chunk",
     "dag_reachable", "decode_manifest", "decode_manifest_v2",
     "encode_manifest", "encode_manifest_v2", "manifest_children",
     "manifest_version", "read_dag",

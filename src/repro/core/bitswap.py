@@ -140,7 +140,7 @@ class Bitswap:
         self.stats = {"blocks_served": 0, "blocks_fetched": 0,
                       "bytes_served": 0, "bytes_fetched": 0, "retries": 0,
                       "stream_sessions": 0, "have_probes": 0,
-                      "have_skips": 0}
+                      "have_skips": 0, "unsolicited_rejected": 0}
         self.scores: Dict[bytes, ProviderScore] = {}
         node.serve(BitswapService(self))
 
@@ -171,6 +171,7 @@ class Bitswap:
         """Bulk fetch over one streaming channel; returns {cid: bytes} for
         whatever verified blocks arrived (partial on provider failure)."""
         got: Dict[CID, bytes] = {}
+        wanted = set(cids)
         sim = self.node.sim
         t0 = sim.now
         try:
@@ -179,6 +180,12 @@ class Bitswap:
             yield from chan.send(list(cids), 48 * len(cids))
             for _ in range(len(cids)):
                 cid, block = yield from chan.recv(timeout=120.0)
+                if cid not in wanted:
+                    # a self-verifying block we never asked for: a misbehaving
+                    # provider could otherwise stuff the store with junk and
+                    # pad its own throughput score with bytes nobody wanted
+                    self.stats["unsolicited_rejected"] += 1
+                    continue
                 if block is not None and cid.verify(block):
                     got[cid] = block
         except (DialError, RpcError):
@@ -377,11 +384,19 @@ class Bitswap:
                         f"all providers failed serving manifest {root}")
                 self._store_fetched(root, manifest, held)
 
-            # collect the full leaf want-list, pulling missing sub-manifests
-            if manifest_version(manifest) == 1:
-                leaves = decode_manifest(manifest)[0]
-            else:
-                entries = decode_manifest_v2(manifest)[0]
+            # collect the full leaf want-list, pulling missing sub-manifests;
+            # a hash-valid but malformed manifest (truncated, garbage) raises
+            # ValueError from the decoders and must surface as FetchError —
+            # a misbehaving publisher is a failed fetch, not a node crash
+            try:
+                version = manifest_version(manifest)
+                if version == 1:
+                    leaves = decode_manifest(manifest)[0]
+                else:
+                    entries = decode_manifest_v2(manifest)[0]
+            except ValueError as e:
+                raise FetchError(f"corrupt manifest {root}: {e}") from e
+            if version == 2:
                 sub_missing = []
                 for e in entries:
                     if e.cid.codec != CODEC_DAG:
@@ -404,7 +419,11 @@ class Bitswap:
                     if sub is None:
                         raise FetchError(
                             f"sub-manifest {e.cid} missing after fetch")
-                    leaves.extend(manifest_children(sub))
+                    try:
+                        leaves.extend(manifest_children(sub))
+                    except ValueError as exc:
+                        raise FetchError(
+                            f"corrupt sub-manifest {e.cid}: {exc}") from exc
 
             # dedup: repeated content (identical chunks) shares one CID and
             # is fetched once — content addressing's free deduplication

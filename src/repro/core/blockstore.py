@@ -26,7 +26,11 @@ class BlockStore:
         #: insertion/touch order = LRU order (oldest first)
         self._blocks: "OrderedDict[CID, bytes]" = OrderedDict()
         self._pins: Dict[CID, int] = {}
-        self.pinned_roots: Set[CID] = set()
+        #: per-root record of exactly which CIDs that pin incremented —
+        #: unpin releases this set, never a fresh reachability walk (blocks
+        #: that arrived after the pin were never counted, so re-walking at
+        #: unpin time would decrement refcounts other roots still rely on)
+        self._pin_sets: Dict[CID, List[CID]] = {}
         self.capacity = capacity
         self.bytes_stored = 0
         self.stats = {"hits": 0, "misses": 0, "evictions": 0,
@@ -82,25 +86,32 @@ class BlockStore:
     def _reachable(self, root: CID) -> List[CID]:
         return dag_reachable(root, self.peek)
 
+    @property
+    def pinned_roots(self) -> Set[CID]:
+        return set(self._pin_sets)
+
     def pin(self, root: CID) -> int:
         """Pin every block reachable from ``root`` (recursive over manifests
         present in the store).  Idempotent per root; returns the number of
-        CIDs pinned."""
-        if root in self.pinned_roots:
+        CIDs pinned.  The exact pinned set is recorded so :meth:`unpin`
+        releases it symmetrically."""
+        if root in self._pin_sets:
             return 0
         reach = self._reachable(root)
         for c in reach:
             self._pins[c] = self._pins.get(c, 0) + 1
-        self.pinned_roots.add(root)
+        self._pin_sets[root] = reach
         return len(reach)
 
     def unpin(self, root: CID) -> int:
         """Release a ``pin``; blocks whose refcount drops to zero become
-        evictable (lazily, at the next over-budget put)."""
-        if root not in self.pinned_roots:
+        evictable (lazily, at the next over-budget put).  Releases exactly
+        the CID set recorded at pin time — blocks that became reachable from
+        ``root`` only after the pin were never refcounted for it, and must
+        not lose refcounts another root may hold."""
+        reach = self._pin_sets.pop(root, None)
+        if reach is None:
             return 0
-        self.pinned_roots.discard(root)
-        reach = self._reachable(root)
         for c in reach:
             n = self._pins.get(c, 0) - 1
             if n <= 0:

@@ -1,9 +1,26 @@
 """Content identifiers, chunking, and Merkle DAGs.
 
 CIDs follow the multihash spirit: ``<version><codec><sha256 digest>``.  Large
-artifacts (model checkpoints) are split into fixed-size chunks, each chunk
-becoming a leaf block; a manifest block (codec ``dag``) lists the child CIDs
-in order so any peer can verify and reassemble the artifact.
+artifacts (model checkpoints) are split into chunks, each chunk becoming a
+leaf block; a manifest block (codec ``dag``) lists the child CIDs in order
+so any peer can verify and reassemble the artifact.
+
+Chunking is governed by a :class:`ChunkSpec` with two strategies:
+
+* ``fixed`` — fixed-size slices (the historical default).  Cheap, but a
+  single inserted/removed byte shifts every downstream boundary, so every
+  later chunk gets a fresh CID even though its content barely moved.
+* ``cdc`` — content-defined chunking via a Gear/FastCDC-style rolling hash
+  with ``min``/``avg``/``max`` bounds.  Boundaries are a pure function of
+  local content, so byte-shifting edits (grown vocabularies, appended
+  optimizer state, partial in-place edits) re-synchronize after the edit
+  point and the unchanged tail keeps its leaf CIDs — the property that makes
+  re-publishing a slightly different artifact move bytes proportional to the
+  edit, not the artifact.
+
+Both strategies are fully deterministic (the gear table is derived from
+fixed sha256 seeds), so a re-publish under the same ``ChunkSpec`` reproduces
+identical boundaries and therefore identical CIDs.
 
 Two manifest layouts coexist on the wire, distinguished by magic:
 
@@ -26,6 +43,8 @@ import hashlib
 import struct
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 CHUNK_SIZE = 256 * 1024  # 256 KiB, matching Bitswap-typical block size
 
@@ -70,6 +89,163 @@ def chunk(data: bytes, chunk_size: int = CHUNK_SIZE) -> List[bytes]:
     return [data[i:i + chunk_size] for i in range(0, len(data), chunk_size)]
 
 
+# -- content-defined chunking (Gear/FastCDC-style) ---------------------------
+
+_GEAR_TABLE: Optional[np.ndarray] = None
+
+#: cap on the rolling-hash mask width: candidates only test the low ``bits``
+#: bits, so uint32 arithmetic suffices (identical low bits, half the memory)
+_CDC_MAX_BITS = 30
+#: scan slab: bounds peak temporaries to a constant regardless of part size
+_CDC_SLAB = 8 * 2**20
+
+
+def _gear_table() -> np.ndarray:
+    """256 pseudo-random 32-bit gear values derived from fixed sha256 seeds:
+    deterministic across platforms and interpreter versions, which is what
+    makes CDC boundaries (and therefore CIDs) reproducible forever."""
+    global _GEAR_TABLE
+    if _GEAR_TABLE is None:
+        raw = b"".join(hashlib.sha256(b"lattica-gear-%d" % i).digest()[:4]
+                       for i in range(256))
+        _GEAR_TABLE = np.frombuffer(raw, dtype=">u4").astype(np.uint32)
+    return _GEAR_TABLE
+
+
+def _cdc_candidates(data: bytes, bits: int) -> np.ndarray:
+    """Positions ``i`` whose gear hash over the preceding ``bits`` bytes
+    satisfies the boundary condition — each fires with probability
+    ~``2**-bits``, giving candidate spacing ~``2**bits`` bytes.
+
+    The gear recurrence ``h = (h << 1) + G[b]`` means bit ``k`` of ``h`` only
+    sees the last ``k+1`` bytes; since the mask checks the low ``bits`` bits,
+    the sum can be truncated to ``bits`` shifted adds (mod 2**32 — carries
+    into discarded high bits never flow back down) and vectorized.  The scan
+    runs in overlapping slabs: a position only needs the ``bits-1`` bytes
+    before it, so each slab recomputes that overlap and peak temporaries
+    stay ~10x the slab size instead of scaling with the whole part.
+    """
+    buf = np.frombuffer(data, dtype=np.uint8)
+    table = _gear_table()
+    mask = np.uint32((1 << bits) - 1)
+    out: List[np.ndarray] = []
+    for start in range(0, len(data), _CDC_SLAB):
+        lo = max(start - (bits - 1), 0)
+        g = table[buf[lo:start + _CDC_SLAB]]
+        h = np.zeros(len(g), dtype=np.uint32)
+        for k in range(min(bits, len(g))):
+            h[k:] += g[:len(g) - k] << np.uint32(k)
+        cand = np.nonzero((h & mask) == mask)[0] + lo
+        out.append(cand[cand >= start])    # overlap belongs to the prior slab
+    return np.concatenate(out) if out else np.zeros(0, dtype=np.int64)
+
+
+def cdc_cut_points(data: bytes, min_size: int, avg_size: int,
+                   max_size: int) -> List[int]:
+    """Boundary offsets (exclusive chunk ends, last == ``len(data)``) for
+    content-defined chunking.  Every chunk is in ``[min_size, max_size]``
+    except possibly the final tail.  Boundaries depend only on nearby
+    content, so an insertion re-synchronizes at the next surviving candidate
+    instead of cascading through the rest of the buffer."""
+    n = len(data)
+    if n <= min_size:
+        return [n]
+    bits = min(max(avg_size.bit_length() - 1, 6), _CDC_MAX_BITS)
+    # boundary *offsets*: a candidate at byte i ends a chunk after i
+    cand = _cdc_candidates(data, bits) + 1
+    cuts: List[int] = []
+    last = 0
+    while last < n:
+        if n - last <= min_size:
+            cuts.append(n)
+            break
+        hi_limit = min(last + max_size, n)
+        lo = int(np.searchsorted(cand, last + min_size, side="left"))
+        hi = int(np.searchsorted(cand, hi_limit, side="right"))
+        cut = int(cand[lo]) if lo < hi else hi_limit
+        cuts.append(cut)
+        last = cut
+    return cuts
+
+
+@dataclass(frozen=True)
+class ChunkSpec:
+    """How an artifact's bytes are split into leaf blocks.
+
+    ``strategy="fixed"`` slices every ``chunk_size`` bytes; ``strategy="cdc"``
+    places boundaries where a rolling gear hash fires, bounded by
+    ``min_size``/``max_size`` around an expected ``avg_size``.  Specs encode
+    to a compact ASCII form (``fixed:262144`` / ``cdc:65536:262144:1048576``)
+    so publishers can record them in manifest meta and a re-publish — or a
+    delta re-publish against a ``base`` version — reproduces identical
+    boundaries, which is the whole point: boundary determinism is what makes
+    unchanged content keep its CIDs.
+    """
+
+    strategy: str = "fixed"
+    chunk_size: int = CHUNK_SIZE
+    min_size: int = CHUNK_SIZE // 4
+    avg_size: int = CHUNK_SIZE
+    max_size: int = CHUNK_SIZE * 4
+
+    def __post_init__(self) -> None:
+        if self.strategy not in ("fixed", "cdc"):
+            raise ValueError(f"unknown chunking strategy {self.strategy!r}")
+        if self.strategy == "fixed":
+            if self.chunk_size <= 0:
+                raise ValueError("chunk_size must be positive")
+        else:
+            if not 0 < self.min_size <= self.avg_size <= self.max_size:
+                raise ValueError(
+                    "cdc requires 0 < min_size <= avg_size <= max_size, got "
+                    f"{self.min_size}/{self.avg_size}/{self.max_size}")
+            # chunk_size is unused for cdc: normalize it to avg_size so
+            # equality and encode()/decode() round-trips never diverge on
+            # derivable state
+            object.__setattr__(self, "chunk_size", self.avg_size)
+
+    @classmethod
+    def cdc(cls, avg_size: int = 64 * 1024, min_size: Optional[int] = None,
+            max_size: Optional[int] = None) -> "ChunkSpec":
+        return cls(strategy="cdc", chunk_size=avg_size,
+                   min_size=min_size if min_size is not None else avg_size // 4,
+                   avg_size=avg_size,
+                   max_size=max_size if max_size is not None else avg_size * 4)
+
+    def split(self, data: bytes) -> List[bytes]:
+        if not data:
+            return [b""]
+        if self.strategy == "fixed":
+            return chunk(data, self.chunk_size)
+        cuts = cdc_cut_points(data, self.min_size, self.avg_size,
+                              self.max_size)
+        out = []
+        last = 0
+        for cut in cuts:
+            out.append(data[last:cut])
+            last = cut
+        return out
+
+    def encode(self) -> bytes:
+        if self.strategy == "fixed":
+            return b"fixed:%d" % self.chunk_size
+        return b"cdc:%d:%d:%d" % (self.min_size, self.avg_size, self.max_size)
+
+    @classmethod
+    def decode(cls, raw: bytes) -> "ChunkSpec":
+        try:
+            fields = raw.decode("ascii").split(":")
+            if fields[0] == "fixed" and len(fields) == 2:
+                return cls(strategy="fixed", chunk_size=int(fields[1]))
+            if fields[0] == "cdc" and len(fields) == 4:
+                mn, avg, mx = (int(f) for f in fields[1:])
+                return cls(strategy="cdc", chunk_size=avg, min_size=mn,
+                           avg_size=avg, max_size=mx)
+        except (UnicodeDecodeError, ValueError) as e:
+            raise ValueError(f"bad ChunkSpec encoding {raw!r}") from e
+        raise ValueError(f"bad ChunkSpec encoding {raw!r}")
+
+
 # -- Merkle DAG manifests ----------------------------------------------------
 
 _MAGIC = b"LDAG"       # v1: flat chunk list
@@ -100,18 +276,31 @@ def encode_manifest(children: Sequence[CID], total_size: int,
     return b"".join(out)
 
 
+def _take(data: bytes, off: int, n: int, what: str) -> Tuple[bytes, int]:
+    """Bounds-checked slice for manifest decoding.  Truncated or garbage
+    blocks must surface as ``ValueError`` (which the fetch paths translate to
+    ``FetchError``), never as ``struct.error``/``IndexError`` — a corrupt
+    block from a misbehaving peer is a protocol error, not a node crash."""
+    end = off + n
+    if n < 0 or end > len(data):
+        raise ValueError(
+            f"truncated manifest: {what} at offset {off} needs {n} bytes, "
+            f"{len(data) - off} remain")
+    return data[off:end], end
+
+
 def decode_manifest(data: bytes) -> Tuple[List[CID], int, bytes]:
-    assert data[:4] == _MAGIC, "not a manifest block"
-    total_size, n = struct.unpack(">QI", data[4:16])
-    off = 16
+    if data[:4] != _MAGIC:
+        raise ValueError("not a v1 manifest block")
+    head, off = _take(data, 4, 12, "header")
+    total_size, n = struct.unpack(">QI", head)
     children = []
-    for _ in range(n):
-        codec = data[off]
-        digest = data[off + 1:off + 33]
-        children.append(CID(codec, digest))
-        off += 33
-    (meta_len,) = struct.unpack(">I", data[off:off + 4])
-    meta = data[off + 4:off + 4 + meta_len]
+    for i in range(n):
+        raw, off = _take(data, off, 33, f"child {i}")
+        children.append(CID(raw[0], raw[1:]))
+    raw, off = _take(data, off, 4, "meta length")
+    (meta_len,) = struct.unpack(">I", raw)
+    meta, off = _take(data, off, meta_len, "meta")
     return children, total_size, meta
 
 
@@ -152,25 +341,28 @@ def encode_manifest_v2(entries: Sequence[ManifestEntry], total_size: int,
 
 
 def decode_manifest_v2(data: bytes) -> Tuple[List[ManifestEntry], int, bytes]:
-    assert data[:4] == _MAGIC2, "not a v2 manifest block"
-    total_size, n = struct.unpack(">QI", data[4:16])
-    off = 16
+    if data[:4] != _MAGIC2:
+        raise ValueError("not a v2 manifest block")
+    head, off = _take(data, 4, 12, "header")
+    total_size, n = struct.unpack(">QI", head)
     entries: List[ManifestEntry] = []
-    for _ in range(n):
-        (name_len,) = struct.unpack(">H", data[off:off + 2])
-        off += 2
-        name = data[off:off + name_len].decode("utf-8")
-        off += name_len
-        codec = data[off]
-        digest = data[off + 1:off + 33]
-        off += 33
-        size, meta_len = struct.unpack(">QI", data[off:off + 12])
-        off += 12
-        meta = data[off:off + meta_len]
-        off += meta_len
-        entries.append(ManifestEntry(name, CID(codec, digest), size, meta))
-    (meta_len,) = struct.unpack(">I", data[off:off + 4])
-    meta = data[off + 4:off + 4 + meta_len]
+    for i in range(n):
+        raw, off = _take(data, off, 2, f"entry {i} name length")
+        (name_len,) = struct.unpack(">H", raw)
+        raw, off = _take(data, off, name_len, f"entry {i} name")
+        try:
+            name = raw.decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise ValueError(f"entry {i} name is not utf-8") from e
+        raw, off = _take(data, off, 33, f"entry {i} cid")
+        child = CID(raw[0], raw[1:])
+        raw, off = _take(data, off, 12, f"entry {i} size/meta length")
+        size, meta_len = struct.unpack(">QI", raw)
+        meta, off = _take(data, off, meta_len, f"entry {i} meta")
+        entries.append(ManifestEntry(name, child, size, meta))
+    raw, off = _take(data, off, 4, "meta length")
+    (meta_len,) = struct.unpack(">I", raw)
+    meta, off = _take(data, off, meta_len, "meta")
     return entries, total_size, meta
 
 
@@ -190,9 +382,16 @@ class DAG:
     entries: List[ManifestEntry] = field(default_factory=list)
 
 
-def build_dag(data: bytes, chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> DAG:
-    """Chunk ``data`` into leaf blocks + one flat (v1) manifest root block."""
-    leaves = chunk(data, chunk_size)
+def build_dag(data: bytes, chunk_size: int = CHUNK_SIZE, meta: bytes = b"",
+              spec: Optional[ChunkSpec] = None) -> DAG:
+    """Chunk ``data`` into leaf blocks + one flat (v1) manifest root block.
+
+    ``spec`` selects the chunking strategy; when omitted, the historical
+    fixed-``chunk_size`` layout is used, so pre-existing artifacts keep their
+    root CIDs."""
+    if spec is None:
+        spec = ChunkSpec(strategy="fixed", chunk_size=chunk_size)
+    leaves = spec.split(data)
     blocks: Dict[CID, bytes] = {}
     children: List[CID] = []
     for piece in leaves:
@@ -206,19 +405,22 @@ def build_dag(data: bytes, chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> D
 
 
 def build_tree_dag(parts: Sequence[Tuple[str, bytes, bytes]],
-                   chunk_size: int = CHUNK_SIZE, meta: bytes = b"") -> DAG:
+                   chunk_size: int = CHUNK_SIZE, meta: bytes = b"",
+                   spec: Optional[ChunkSpec] = None) -> DAG:
     """Build a hierarchical (v2) DAG: one sub-DAG per ``(name, data, meta)``
     part, rooted in a named-entry manifest.
 
     Identical part bytes (across parts, or vs a previously built version)
     hash to the identical sub-root CID — that is the structural-sharing
-    property the delta-sync path relies on.
+    property the delta-sync path relies on.  With a ``cdc`` :class:`ChunkSpec`
+    sharing also survives *within-part* byte shifts: leaf boundaries are
+    content-defined, so only the chunks overlapping an edit change CIDs.
     """
     blocks: Dict[CID, bytes] = {}
     entries: List[ManifestEntry] = []
     total = 0
     for name, data, part_meta in parts:
-        sub = build_dag(data, chunk_size=chunk_size)
+        sub = build_dag(data, chunk_size=chunk_size, spec=spec)
         blocks.update(sub.blocks)
         entries.append(ManifestEntry(name, sub.root, len(data), part_meta))
         total += len(data)

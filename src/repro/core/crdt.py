@@ -194,6 +194,54 @@ _KINDS = {"g": GCounter, "pn": PNCounter, "lww": LWWRegister,
           "mv": MVRegister, "orset": ORSet}
 
 
+def _str_int_map(d: Any) -> bool:
+    return isinstance(d, dict) and all(
+        isinstance(k, str) and isinstance(v, int) for k, v in d.items())
+
+
+def _tag_set(s: Any) -> bool:
+    """Replica tags: a set/frozenset of ``(replica, seq)`` pairs."""
+    return isinstance(s, (set, frozenset)) and all(
+        isinstance(t, tuple) and len(t) == 2
+        and isinstance(t[0], str) and isinstance(t[1], int) for t in s)
+
+
+def _wire_valid(entry: Any) -> bool:
+    """Deep shape check for a peer-supplied CRDT: the restricted unpickler
+    guarantees the *classes*, but an attacker still controls the instance
+    state, and type-confused internals (a str count, an unsortable clock)
+    would blow up later inside merge()/digest() — after partial mutation.
+    Validate everything merge relies on before any of it is let near local
+    state.  User-level values (register contents, set elements) stay
+    arbitrary primitives; only the CRDT bookkeeping is constrained."""
+    try:
+        t = type(entry)
+        if t is GCounter:
+            return (_str_int_map(entry.counts)
+                    and all(v >= 0 for v in entry.counts.values()))
+        if t is PNCounter:
+            return (type(entry.p) is GCounter and _wire_valid(entry.p)
+                    and type(entry.n) is GCounter and _wire_valid(entry.n))
+        if t is LWWRegister:
+            ts = entry.ts
+            return (isinstance(ts, tuple) and len(ts) == 2
+                    and isinstance(ts[0], (int, float))
+                    and not isinstance(ts[0], bool) and isinstance(ts[1], str))
+        if t is MVRegister:
+            return (_str_int_map(entry.clock)
+                    and isinstance(entry.versions, dict)
+                    and all(isinstance(vc, frozenset) and _tag_set(vc)
+                            for vc in entry.versions))
+        if t is ORSet:
+            return (isinstance(entry.adds, dict)
+                    and all(_tag_set(tags) for tags in entry.adds.values())
+                    and _tag_set(entry.tombstones)
+                    and _str_int_map(entry._tag_seq))
+        return False
+    except AttributeError:      # attacker-controlled __dict__ may omit slots
+        return False
+
+
 class ReplicatedStore(CRDT):
     """A named map of CRDTs — Lattica's decentralized data store.
 
@@ -273,11 +321,35 @@ class ReplicatedStore(CRDT):
             state = entry
         return pickle.dumps(state)
 
+    #: globals anti-entropy state may resolve: the CRDT classes themselves
+    #: plus set/frozenset (which pickle routes through find_class).  The
+    #: payload arrives from arbitrary peers, so everything else is refused —
+    #: an open pickle.loads here would hand the sender code execution.
+    _WIRE_ALLOWED = frozenset({
+        ("repro.core.crdt", "GCounter"),
+        ("repro.core.crdt", "PNCounter"),
+        ("repro.core.crdt", "LWWRegister"),
+        ("repro.core.crdt", "MVRegister"),
+        ("repro.core.crdt", "ORSet"),
+        ("builtins", "set"),
+        ("builtins", "frozenset"),
+    })
+
     def serialize(self) -> bytes:
         return pickle.dumps(self.entries)
 
     @classmethod
     def deserialize(cls, data: bytes, replica: str = "") -> "ReplicatedStore":
+        """Decode peer-supplied state; raises ``ValueError`` on payloads that
+        are malformed or carry anything beyond CRDTs and primitives."""
+        from .safepickle import restricted_loads
+
+        entries = restricted_loads(data, cls._WIRE_ALLOWED)
+        if not isinstance(entries, dict):
+            raise ValueError("CRDT state must be a {name: CRDT} dict")
+        for k, v in entries.items():
+            if not isinstance(k, str) or not _wire_valid(v):
+                raise ValueError(f"malformed CRDT state for entry {k!r}")
         store = cls(replica)
-        store.entries = pickle.loads(data)
+        store.entries = entries
         return store

@@ -16,7 +16,7 @@ from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
 
 from .bitswap import Bitswap
 from .blockstore import BlockStore
-from .cid import CID, build_dag, build_tree_dag
+from .cid import CID, ChunkSpec, build_dag, build_tree_dag
 from .crdt import ReplicatedStore
 from .dht import KademliaDHT, PeerInfo
 from .peer import Multiaddr, PeerId
@@ -305,7 +305,9 @@ class LatticaNode:
             info = self.peers[pid]
             try:
                 yield from self.sync_crdt_with(info)
-            except (DialError, RpcError):
+            except (DialError, RpcError, ValueError):
+                # ValueError: peer sent undecodable/forbidden CRDT state —
+                # skip the round, don't kill the background loop
                 continue
 
     # ------------------------------------------------------------- artifacts
@@ -324,11 +326,14 @@ class LatticaNode:
 
     def publish_artifact(self, data: bytes, meta: bytes = b"",
                          announce_topic: Optional[str] = None,
-                         pin: bool = True) -> Generator:
+                         pin: bool = True,
+                         spec: Optional[ChunkSpec] = None) -> Generator:
         """Chunk + store + provide a flat (v1) artifact; returns the root
         CID.  Raw byte blobs keep the flat manifest — the hierarchical path
-        is :meth:`publish_tree_artifact`."""
-        dag = build_dag(data, meta=meta)
+        is :meth:`publish_tree_artifact`.  ``spec`` selects the chunking
+        strategy (fixed-size by default; ``ChunkSpec.cdc`` keeps boundaries
+        stable under byte-shifting edits)."""
+        dag = build_dag(data, meta=meta, spec=spec)
         yield from self.bitswap.publish_dag(dag.blocks, dag.root)
         if pin:
             self.blockstore.pin(dag.root)
@@ -339,12 +344,15 @@ class LatticaNode:
 
     def publish_tree_artifact(self, parts: List[Any], meta: bytes = b"",
                               announce_topic: Optional[str] = None,
-                              pin: bool = True) -> Generator:
+                              pin: bool = True,
+                              spec: Optional[ChunkSpec] = None) -> Generator:
         """Publish ``[(name, data, part_meta), ...]`` as a hierarchical (v2)
         DAG — one sub-DAG per part, so parts unchanged since an earlier
         version reuse their sub-root CIDs (and cost fetchers zero bytes).
+        With a ``cdc`` ``spec``, *within-part* byte shifts also dedup: leaf
+        boundaries re-synchronize after an edit instead of cascading.
         Returns the root CID."""
-        dag = build_tree_dag(parts, meta=meta)
+        dag = build_tree_dag(parts, meta=meta, spec=spec)
         yield from self.bitswap.publish_dag(dag.blocks, dag.root)
         if pin:
             self.blockstore.pin(dag.root)

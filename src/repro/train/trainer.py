@@ -23,7 +23,7 @@ from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
                                            publish_checkpoint,
                                            serve_checkpoints)
 from repro.core.dht import PeerInfo
-from repro.core.cid import CID
+from repro.core.cid import CID, ChunkSpec
 from repro.core.node import LatticaNode
 from repro.models.config import ModelConfig
 
@@ -65,12 +65,17 @@ class LatticaSyncTrainer(Trainer):
     def __init__(self, cfg: ModelConfig, state: TrainState,
                  schedule: Callable, data: Iterator[Dict[str, np.ndarray]],
                  node: LatticaNode, fleet: str,
-                 publish_every: int = 50, step_seconds: float = 0.5):
+                 publish_every: int = 50, step_seconds: float = 0.5,
+                 chunk_spec: Optional[ChunkSpec] = None):
         super().__init__(cfg, state, schedule, data)
         self.node = node
         self.fleet = fleet
         self.publish_every = publish_every
         self.step_seconds = step_seconds
+        #: chunking strategy for published versions; every publish uses the
+        #: same spec so leaf boundaries (and unchanged-content CIDs)
+        #: reproduce across versions
+        self.chunk_spec = chunk_spec
         self.published: List[CID] = []
         serve_checkpoints(node)   # subscribers may resolve 'latest' directly
 
@@ -90,7 +95,7 @@ class LatticaSyncTrainer(Trainer):
                 base = self.published[-1] if self.published else None
                 root = yield from publish_checkpoint(
                     self.node, self.state.params, i + 1, self.fleet,
-                    base=base)
+                    base=base, spec=self.chunk_spec)
                 self.published.append(root)
                 yield from self._gossip_registry()
                 if log is not None:
@@ -144,7 +149,7 @@ class ModelSubscriber:
     def _best_known(self) -> Any:
         """Newest version from the CRDT register AND live announcements;
         returns ((step, root) or None, publisher PeerInfo or None)."""
-        import pickle
+        from repro.checkpoint.lattica_ckpt import safe_meta_loads
 
         best = self.registry.latest()
         publisher: Optional[PeerInfo] = None
@@ -152,7 +157,8 @@ class ModelSubscriber:
             if not (isinstance(d, tuple) and d and d[0] == "artifact"):
                 continue
             try:
-                meta = pickle.loads(d[3])
+                # announcement meta is peer-supplied: restricted unpickle
+                meta = safe_meta_loads(d[3])
                 step = meta["step"]
             except Exception:        # noqa: BLE001 — malformed announcement
                 continue

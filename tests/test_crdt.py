@@ -158,3 +158,45 @@ def test_replicated_store_digest_and_merge():
     # serialize roundtrip preserves digest
     s3 = ReplicatedStore.deserialize(s1.serialize(), "c")
     assert s3.digest() == s1.digest()
+
+
+def test_deserialize_refuses_hostile_state():
+    """Anti-entropy state arrives from arbitrary peers: the decoder must
+    resolve only CRDT classes, never attacker-chosen globals."""
+    import os
+    import pickle
+
+    class Exploit:
+        def __reduce__(self):
+            return (os.system, ("echo pwned",))
+
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(pickle.dumps({"k": Exploit()}))
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(pickle.dumps(["not", "a", "dict"]))
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(pickle.dumps({"k": "not-a-crdt"}))
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(b"\x80\x04 garbage")
+    # allowlisted classes with type-confused internals are rejected up
+    # front: merge()/digest() would otherwise raise mid-mutation and
+    # poison the local store
+    confused = GCounter()
+    confused.counts = {"r": "not-an-int"}
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(pickle.dumps({"k": confused}))
+    bad_set = ORSet()
+    bad_set.tombstones = {("r", "unsortable-seq")}
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(pickle.dumps({"k": bad_set}))
+    bad_mv = MVRegister()
+    bad_mv.versions = {("not", "frozenset"): 1}
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(pickle.dumps({"k": bad_mv}))
+    # every in-tree CRDT kind still round-trips through the allowlist
+    s = ReplicatedStore("a")
+    s.counter("steps").increment("a", 3)
+    s.orset("ckpts").add((1, 0x70, b"\x01" * 32), "a")
+    s.register("latest").set((1, 0x70, b"\x01" * 32), 1.0, "a")
+    back = ReplicatedStore.deserialize(s.serialize(), "b")
+    assert back.digest() == s.digest()
