@@ -1,54 +1,231 @@
 """Paper §4: NAT traversal success — ~70% of attempts connect directly,
-the rest fall back to circuit relays; ALL attempts connect some way."""
+the rest fall back to circuit relays; ALL attempts connect some way.
+
+Two views:
+
+* ``main``        random pairs over a mixed-NAT fleet (the paper's headline
+                  direct-connectivity number), with per-NAT-kind breakdown
+* ``main_matrix`` the full NAT-kind × NAT-kind punch matrix over one mixed
+                  fleet (public + 4 NAT kinds, symmetric split into
+                  predictable/random allocators)
+
+``--punch-smoke`` gates CI:
+  1. mixed fleet (incl. symmetric peers) reaches >= 70% direct connectivity
+     with relay fallback covering the rest (0 failed attempts);
+  2. an all-cone fleet reaches >= 95% direct;
+  3. PORT_RESTRICTED <-> SYMMETRIC(sequential) — the pair the seed's naive
+     DCUtR always lost — succeeds via predicted-port punching.
+"""
 
 from __future__ import annotations
 
-from typing import Generator, List
+import argparse
+import sys
+from collections import defaultdict
+from typing import Dict, Generator, List, Optional, Tuple
 
-from repro.core.fleet import make_fleet
+from repro.core.fleet import Fleet, make_fleet
+from repro.core.nat import NATKind
 
 N_PEERS = 30
 N_ATTEMPTS = 200
 
+#: All-cone composition for the >=95% gate (no symmetric boxes at all).
+ALL_CONE_MIX = [
+    (None, 0.10),
+    (NATKind.FULL_CONE, 0.25),
+    (NATKind.RESTRICTED_CONE, 0.30),
+    (NATKind.PORT_RESTRICTED, 0.35),
+]
 
-def main(report: List[str]) -> None:
-    fleet = make_fleet(N_PEERS, seed=123)
+#: Matrix fleet: two peers of each class, symmetric split by allocator.
+MATRIX_SPECS = [
+    ("public", None),
+    ("full_cone", NATKind.FULL_CONE),
+    ("restricted", NATKind.RESTRICTED_CONE),
+    ("port_restricted", NATKind.PORT_RESTRICTED),
+    ("sym/seq", (NATKind.SYMMETRIC, "sequential", 1)),
+    ("sym/rand", (NATKind.SYMMETRIC, "random", 1)),
+]
+
+
+def _connect_outcome(fleet: Fleet, a, b) -> Optional[bool]:
+    """True=direct, False=relayed, None=failed."""
+
+    def connect() -> Generator:
+        conn = yield from a.connect_info(b.info())
+        return conn
+
+    try:
+        conn = fleet.sim.run_process(connect(), until=fleet.sim.now + 600)
+    except Exception:
+        return None
+    return not conn.relayed
+
+
+def run_pairs(fleet: Fleet, attempts: int) -> Dict[str, object]:
     sim = fleet.sim
     rng = sim.rng
-    direct = relayed = failed = punch_ok = punch_fail = 0
-    for _ in range(N_ATTEMPTS):
-        i = rng.randrange(N_PEERS)
-        j = rng.randrange(N_PEERS)
+    n = len(fleet.peers)
+    counts = {"direct": 0, "relayed": 0, "failed": 0}
+    by_pair: Dict[Tuple[str, str], List[int]] = defaultdict(lambda: [0, 0])
+    for _ in range(attempts):
+        i, j = rng.randrange(n), rng.randrange(n)
         if i == j:
             continue
         a, b = fleet.peers[i], fleet.peers[j]
-
-        def connect(a=a, b=b) -> Generator:
-            conn = yield from a.connect_info(b.info())
-            return conn
-
-        try:
-            conn = sim.run_process(connect(), until=sim.now + 600)
-        except Exception:
-            failed += 1
-            continue
-        if conn.relayed:
-            relayed += 1
+        outcome = _connect_outcome(fleet, a, b)
+        kinds = tuple(sorted((fleet.nat_kind_of(a), fleet.nat_kind_of(b))))
+        by_pair[kinds][1] += 1
+        if outcome is None:
+            counts["failed"] += 1
+        elif outcome:
+            counts["direct"] += 1
+            by_pair[kinds][0] += 1
         else:
-            direct += 1
+            counts["relayed"] += 1
+    counts["total"] = sum(counts.values())
+    counts["by_pair"] = dict(by_pair)
+    return counts
+
+
+def _punch_totals(fleet: Fleet) -> Tuple[int, int, int]:
+    ok = fail = predicted = 0
     for n in fleet.all_nodes:
-        punch_ok += n.transport.stats["punch_ok"]
-        punch_fail += n.transport.stats["punch_fail"]
-    total = direct + relayed + failed
+        ok += n.transport.stats["punch_ok"]
+        fail += n.transport.stats["punch_fail"]
+        predicted += n.transport.stats["predicted_punch_ok"]
+    return ok, fail, predicted
+
+
+def main(report: List[str]) -> None:
+    fleet = make_fleet(N_PEERS, seed=123, maintenance=True)
+    counts = run_pairs(fleet, N_ATTEMPTS)
+    total = counts["total"]
+    direct, relayed, failed = counts["direct"], counts["relayed"], counts["failed"]
+    punch_ok, punch_fail, predicted = _punch_totals(fleet)
     report.append("# NAT traversal (paper: ~70% direct, rest via relay)")
     report.append(f"attempts={total} direct={direct} ({100*direct/total:.0f}%) "
                   f"relayed={relayed} ({100*relayed/total:.0f}%) "
                   f"failed={failed}")
     report.append(f"dcutr punches: ok={punch_ok} fail={punch_fail} "
-                  f"({100*punch_ok/max(punch_ok+punch_fail,1):.0f}% punch rate)")
+                  f"({100*punch_ok/max(punch_ok+punch_fail,1):.0f}% punch rate), "
+                  f"predicted-port punches={predicted}")
+    hard = [(pair, d, t) for pair, (d, t) in sorted(counts["by_pair"].items())
+            if any("symmetric" in k for k in pair)]
+    if hard:
+        report.append("symmetric-involved pairs (direct/attempts):")
+        for pair, d, t in hard:
+            report.append(f"  {pair[0]:28s} x {pair[1]:28s} {d}/{t}")
+    report.append("per-NAT-kind box stats (mappings / inbound ok / filtered):")
+    for kind, row in sorted(fleet.net.nat_stats().items()):
+        report.append(f"  {kind:24s} boxes={row['boxes']:2d} "
+                      f"map={row['mappings']:5d} ok={row['inbound_ok']:5d} "
+                      f"filt={row['inbound_filtered']:5d}")
+
+
+def run_matrix(seed: int = 31) -> Dict[Tuple[str, str], Optional[bool]]:
+    """Punch one pair per ordered NAT-kind combination over a mixed fleet."""
+    labels = [lbl for lbl, _ in MATRIX_SPECS]
+    specs = [spec for _, spec in MATRIX_SPECS]
+    # two peers of each class so same-kind pairs exist
+    fleet = make_fleet(2 * len(specs), seed=seed, nat_kinds=specs + specs,
+                       maintenance=True)
+    first = {lbl: fleet.peers[i] for i, lbl in enumerate(labels)}
+    second = {lbl: fleet.peers[len(labels) + i] for i, lbl in enumerate(labels)}
+    grid: Dict[Tuple[str, str], Optional[bool]] = {}
+    for la in labels:
+        for lb in labels:
+            # initiators come from the first replica, responders from the
+            # second: every ordered cell gets a DISTINCT host pair, so the
+            # reverse direction measures its own punch instead of reusing
+            # the connection the forward cell already established
+            grid[(la, lb)] = _connect_outcome(fleet, first[la], second[lb])
+    return grid
+
+
+def main_matrix(report: List[str]) -> None:
+    grid = run_matrix()
+    labels = [lbl for lbl, _ in MATRIX_SPECS]
+    report.append("# NAT-kind punch matrix (D=direct, r=relayed, X=failed)")
+    width = max(len(l) for l in labels) + 1
+    report.append(" " * width + " ".join(f"{l:>{width}}" for l in labels))
+    for la in labels:
+        cells = []
+        for lb in labels:
+            out = grid[(la, lb)]
+            cells.append({True: "D", False: "r", None: "X"}[out])
+        report.append(f"{la:>{width}} " +
+                      " ".join(f"{c:>{width}}" for c in cells))
+    n_direct = sum(1 for v in grid.values() if v is True)
+    n_fail = sum(1 for v in grid.values() if v is None)
+    report.append(f"direct cells: {n_direct}/{len(grid)}, failed: {n_fail}")
+
+
+def punch_smoke() -> int:
+    failures: List[str] = []
+
+    # gate 1: mixed fleet with symmetric peers present
+    fleet = make_fleet(N_PEERS, seed=123, maintenance=True)
+    kinds = {fleet.nat_kind_of(p) for p in fleet.peers}
+    assert any(k.startswith("symmetric") for k in kinds), \
+        "smoke fleet must include symmetric peers"
+    counts = run_pairs(fleet, N_ATTEMPTS)
+    rate = counts["direct"] / counts["total"]
+    _, _, predicted = _punch_totals(fleet)
+    print(f"[mixed]    direct={counts['direct']}/{counts['total']} "
+          f"({100*rate:.0f}%) relayed={counts['relayed']} "
+          f"failed={counts['failed']} predicted_punches={predicted}")
+    if rate < 0.70:
+        failures.append(f"mixed-fleet direct rate {100*rate:.0f}% < 70%")
+    if counts["failed"]:
+        failures.append(f"{counts['failed']} attempts had NO path "
+                        "(relay fallback must cover punch failures)")
+
+    # gate 2: all-cone fleet
+    cone = make_fleet(20, seed=7, nat_mix=ALL_CONE_MIX, maintenance=True)
+    ccounts = run_pairs(cone, 120)
+    crate = ccounts["direct"] / ccounts["total"]
+    print(f"[all-cone] direct={ccounts['direct']}/{ccounts['total']} "
+          f"({100*crate:.0f}%) relayed={ccounts['relayed']} "
+          f"failed={ccounts['failed']}")
+    if crate < 0.95:
+        failures.append(f"all-cone direct rate {100*crate:.0f}% < 95%")
+
+    # gate 3: the seed-failing pair under port prediction
+    grid = run_matrix()
+    for pair in (("port_restricted", "sym/seq"), ("sym/seq", "port_restricted")):
+        out = grid[pair]
+        print(f"[matrix]   {pair[0]} -> {pair[1]}: "
+              f"{ {True: 'direct', False: 'relayed', None: 'failed'}[out] }")
+        if out is not True:
+            failures.append(f"{pair[0]} -> {pair[1]} did not go direct "
+                            "under predicted-port punching")
+    if grid[("sym/rand", "sym/rand")] is None:
+        failures.append("sym/rand pair lost connectivity entirely "
+                        "(relay fallback broken)")
+
+    for f in failures:
+        print(f"FAIL: {f}")
+    if not failures:
+        print("punch smoke OK")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--punch-smoke", action="store_true",
+                    help="gate: mixed >=70%% direct, all-cone >=95%%, "
+                         "predicted-port pairs upgrade")
+    ap.add_argument("--matrix", action="store_true",
+                    help="print the NAT-kind punch matrix only")
+    args = ap.parse_args()
+    if args.punch_smoke:
+        sys.exit(punch_smoke())
     out: List[str] = []
-    main(out)
+    if args.matrix:
+        main_matrix(out)
+    else:
+        main(out)
+        main_matrix(out)
     print("\n".join(out))

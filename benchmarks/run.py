@@ -5,6 +5,7 @@
 Sections:
     table1      RPC throughput (paper Table 1)
     nat         NAT traversal success rate (paper §4, ~70% direct)
+    natmatrix   NAT-kind × NAT-kind punch matrix (DCUtR v2 predicted ports)
     dht         Kademlia lookup scaling (O(log N))
     cdn         model dissemination via Bitswap (Fig. 1-2/3)
     delta       per-tensor delta sync (v2 manifests, bytes ∝ churn)
@@ -29,6 +30,7 @@ from . import (crdt_sync, dht_lookup, model_sync, nat_traversal, roofline,
 SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
     ("table1", rpc_throughput.main),
     ("nat", nat_traversal.main),
+    ("natmatrix", nat_traversal.main_matrix),
     ("dht", dht_lookup.main),
     ("cdn", model_sync.main),
     ("delta", model_sync.main_delta),

@@ -41,6 +41,33 @@ def main():
     print(f"\n== 1. {a.host.name} -> {b.host.name}: "
           f"{'RELAYED' if conn.relayed else 'DIRECT'} path, rtt={rtt*1000:.1f}ms ==")
 
+    # -- 1b. predicted-port punching through a symmetric NAT ----------------
+    # A symmetric NAT mints a fresh external port per destination, so the
+    # address it advertises is never the one it will use toward the peer —
+    # naive hole punching always fails.  DCUtR v2 fingerprints the box's
+    # port allocator by probing the relay from fresh sockets; against a
+    # sequential (or fixed-delta) allocator the other side sprays the
+    # predicted window base+stride*k and catches the fresh mapping.
+    from repro.core import NATKind
+    from repro.core.fleet import make_fleet as _mk
+
+    sfleet = _mk(2, seed=11, nat_kinds=[
+        (NATKind.SYMMETRIC, "sequential", 1),   # predictable allocator
+        NATKind.PORT_RESTRICTED,                # strictest cone filter
+    ])
+    sym, cone = sfleet.peers
+
+    def punch():
+        c = yield from cone.connect_info(sym.info())
+        return c
+
+    sconn = sfleet.sim.run_process(punch())
+    print(f"== 1b. symmetric(sequential) <- port_restricted: "
+          f"{'RELAYED' if sconn.relayed else 'DIRECT (predicted-port punch)'}; "
+          f"fingerprint probes={sym.transport.stats['fingerprint_probes']}, "
+          f"predicted punches="
+          f"{sym.transport.stats['predicted_punch_ok'] + cone.transport.stats['predicted_punch_ok']} ==")
+
     # -- 2. content distribution --------------------------------------------
     blob = bytes(range(256)) * 4096            # 1 MiB artifact
 

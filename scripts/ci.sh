@@ -17,6 +17,11 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # shifted-edit smoke: content-defined chunking must keep leaf-byte
     # reuse high when an insert shifts every downstream byte
     python benchmarks/model_sync.py --cdc-smoke
+    # traversal smoke: mixed-NAT fleet (incl. symmetric peers) must reach
+    # >=70% direct connectivity (relay fallback covering the rest), an
+    # all-cone fleet >=95%, and PORT_RESTRICTED<->SYMMETRIC(sequential)
+    # must upgrade via predicted-port punching
+    python benchmarks/nat_traversal.py --punch-smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

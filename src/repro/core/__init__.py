@@ -22,7 +22,7 @@ from .cid import (CID, DAG, ChunkSpec, ManifestEntry, build_dag,
 from .crdt import (GCounter, LWWRegister, MVRegister, ORSet, PNCounter,
                    ReplicatedStore)
 from .dht import KademliaDHT, KadService, PeerInfo, RoutingTable
-from .nat import NATBox, NATKind
+from .nat import NATBox, NATKind, PortAlloc, aggregate_nat_stats, nat_label
 from .node import CrdtSyncService, IdentityService, LatticaNode
 from .peer import Multiaddr, PeerId
 from .rpc import RpcChannel, RpcError, RpcRouter, call_unary, open_channel
@@ -39,7 +39,8 @@ __all__ = [
     "manifest_version", "read_dag",
     "GCounter", "LWWRegister", "MVRegister", "ORSet", "PNCounter",
     "ReplicatedStore", "KademliaDHT", "KadService", "PeerInfo",
-    "RoutingTable", "NATBox", "NATKind", "CrdtSyncService",
+    "RoutingTable", "NATBox", "NATKind", "PortAlloc",
+    "aggregate_nat_stats", "nat_label", "CrdtSyncService",
     "IdentityService", "LatticaNode", "Multiaddr", "PeerId",
     "RpcChannel", "RpcError", "RpcRouter", "call_unary", "open_channel",
     "ClientInterceptor", "Codec", "Fixed", "MethodSpec", "RpcMetrics",

@@ -3,15 +3,19 @@
 Used by tests, benchmarks and examples.  The default NAT-type mix follows
 measured Internet distributions (Ford et al. 2005-era surveys: most NATs are
 cone-like, a substantial minority symmetric), which is what produces the
-paper's ~70 % direct hole-punch success among NAT'd pairs.
+paper's ~70 % direct hole-punch success among NAT'd pairs.  Symmetric boxes
+additionally draw a port-allocation model (``sym_alloc_mix``): sequential
+and fixed-delta allocators are predictable enough for DCUtR v2's
+predicted-port spray, random ones force relay fallback — mirroring the NAT
+measurement literature (Trautwein et al.).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Generator, List, Optional, Sequence, Tuple
+from typing import Dict, Generator, List, Optional, Sequence, Tuple, Union
 
-from .nat import NATBox, NATKind
+from .nat import NATBox, NATKind, PortAlloc, nat_label
 from .node import LatticaNode
 from .simnet import Network, Sim
 
@@ -24,6 +28,15 @@ DEFAULT_NAT_MIX: List[Tuple[Optional[NATKind], float]] = [
     (NATKind.RESTRICTED_CONE, 0.15),
     (NATKind.PORT_RESTRICTED, 0.30),
     (NATKind.SYMMETRIC, 0.30),
+]
+
+#: Port-allocation model mix for SYMMETRIC boxes: (alloc, delta, weight).
+#: Most CPE firmware allocates sequentially or with a small fixed stride
+#: (predictable); a minority randomizes (punch-proof).
+DEFAULT_SYM_ALLOC_MIX: List[Tuple[PortAlloc, int, float]] = [
+    (PortAlloc.SEQUENTIAL, 1, 0.50),
+    (PortAlloc.FIXED_DELTA, 2, 0.30),
+    (PortAlloc.RANDOM, 1, 0.20),
 ]
 
 REGIONS = ["us", "eu", "ap"]
@@ -46,21 +59,55 @@ class Fleet:
                 return n
         raise KeyError(name)
 
+    def nat_kind_of(self, node: LatticaNode) -> str:
+        """Human-readable NAT class of a node (for per-kind reporting)."""
+        return nat_label(node.host.nat)
+
+
+#: A per-peer NAT spec: ``None`` (public), a bare ``NATKind`` (default
+#: allocator), or ``(NATKind, alloc, delta)`` for full control.
+NatSpec = Union[None, NATKind, Tuple[NATKind, Union[PortAlloc, str], int]]
+
+
+def make_nat(net: Network, spec: NatSpec) -> Optional[NATBox]:
+    """Materialize a :data:`NatSpec` into a NAT box (or None for public)."""
+    if spec is None:
+        return None
+    if isinstance(spec, NATKind):
+        return NATBox(net, spec)
+    kind, alloc, delta = spec
+    return NATBox(net, kind, alloc=alloc, delta=delta)
+
 
 def make_fleet(n_peers: int, seed: int = 0, n_bootstrap: int = 2,
                nat_mix: Optional[Sequence[Tuple[Optional[NATKind], float]]] = None,
+               sym_alloc_mix: Optional[Sequence[Tuple[PortAlloc, int, float]]] = None,
+               nat_kinds: Optional[Sequence[NatSpec]] = None,
                regions: Optional[List[str]] = None,
                same_region: Optional[str] = None,
                join: bool = True,
+               maintenance: bool = True,
                cores: int = 4) -> Fleet:
     """Build bootstrap/relay servers + ``n_peers`` NAT-mixed peers.
 
+    ``nat_kinds`` pins the exact per-peer NAT spec (overriding the random
+    mix) — used by the punch-matrix benchmark and tests that need a
+    controlled composition; it must have ``n_peers`` entries.
+
     With ``join=True`` every peer runs the full bootstrap (dial, AutoNAT,
-    relay reservation if private, DHT self-lookup) before this returns.
+    relay reservations if private, DHT self-lookup) before this returns.
+    With ``maintenance=True`` (default) every peer also runs its background
+    ``maintenance_loop`` — started right after that peer joins, so relay
+    reservations (TTL'd on the relay side) are refreshed both while later
+    peers are still joining and across long simulations.
     """
+    if nat_kinds is not None and len(nat_kinds) != n_peers:
+        raise ValueError("nat_kinds must have n_peers entries")
     sim = Sim(seed=seed)
     net = Network(sim)
     nat_mix = list(nat_mix if nat_mix is not None else DEFAULT_NAT_MIX)
+    alloc_mix = list(sym_alloc_mix if sym_alloc_mix is not None
+                     else DEFAULT_SYM_ALLOC_MIX)
     regions = regions or REGIONS
 
     boots = []
@@ -76,21 +123,35 @@ def make_fleet(n_peers: int, seed: int = 0, n_bootstrap: int = 2,
 
     binfos = [b.info() for b in boots]
     kinds, weights = zip(*nat_mix)
+    alloc_choices = [(a, d) for a, d, _w in alloc_mix]
+    alloc_weights = [w for _a, _d, w in alloc_mix]
     peers: List[LatticaNode] = []
     for i in range(n_peers):
-        kind = sim.rng.choices(kinds, weights=weights)[0]
-        nat = NATBox(net, kind) if kind is not None else None
+        if nat_kinds is not None:
+            nat = make_nat(net, nat_kinds[i])
+        else:
+            kind = sim.rng.choices(kinds, weights=weights)[0]
+            if kind is NATKind.SYMMETRIC:
+                alloc, delta = sim.rng.choices(alloc_choices,
+                                               weights=alloc_weights)[0]
+                nat = NATBox(net, kind, alloc=alloc, delta=delta)
+            elif kind is not None:
+                nat = NATBox(net, kind)
+            else:
+                nat = None
         region = same_region or regions[i % len(regions)]
         zone = "a" if same_region else sim.rng.choice(["a", "b"])
         node = LatticaNode(net, f"peer{i}", region=region, zone=zone,
                            nat=nat, cores=cores)
         peers.append(node)
 
-    if join:
-        for node in peers:
+    for node in peers:
+        if join:
             def _join(n: LatticaNode = node) -> Generator:
                 yield from n.bootstrap(binfos)
                 return None
             sim.run_process(_join())
+        if maintenance:
+            sim.process(node.maintenance_loop())
 
     return Fleet(sim=sim, net=net, bootstrap=boots, peers=peers)

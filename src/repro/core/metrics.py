@@ -40,7 +40,10 @@ def node_snapshot(node: "LatticaNode") -> Dict[str, Any]:
         "pinned_roots": len(node.blockstore.pinned_roots),
         "crdt_keys": len(node.store.entries),
     }
+    snap["relay_reservations"] = len(t.relay_reservations)
+    snap["relays_held"] = len(node.relay_infos)
     for prefix, stats in (("transport", t.stats),
+                          ("relay", t.relay_stats),
                           ("rpc", node.router.stats),
                           ("dht", node.dht.stats),
                           ("pubsub", node.pubsub.stats),

@@ -13,15 +13,27 @@ Hole punching (simultaneous open coordinated over a relay) succeeds iff each
 side's punch packet passes the other side's filter given the externally
 *observed* address each peer advertised.  Symmetric NATs advertise a port that
 differs from the one they will actually use toward the peer, so punches into
-port-restricted or symmetric counterparts fail — exactly the pairs that fall
-back to relays in the paper.
+port-restricted or symmetric counterparts fail *unless* the peer can predict
+the next mapping — which is only possible when the NAT's port allocator is
+regular.  Following the measurement literature (Trautwein et al.,
+"Challenging Tribal Knowledge"), real symmetric NATs fall into a few
+allocation families, modelled here by :class:`PortAlloc`:
+
+* SEQUENTIAL   next external port = previous + 1 (very common CPE firmware)
+* FIXED_DELTA  next = previous + delta for a device-constant delta
+* RANDOM       uniformly random free port — unpredictable, punch-proof
+
+Sequential and fixed-delta allocators make predicted-port hole punching
+(DCUtR v2 in ``traversal.py``) viable; random allocators force relay
+fallback.  Every box also keeps per-box counters so fleets can report
+per-NAT-kind traversal behaviour (``Network.nat_stats`` aggregates them).
 """
 
 from __future__ import annotations
 
 import itertools
 from enum import Enum
-from typing import Dict, Optional, Set, Tuple, TYPE_CHECKING
+from typing import Dict, List, Optional, Set, Tuple, TYPE_CHECKING, Union
 
 if TYPE_CHECKING:  # pragma: no cover
     from .simnet import Host, Network
@@ -36,14 +48,32 @@ class NATKind(Enum):
     SYMMETRIC = "symmetric"
 
 
+class PortAlloc(Enum):
+    """External-port allocation policy of a NAT box."""
+
+    SEQUENTIAL = "sequential"
+    FIXED_DELTA = "fixed_delta"
+    RANDOM = "random"
+
+
+#: Random allocators draw from this external port range.
+RANDOM_PORT_RANGE = (21000, 61000)
+
+
 class NATBox:
     _ip_seq = itertools.count(1)
 
-    def __init__(self, net: "Network", kind: NATKind):
+    def __init__(self, net: "Network", kind: NATKind,
+                 alloc: Union[PortAlloc, str] = PortAlloc.SEQUENTIAL,
+                 delta: int = 1, port_base: int = 20000):
         self.net = net
         self.kind = kind
+        self.alloc = PortAlloc(alloc)
+        self.delta = int(delta) if self.alloc is not PortAlloc.SEQUENTIAL else 1
+        if self.alloc is PortAlloc.FIXED_DELTA and self.delta < 1:
+            raise ValueError("fixed_delta allocator needs delta >= 1")
         self.public_ip = f"198.51.{next(NATBox._ip_seq)}.1"
-        self._ext_seq = itertools.count(20000)
+        self._next_port = port_base
         # cone NATs: (int_ip, int_port) -> ext_port
         self._cone_map: Dict[Tuple[str, int], int] = {}
         # symmetric NATs: (int_ip, int_port, dst) -> ext_port
@@ -53,28 +83,52 @@ class NATBox:
         # filter state: ext_port -> set of remote addrs/ips sent to
         self._sent_to: Dict[int, Set[Addr]] = {}
         self._hosts: Dict[str, "Host"] = {}
+        #: Per-box traversal counters (aggregated per kind by
+        #: ``Network.nat_stats``).
+        self.stats = {
+            "mappings": 0,            # external mappings minted
+            "inbound_ok": 0,          # inbound datagrams routed through
+            "inbound_filtered": 0,    # dropped by the filter state machine
+            "inbound_unmapped": 0,    # dropped: no mapping at that ext port
+        }
         net.register_nat(self)
 
     def attach(self, host: "Host") -> None:
         self._hosts[host.ip] = host
+
+    # -- allocation ----------------------------------------------------------
+    def _alloc_port(self) -> int:
+        if self.alloc is PortAlloc.RANDOM:
+            lo, hi = RANDOM_PORT_RANGE
+            while True:
+                port = self.net.sim.rng.randrange(lo, hi)
+                if port not in self._rev:
+                    return port
+        port = self._next_port
+        self._next_port += self.delta
+        while port in self._rev:  # skip ports still held by older mappings
+            port += self.delta
+            self._next_port = port + self.delta
+        return port
+
+    def _mint(self, host: "Host", int_port: int) -> int:
+        ext = self._alloc_port()
+        self._rev[ext] = (host, int_port)
+        self._sent_to[ext] = set()
+        self.stats["mappings"] += 1
+        return ext
 
     # -- outbound ------------------------------------------------------------
     def map_outbound(self, host: "Host", int_port: int, dst: Addr) -> Addr:
         if self.kind is NATKind.SYMMETRIC:
             key = (host.ip, int_port, dst)
             if key not in self._sym_map:
-                ext = next(self._ext_seq)
-                self._sym_map[key] = ext
-                self._rev[ext] = (host, int_port)
-                self._sent_to[ext] = set()
+                self._sym_map[key] = self._mint(host, int_port)
             ext = self._sym_map[key]
         else:
             ckey = (host.ip, int_port)
             if ckey not in self._cone_map:
-                ext = next(self._ext_seq)
-                self._cone_map[ckey] = ext
-                self._rev[ext] = (host, int_port)
-                self._sent_to[ext] = set()
+                self._cone_map[ckey] = self._mint(host, int_port)
             ext = self._cone_map[ckey]
         self._sent_to[ext].add(dst)
         return (self.public_ip, ext)
@@ -83,15 +137,47 @@ class NATBox:
     def filter_inbound(self, ext_port: int, src: Addr) -> Optional[Tuple["Host", int]]:
         entry = self._rev.get(ext_port)
         if entry is None:
+            self.stats["inbound_unmapped"] += 1
             return None
         sent = self._sent_to.get(ext_port, set())
         if self.kind is NATKind.FULL_CONE:
+            self.stats["inbound_ok"] += 1
             return entry
         if self.kind is NATKind.RESTRICTED_CONE:
             if any(a[0] == src[0] for a in sent):
+                self.stats["inbound_ok"] += 1
                 return entry
+            self.stats["inbound_filtered"] += 1
             return None
         # PORT_RESTRICTED and SYMMETRIC both filter on (ip, port)
         if src in sent:
+            self.stats["inbound_ok"] += 1
             return entry
+        self.stats["inbound_filtered"] += 1
         return None
+
+
+def nat_label(box: Optional[NATBox]) -> str:
+    """Human-readable NAT class: ``"symmetric/<alloc>"`` for symmetric boxes
+    (where the allocator determines punchability), the bare kind for cone
+    boxes (their allocator is irrelevant to mapping behaviour), and
+    ``"public"`` for no NAT.  Shared by stats aggregation and fleet
+    reporting so per-kind rows always correlate."""
+    if box is None:
+        return "public"
+    if box.kind is NATKind.SYMMETRIC:
+        return f"{box.kind.value}/{box.alloc.value}"
+    return box.kind.value
+
+
+def aggregate_nat_stats(boxes: List[NATBox]) -> Dict[str, Dict[str, int]]:
+    """Sum per-box counters into per-:func:`nat_label` rows."""
+    out: Dict[str, Dict[str, int]] = {}
+    for box in boxes:
+        key = nat_label(box)
+        row = out.setdefault(key, {"boxes": 0, "mappings": 0, "inbound_ok": 0,
+                                   "inbound_filtered": 0, "inbound_unmapped": 0})
+        row["boxes"] += 1
+        for k, v in box.stats.items():
+            row[k] += v
+    return out

@@ -29,6 +29,15 @@ from .service import (ByteLength, ClientInterceptor, Fixed, PEER_INFO,
 from .simnet import Connection, DialError, Host, Network, Sim
 from .traversal import MAIN_PORT, Transport
 
+#: How many relays a private node tries to hold reservations on (primary +
+#: failover), ranked by measured RTT.
+RELAY_TARGET = 2
+
+#: A failed DCUtR upgrade is retried on the next connect after this long —
+#: NAT state and address books evolve, so "relayed once" must not mean
+#: "relayed forever" (libp2p retries hole punching the same way).
+UPGRADE_RETRY_COOLDOWN = 30.0
+
 
 class IdentityService(Service):
     """Push-pull identity exchange: each side learns the other's PeerInfo."""
@@ -95,10 +104,12 @@ class LatticaNode:
         self.dht = KademliaDHT(self)
         self.pubsub = PubSub(self)
         self.bitswap = Bitswap(self)
-        self.relay_info: Optional[PeerInfo] = None
+        self.relay_infos: List[PeerInfo] = []          # primary first (by RTT)
+        self._relay_meta: Dict[bytes, Dict[str, float]] = {}
+        self._relay_candidates: List[PeerInfo] = []
         self.rendezvous: Optional[RendezvousServer] = (
             RendezvousServer(self) if serve_rendezvous else None)
-        self._upgrade_attempted: set = set()
+        self._upgrade_attempted: Dict[PeerId, float] = {}  # peer -> last try
 
     # ----------------------------------------------------------- service API
     def serve(self, service: Service,
@@ -128,6 +139,11 @@ class LatticaNode:
                     interceptors=interceptors)
 
     # ------------------------------------------------------------- identity
+    @property
+    def relay_info(self) -> Optional[PeerInfo]:
+        """Primary (lowest-RTT) relay this node holds a reservation on."""
+        return self.relay_infos[0] if self.relay_infos else None
+
     def info(self) -> PeerInfo:
         addrs: List[Multiaddr] = []
         if self.host.nat is None:
@@ -136,10 +152,10 @@ class LatticaNode:
             # e.g. full-cone NAT: our observed mapping is stranger-dialable
             for ip, port in sorted(self.transport.observed_addrs):
                 addrs.append(Multiaddr(ip, port))
-        if self.relay_info is not None:
-            relay_ip = self.relay_info.addrs[0].ip
+        for relay_info in self.relay_infos:     # primary first, then failover
+            relay_ip = relay_info.addrs[0].ip
             addrs.append(Multiaddr(relay_ip, MAIN_PORT,
-                                   relay_peer=self.relay_info.peer_id))
+                                   relay_peer=relay_info.peer_id))
         return PeerInfo(self.peer_id, self.host.name, tuple(addrs))
 
     def remember(self, info: PeerInfo) -> None:
@@ -159,6 +175,12 @@ class LatticaNode:
         if target_host is not None:
             existing = self.host.connection_to(target_host)
             if existing is not None:
+                if existing.relayed:
+                    # a circuit is a fallback, not a fate: periodically
+                    # retry the DCUtR upgrade (cooldown-limited)
+                    upgraded = yield from self._maybe_upgrade(existing, info)
+                    if upgraded is not None:
+                        return upgraded
                 return existing
         self.remember(info)
         direct = [a for a in info.addrs if not a.is_relay]
@@ -194,10 +216,12 @@ class LatticaNode:
 
     def _maybe_upgrade(self, circuit: Connection,
                        info: PeerInfo) -> Generator:
-        """One DCUtR attempt per peer; returns direct Connection or None."""
-        if info.peer_id in self._upgrade_attempted:
+        """One DCUtR attempt per peer per cooldown window; returns a direct
+        Connection or None (keep the circuit)."""
+        last = self._upgrade_attempted.get(info.peer_id)
+        if last is not None and self.sim.now - last < UPGRADE_RETRY_COOLDOWN:
             return None
-        self._upgrade_attempted.add(info.peer_id)
+        self._upgrade_attempted[info.peer_id] = self.sim.now
         direct = yield from self.transport.dcutr_upgrade(circuit)
         if direct is not None:
             circuit.close()
@@ -250,20 +274,75 @@ class LatticaNode:
                 probed = True
         if not conns:
             raise DialError("all bootstrap nodes unreachable")
+        self._relay_candidates = list(bootstrap_infos)
+        if relay is not None and all(c.peer_id != relay.peer_id
+                                     for c in self._relay_candidates):
+            self._relay_candidates.append(relay)
         if self.transport.reachability != "public":
-            relay_target = relay or bootstrap_infos[0]
-            yield from self.reserve_relay(relay_target)
+            candidates = [relay] if relay is not None else bootstrap_infos
+            got = yield from self.acquire_relays(candidates)
+            if not got and relay is not None:
+                yield from self.acquire_relays(bootstrap_infos)
         yield from self.dht.bootstrap_lookup()
         for pid in list(self.peers):
             yield from self.pubsub.announce_subscriptions(pid)
         return self.transport.reachability
 
+    # ---------------------------------------------------------------- relays
+    def acquire_relays(self, candidates: List[PeerInfo],
+                       want: int = RELAY_TARGET) -> Generator:
+        """Score candidate relays by RTT and hold reservations on the best
+        ``want`` of them (primary + failover).  Returns reservations held."""
+        held = {i.peer_id for i in self.relay_infos}
+        scored = []
+        for info in candidates:
+            if info.peer_id == self.peer_id or info.peer_id in held:
+                continue
+            try:
+                conn = yield from self.connect_info(info)
+                if conn.relayed:
+                    continue        # a relay must be directly reachable
+                rtt = yield from self.transport.ping(conn)
+            except (DialError, RpcError):
+                continue
+            scored.append((rtt, info, conn))
+        scored.sort(key=lambda s: s[0])
+        for rtt, info, conn in scored:
+            if len(self.relay_infos) >= want:
+                break
+            try:
+                ok, ttl = yield from self.transport.relay_reserve(conn)
+            except DialError:
+                continue
+            if ok:
+                self._note_relay(info, ttl, rtt)
+        return len(self.relay_infos)
+
     def reserve_relay(self, relay_info: PeerInfo) -> Generator:
+        """Reserve (or refresh) a slot on one specific relay."""
         conn = yield from self.connect_info(relay_info)
-        ok = yield from self.transport.relay_reserve(conn)
+        ok, ttl = yield from self.transport.relay_reserve(conn)
         if ok:
-            self.relay_info = relay_info
+            self._note_relay(relay_info, ttl)
         return ok
+
+    def _note_relay(self, info: PeerInfo, ttl: float,
+                    rtt: Optional[float] = None) -> None:
+        digest = info.peer_id.digest
+        if all(i.peer_id != info.peer_id for i in self.relay_infos):
+            self.relay_infos.append(info)
+        meta = self._relay_meta.setdefault(digest, {})
+        meta["expires_at"] = self.sim.now + ttl
+        if rtt is not None:
+            meta["rtt"] = rtt
+        self.relay_infos.sort(
+            key=lambda i: self._relay_meta.get(i.peer_id.digest, {})
+                              .get("rtt", float("inf")))
+
+    def _drop_relay(self, info: PeerInfo) -> None:
+        self.relay_infos = [i for i in self.relay_infos
+                            if i.peer_id != info.peer_id]
+        self._relay_meta.pop(info.peer_id.digest, None)
 
     # ------------------------------------------------------------------ CRDT
     def sync_crdt_with(self, info: PeerInfo) -> Generator:
@@ -278,22 +357,51 @@ class LatticaNode:
         return True
 
     def maintenance_loop(self, interval: float = 10.0) -> Generator:
-        """Background upkeep: re-establish the relay reservation if the
-        relay connection died (link flap, partition).  Without this, a
-        private peer silently loses inbound reachability — libp2p refreshes
-        reservations the same way."""
+        """Background upkeep of relay reservations.  Reservations are TTL'd
+        on the relay side, so a private peer must (a) refresh each held slot
+        before it expires, (b) re-establish reservations whose relay
+        connection died (link flap, partition), and (c) replace relays that
+        stop accepting it, topping back up to ``RELAY_TARGET`` from the
+        candidate set — otherwise it silently loses inbound reachability.
+        libp2p's reservation refresh works the same way."""
         while True:
             yield interval
-            if self.relay_info is None:
-                continue
-            relay_host = self.net.hosts.get(self.relay_info.host_name)
-            conn = (self.host.connection_to(relay_host)
-                    if relay_host is not None else None)
-            if conn is None or conn.closed:
+            if self.host.nat is None:
+                continue            # truly public hosts have static addrs
+            # NAT keepalive: re-confirm our external mapping (STUN-style)
+            # through the primary relay — or, for nodes that hold none
+            # (e.g. dialable full-cone NATs, whose observed mapping IS
+            # their advertised address), through a bootstrap server.
+            anchors = self.relay_infos or self._relay_candidates
+            if anchors:
+                addr = anchors[0].addrs[0]
                 try:
-                    yield from self.reserve_relay(self.relay_info)
-                except (DialError, RpcError):
+                    yield from self.transport.refresh_observed(
+                        (addr.ip, MAIN_PORT))
+                except DialError:
+                    pass
+            if self.transport.reachability == "public":
+                continue
+            for info in list(self.relay_infos):
+                meta = self._relay_meta.get(info.peer_id.digest, {})
+                relay_host = self.net.hosts.get(info.host_name)
+                conn = (self.host.connection_to(relay_host)
+                        if relay_host is not None else None)
+                expiring = (self.sim.now + 2 * interval
+                            >= meta.get("expires_at", 0.0))
+                if conn is not None and not conn.closed and not expiring:
                     continue
+                try:
+                    ok = yield from self.reserve_relay(info)
+                except (DialError, RpcError):
+                    ok = False
+                if not ok:
+                    self._drop_relay(info)
+            if len(self.relay_infos) < RELAY_TARGET and self._relay_candidates:
+                try:
+                    yield from self.acquire_relays(self._relay_candidates)
+                except (DialError, RpcError):
+                    pass
 
     def anti_entropy_loop(self, interval: float = 5.0) -> Generator:
         """Background gossip: periodically reconcile with a random peer."""

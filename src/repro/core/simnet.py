@@ -541,6 +541,7 @@ class Network:
         self.loss = dict(DEFAULT_LOSS, **(loss or {}))
         self.hosts: Dict[str, Host] = {}
         self._by_ip: Dict[str, Any] = {}   # ip -> Host | NATBox
+        self.nats: List[Any] = []          # every NATBox on this fabric
         self._partitions: set = set()     # frozenset({region_a, region_b})
 
     # -- registry ----------------------------------------------------------
@@ -551,6 +552,12 @@ class Network:
 
     def register_nat(self, nat: Any) -> None:
         self._by_ip[nat.public_ip] = nat
+        self.nats.append(nat)
+
+    def nat_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-NAT-kind aggregate of every box's traversal counters."""
+        from .nat import aggregate_nat_stats
+        return aggregate_nat_stats(self.nats)
 
     def host(self, name: str, **kw: Any) -> Host:
         return Host(self, name, **kw)

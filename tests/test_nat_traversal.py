@@ -1,13 +1,44 @@
-"""NAT traversal: the hole-punch outcome matrix emerges from NAT semantics."""
+"""NAT traversal: the hole-punch outcome matrix emerges from NAT semantics.
+
+DCUtR v2 changes the classic Ford et al. matrix: symmetric NATs with a
+*predictable* port allocator (sequential / fixed-delta) now reach direct
+connectivity via predicted-port punching, while random allocators still fall
+back to the relay.  Relay reservations are TTL'd and capacity-bounded, so
+their lifecycle is covered here too.  All asserts resolve through explicit
+RPC/connect outcomes (never anti-entropy timing).
+"""
 
 import pytest
 
-from repro.core import DialError, LatticaNode, NATBox, NATKind, Network, Sim
+from repro.core import (DialError, LatticaNode, NATBox, NATKind, Network,
+                        PortAlloc, Sim)
+from repro.core.fleet import make_nat
+from repro.core.service import stream_request
+from repro.core.traversal import PROTO_RELAY_RESERVE
 
 K = NATKind
 
+# NatSpec (fleet.make_nat): bare kind (default sequential allocator) or
+# (kind, alloc, delta)
+SYM_SEQ = (K.SYMMETRIC, "sequential", 1)
+SYM_DELTA = (K.SYMMETRIC, "fixed_delta", 3)
+SYM_RAND = (K.SYMMETRIC, "random", 1)
 
-def _mesh(kind_a, kind_b, seed=3):
+
+def _kind(spec):
+    return spec if isinstance(spec, (NATKind, type(None))) else spec[0]
+
+
+def _spec_id(spec):
+    if spec is None:
+        return "public"
+    if isinstance(spec, NATKind):
+        return spec.value
+    kind, alloc, _ = spec
+    return f"{kind.value}({alloc})"
+
+
+def _mesh(spec_a, spec_b, seed=3):
     sim = Sim(seed=seed)
     net = Network(sim)
     boot1 = LatticaNode(net, "boot1", region="us", zone="core")
@@ -16,37 +47,47 @@ def _mesh(kind_a, kind_b, seed=3):
     boot2.transport.enable_relay()
     sim.run_process(boot2.connect_info(boot1.info()))
     binfos = [boot1.info(), boot2.info()]
-    nat_a = NATBox(net, kind_a) if kind_a else None
-    nat_b = NATBox(net, kind_b) if kind_b else None
-    a = LatticaNode(net, "a", region="us", nat=nat_a)
-    b = LatticaNode(net, "b", region="eu", nat=nat_b)
+    a = LatticaNode(net, "a", region="us", nat=make_nat(net, spec_a))
+    b = LatticaNode(net, "b", region="eu", nat=make_nat(net, spec_b))
 
     def join(n):
         yield from n.bootstrap(binfos)
     sim.run_process(join(a))
     sim.run_process(join(b))
-    return sim, a, b
+    return sim, a, b, [boot1, boot2]
 
 
-#: Ford et al. (2005) pairwise matrix: can a direct path be established?
+#: Ford et al. (2005) pairwise matrix, updated for DCUtR v2: a symmetric NAT
+#: with a predictable allocator is punchable via the predicted-port spray.
 PUNCH_MATRIX = [
     (K.FULL_CONE, K.FULL_CONE, True),
     (K.FULL_CONE, K.RESTRICTED_CONE, True),
     (K.FULL_CONE, K.PORT_RESTRICTED, True),
-    (K.FULL_CONE, K.SYMMETRIC, True),
+    (K.FULL_CONE, SYM_SEQ, True),
     (K.RESTRICTED_CONE, K.RESTRICTED_CONE, True),
     (K.RESTRICTED_CONE, K.PORT_RESTRICTED, True),
-    (K.RESTRICTED_CONE, K.SYMMETRIC, True),
+    # address-restricted filter only checks the IP: no prediction needed
+    (K.RESTRICTED_CONE, SYM_RAND, True),
     (K.PORT_RESTRICTED, K.PORT_RESTRICTED, True),
-    (K.PORT_RESTRICTED, K.SYMMETRIC, False),
-    (K.SYMMETRIC, K.SYMMETRIC, False),
+    # the seed-failing pairs: succeed iff the symmetric allocator is regular
+    (K.PORT_RESTRICTED, SYM_SEQ, True),
+    (SYM_SEQ, K.PORT_RESTRICTED, True),
+    (K.PORT_RESTRICTED, SYM_DELTA, True),
+    (K.PORT_RESTRICTED, SYM_RAND, False),
+    (SYM_RAND, K.PORT_RESTRICTED, False),
+    # symmetric<->symmetric with random allocators can never line up: both
+    # sides mint unpredictable fresh mappings while punching — relay
+    # fallback.  (Two *predictable* symmetric NATs are not asserted either
+    # way: their sprays occasionally produce a matching (dst, src) pair.)
+    (SYM_RAND, SYM_RAND, False),
 ]
 
 
-@pytest.mark.parametrize("ka,kb,expect_direct", PUNCH_MATRIX,
-                         ids=[f"{a.value}-{b.value}" for a, b, _ in PUNCH_MATRIX])
-def test_punch_matrix(ka, kb, expect_direct):
-    sim, a, b = _mesh(ka, kb)
+@pytest.mark.parametrize(
+    "sa,sb,expect_direct", PUNCH_MATRIX,
+    ids=[f"{_spec_id(a)}-{_spec_id(b)}" for a, b, _ in PUNCH_MATRIX])
+def test_punch_matrix(sa, sb, expect_direct):
+    sim, a, b, _boots = _mesh(sa, sb)
 
     def connect():
         conn = yield from a.connect_info(b.info())
@@ -54,29 +95,98 @@ def test_punch_matrix(ka, kb, expect_direct):
 
     conn = sim.run_process(connect(), until=sim.now + 120)
     assert conn is not None                       # relay guarantees a path
+    ka, kb = _kind(sa), _kind(sb)
     if expect_direct:
         # direct path: dialable peer (full-cone advertises its mapping),
         # reuse of an inbound connection, or a DCUtR punch
-        assert not conn.relayed, f"{ka} -> {kb} should get a direct path"
+        assert not conn.relayed, f"{sa} -> {sb} should get a direct path"
         if (ka not in (None, K.FULL_CONE)
                 and kb not in (None, K.FULL_CONE)):
             assert a.transport.stats["punch_ok"] >= 1
     else:
-        assert conn.relayed, f"{ka} -> {kb} should fall back to relay"
+        assert conn.relayed, f"{sa} -> {sb} should fall back to relay"
         assert a.transport.stats["punch_fail"] >= 1
+
+
+def test_predicted_punch_is_attributed():
+    """A PORT_RESTRICTED -> SYMMETRIC(sequential) upgrade goes through the
+    spray window, and the stats say so."""
+    sim, a, b, _ = _mesh(K.PORT_RESTRICTED, SYM_SEQ)
+
+    def connect():
+        conn = yield from a.connect_info(b.info())
+        return conn
+
+    conn = sim.run_process(connect(), until=sim.now + 120)
+    assert not conn.relayed
+    assert (a.transport.stats["predicted_punch_ok"]
+            + b.transport.stats["predicted_punch_ok"]) >= 1
+    # the symmetric side probed its allocator before advertising it
+    assert b.transport.stats["fingerprint_probes"] >= 1
+
+
+def test_stale_first_candidate_still_upgrades():
+    """Regression (seed bug): DCUtR punched only candidate[0], so one stale
+    advertised address sank the whole upgrade.  v2 punches every candidate."""
+    sim, a, b, _ = _mesh(K.PORT_RESTRICTED, K.PORT_RESTRICTED)
+    # inject a bogus observed address; most-recent-first ordering makes it
+    # the FIRST candidate b advertises
+    b.transport._observe(("1.2.3.4", 1111))
+    assert b.transport.candidate_addrs()[0] == ("1.2.3.4", 1111)
+
+    def connect():
+        conn = yield from a.connect_info(b.info())
+        return conn
+
+    conn = sim.run_process(connect(), until=sim.now + 120)
+    assert not conn.relayed, "a stale first candidate must not sink DCUtR"
+
+
+def test_autonat_ignores_stale_observed_addr():
+    """Regression (seed bug): AutoNAT probed only sorted(observed)[0], so a
+    stale lexically-smallest address misclassified a reachable host."""
+    sim, a, b, boots = _mesh(K.FULL_CONE, None)
+    assert a.transport.reachability == "public"
+    # poison the address book with an unreachable, lexically-smallest addr
+    a.transport._observe(("0.0.0.1", 1))
+    assert min(sorted(a.transport.observed_addrs)) == ("0.0.0.1", 1)
+
+    def reprobe():
+        conn = a.host.connection_to(boots[0].host)
+        assert conn is not None
+        verdict = yield from a.transport.autonat_probe(conn)
+        return verdict
+
+    assert sim.run_process(reprobe(), until=sim.now + 60) == "public"
+
+
+def test_observed_addrs_pruned_by_age():
+    sim, a, _b, _ = _mesh(SYM_SEQ, None)   # symmetric: several observed addrs
+    t = a.transport
+    assert len(t.observed_addrs) > 1
+    newest = t.candidate_addrs()[0]
+    # fast-forward past the TTL with no traffic re-confirming the addrs:
+    # stale extras are dropped, but the freshest mapping is always kept
+    # (a keepalive-less node must never become completely unadvertisable)
+    sim.run(until=sim.now + 400)
+    assert t.observed_addrs == {newest}
+    t._observe(("5.6.7.8", 99))
+    assert t.candidate_addrs()[0] == ("5.6.7.8", 99)
+    sim.run(until=sim.now + 400)
+    assert t.observed_addrs == {("5.6.7.8", 99)}
 
 
 def test_autonat_classification():
     cases = [(None, "public"), (K.FULL_CONE, "public"),
              (K.RESTRICTED_CONE, "private"), (K.PORT_RESTRICTED, "private"),
-             (K.SYMMETRIC, "private")]
-    for kind, expected in cases:
-        sim, a, b = _mesh(kind, None)
-        assert a.transport.reachability == expected, kind
+             (SYM_SEQ, "private")]
+    for spec, expected in cases:
+        sim, a, b, _ = _mesh(spec, None)
+        assert a.transport.reachability == expected, spec
 
 
 def test_relayed_connection_carries_data():
-    sim, a, b = _mesh(K.SYMMETRIC, K.SYMMETRIC)
+    sim, a, b, _ = _mesh(SYM_RAND, SYM_RAND)
 
     def roundtrip():
         conn = yield from a.connect_info(b.info())
@@ -90,7 +200,7 @@ def test_relayed_connection_carries_data():
 
 
 def test_direct_dial_public_peers():
-    sim, a, b = _mesh(None, None)
+    sim, a, b, _ = _mesh(None, None)
 
     def connect():
         conn = yield from a.connect_info(b.info())
@@ -99,3 +209,194 @@ def test_direct_dial_public_peers():
     conn = sim.run_process(connect())
     assert conn is not None and not conn.relayed
     assert a.transport.stats["punch_ok"] == 0     # no punch needed
+
+
+# ---------------------------------------------------------------------------
+# NATBox port-allocation models
+# ---------------------------------------------------------------------------
+
+
+def test_port_alloc_sequential_and_fixed_delta():
+    sim = Sim(seed=1)
+    net = Network(sim)
+    seq = NATBox(net, K.SYMMETRIC, alloc="sequential")
+    host = net.host("h1", nat=seq)
+    ports = [seq.map_outbound(host, 4001, ("9.9.9.9", p))[1]
+             for p in range(1, 5)]
+    assert [q - p for p, q in zip(ports, ports[1:])] == [1, 1, 1]
+    # same destination reuses the mapping (endpoint-dependent, not per-packet)
+    assert seq.map_outbound(host, 4001, ("9.9.9.9", 1))[1] == ports[0]
+
+    fd = NATBox(net, K.SYMMETRIC, alloc=PortAlloc.FIXED_DELTA, delta=5)
+    h2 = net.host("h2", nat=fd)
+    ports = [fd.map_outbound(h2, 4001, ("9.9.9.9", p))[1]
+             for p in range(1, 5)]
+    assert [q - p for p, q in zip(ports, ports[1:])] == [5, 5, 5]
+
+
+def test_port_alloc_random_is_irregular_but_deterministic():
+    def draw(seed):
+        sim = Sim(seed=seed)
+        net = Network(sim)
+        box = NATBox(net, K.SYMMETRIC, alloc="random")
+        host = net.host("h", nat=box)
+        return [box.map_outbound(host, 4001, ("9.9.9.9", p))[1]
+                for p in range(1, 9)]
+
+    ports = draw(7)
+    deltas = {q - p for p, q in zip(ports, ports[1:])}
+    assert len(deltas) > 1, "random allocator must not produce one stride"
+    assert len(set(ports)) == len(ports)
+    assert ports == draw(7)                 # seeded rng => reproducible
+
+
+def test_natbox_stats_and_network_aggregate():
+    sim, a, b, _ = _mesh(K.PORT_RESTRICTED, SYM_SEQ)
+
+    def connect():
+        conn = yield from a.connect_info(b.info())
+        return conn
+
+    sim.run_process(connect(), until=sim.now + 120)
+    agg = a.net.nat_stats()
+    assert "port_restricted" in agg
+    assert "symmetric/sequential" in agg
+    sym = agg["symmetric/sequential"]
+    assert sym["boxes"] == 1 and sym["mappings"] > 1
+    # punching a symmetric NAT necessarily bounces some datagrams off it
+    assert sym["inbound_filtered"] + sym["inbound_unmapped"] > 0
+    assert sym["inbound_ok"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Relay reservation lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _relay_of(node, boots):
+    primary = node.relay_info
+    assert primary is not None
+    return next(bt for bt in boots if bt.peer_id == primary.peer_id)
+
+
+def test_relay_reservation_expires_without_refresh():
+    sim, a, b, boots = _mesh(SYM_RAND, SYM_RAND)
+    relay = _relay_of(b, boots)
+    assert b.peer_id.digest in relay.transport.relay_reservations
+    sim.run(until=sim.now + relay.transport.relay_ttl + 1)
+
+    def attempt():
+        conn = yield from a.connect_info(relay.info())
+        try:
+            yield from a.transport.relay_connect(conn, b.peer_id)
+            return "connected"
+        except DialError as e:
+            return str(e)
+
+    outcome = sim.run_process(attempt(), until=sim.now + 60)
+    assert "no reservation" in outcome
+    assert b.peer_id.digest not in relay.transport.relay_reservations
+    assert relay.transport.relay_stats["expired"] >= 1
+
+
+def test_maintenance_loop_refreshes_reservation():
+    sim, a, b, boots = _mesh(SYM_RAND, SYM_RAND)
+    relay = _relay_of(b, boots)
+    ttl = relay.transport.relay_ttl
+    sim.process(b.maintenance_loop(interval=5.0))
+    sim.run(until=sim.now + ttl + 30)        # past the unrefreshed expiry
+    res = relay.transport.relay_reservations.get(b.peer_id.digest)
+    assert res is not None and res.refreshes >= 1
+
+    def attempt():
+        conn = yield from a.connect_info(relay.info())
+        circuit = yield from a.transport.relay_connect(conn, b.peer_id)
+        return circuit
+
+    assert sim.run_process(attempt(), until=sim.now + 60) is not None
+
+
+def test_foreign_host_cannot_refresh_or_squat_reservation():
+    """The reservation digest must match the peer on the authenticated
+    connection: no refreshing someone else's slot, and no squatting a
+    not-yet-joined peer's digest to capture its circuits."""
+    from repro.core import PeerId
+
+    sim, a, b, boots = _mesh(None, SYM_RAND)
+    relay = _relay_of(b, boots)
+
+    def forge(digest, claimed_name):
+        conn = yield from a.connect_info(relay.info())
+        stream = conn.open_stream(PROTO_RELAY_RESERVE, a.host)
+        msg = yield from stream_request(
+            stream, ("reserve", digest, claimed_name), 96, timeout=5.0)
+        return msg
+
+    # refresh of an existing slot, with the victim's own claimed name
+    msg = sim.run_process(forge(b.peer_id.digest, "b"), until=sim.now + 60)
+    assert msg[1] is False
+    res = relay.transport.relay_reservations[b.peer_id.digest]
+    assert res.host_name == "b"              # slot not hijacked
+    # squat of a digest whose owner has not joined yet
+    victim = PeerId.from_name("not-joined-yet")
+    msg = sim.run_process(forge(victim.digest, a.host.name),
+                          until=sim.now + 60)
+    assert msg[1] is False
+    assert victim.digest not in relay.transport.relay_reservations
+    assert relay.transport.relay_stats["rejected_foreign"] >= 2
+
+
+def test_relay_capacity_limit():
+    sim = Sim(seed=11)
+    net = Network(sim)
+    boot = LatticaNode(net, "boot1", region="us", zone="core")
+    boot.transport.enable_relay(capacity=1)
+    binfos = [boot.info()]
+    b = LatticaNode(net, "b", region="us", nat=NATBox(net, K.PORT_RESTRICTED))
+    c = LatticaNode(net, "c", region="us", nat=NATBox(net, K.PORT_RESTRICTED))
+
+    def join(n):
+        yield from n.bootstrap(binfos)
+    sim.run_process(join(b))
+    sim.run_process(join(c))
+    assert len(boot.transport.relay_reservations) == 1
+    assert boot.transport.relay_stats["rejected_capacity"] >= 1
+    assert b.relay_infos and not c.relay_infos
+    # the holder can still refresh its own slot at capacity
+    assert sim.run_process(b.reserve_relay(boot.info()), until=sim.now + 60)
+    assert boot.transport.relay_stats["refreshed"] >= 1
+
+
+def test_relay_drops_reservation_on_lost_target():
+    sim, a, b, boots = _mesh(SYM_RAND, SYM_RAND)
+    relay = _relay_of(b, boots)
+    # the relay loses its connection to b (crash / link flap)
+    conn = relay.host.connection_to(b.host)
+    assert conn is not None
+    conn.close()
+
+    def attempt():
+        c2r = yield from a.connect_info(relay.info())
+        try:
+            yield from a.transport.relay_connect(c2r, b.peer_id)
+            return "connected"
+        except DialError as e:
+            return str(e)
+
+    outcome = sim.run_process(attempt(), until=sim.now + 60)
+    assert "relay lost target" in outcome
+    assert b.peer_id.digest not in relay.transport.relay_reservations
+    assert relay.transport.relay_stats["dropped_lost_target"] >= 1
+
+
+def test_private_node_holds_failover_relays():
+    """Relay selection reserves on the best-RTT relays, primary first, and
+    advertises every held relay so dialers can fail over."""
+    sim, a, b, boots = _mesh(SYM_RAND, SYM_RAND)
+    assert len(b.relay_infos) == 2
+    relay_addrs = [ad for ad in b.info().addrs if ad.is_relay]
+    assert len(relay_addrs) == 2
+    # primary is the lower-RTT relay: b sits in eu, boot2 is the eu relay
+    assert b.relay_info.host_name == "boot2"
+    meta = [b._relay_meta[i.peer_id.digest] for i in b.relay_infos]
+    assert meta[0]["rtt"] <= meta[1]["rtt"]
