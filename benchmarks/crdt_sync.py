@@ -1,47 +1,276 @@
-"""CRDT anti-entropy convergence: how long until every replica agrees."""
+"""CRDT replication-plane benchmarks: delta-sync efficiency, push-plane
+convergence latency, v1/v2 interop, and anti-entropy convergence time.
+
+    PYTHONPATH=src python benchmarks/crdt_sync.py               # full report
+    PYTHONPATH=src python benchmarks/crdt_sync.py --sync-smoke  # CI gates
+
+The ``--sync-smoke`` gates (wired into scripts/ci.sh):
+  * at ~1k registry-shaped keys with 1% churn per round, the v2 protocol
+    (digest probe → per-key digest summary → per-key delta transfer) moves
+    ≤10% of the bytes the v1 full-state exchange moves;
+  * with the delta push plane enabled, a write reaches every connected
+    subscriber's ``watch`` callback within one gossip round — no
+    anti-entropy tick is running at all;
+  * a mixed v1↔v2 pair still converges in both directions (the v2 node
+    falls back to the full-state exchange after one NOT_FOUND).
+"""
 
 from __future__ import annotations
 
-from typing import Generator, List
+import sys
+from typing import Dict, Generator, List
 
-from repro.core.fleet import make_fleet
+from repro.core import LatticaNode, Network, Sim
+from repro.core.fleet import make_fleet, wait_converged
+
+N_KEYS = 1000
+VERSIONS_PER_KEY = 8
+CHURN = 0.01
 
 
-def run_convergence(n_peers: int, interval: float = 2.0) -> dict:
+# ------------------------------------------------------------------ helpers
+
+
+def _digest(step: int, key_idx: int) -> bytes:
+    return bytes([(step * 31 + key_idx * 7 + i) % 256 for i in range(32)])
+
+
+def _seed_registry(node: LatticaNode, n_keys: int, versions: int) -> None:
+    """Registry-shaped state: one ORSet of (step, codec, digest) version
+    tuples per key — the same shape the checkpoint registry uses."""
+    name = node.host.name
+    for i in range(n_keys):
+        s = node.store.orset(f"reg/k{i:04d}")
+        for v in range(versions):
+            s.add((v + 1, 0x70, _digest(v + 1, i)), name)
+
+
+def _churn(node: LatticaNode, n_keys: int, frac: float, round_no: int) -> int:
+    """Mutate ``frac`` of the keys (one new version tuple each)."""
+    name = node.host.name
+    step = VERSIONS_PER_KEY + round_no
+    n = max(1, int(n_keys * frac))
+    for i in range(0, n_keys, n_keys // n):
+        node.store.orset(f"reg/k{i:04d}").add(
+            (step, 0x70, _digest(step, i)), name)
+    return n
+
+
+def _pair(proto: str, seed: int = 1) -> tuple:
+    """Two directly-dialable public nodes speaking ``proto`` (push off so
+    measured bytes are purely the sync protocol's)."""
+    sim = Sim(seed=seed)
+    net = Network(sim)
+    a = LatticaNode(net, "a", crdt_proto=proto, crdt_push=False)
+    b = LatticaNode(net, "b", region="eu", crdt_proto=proto, crdt_push=False)
+    sim.run_process(a.connect_info(b.info()))
+    return sim, a, b
+
+
+def _sync_bytes(sim: Sim, a: LatticaNode, b: LatticaNode) -> int:
+    """One anti-entropy round a→b; returns the bytes it moved (both
+    directions of payload, as counted by the node's crdt_stats)."""
+    before = a.crdt_stats["tx_bytes"] + a.crdt_stats["rx_bytes"]
+    sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 600)
+    return a.crdt_stats["tx_bytes"] + a.crdt_stats["rx_bytes"] - before
+
+
+# ------------------------------------------------ 1. delta-sync efficiency
+
+
+def run_delta_efficiency(n_keys: int = N_KEYS, churn: float = CHURN,
+                         rounds: int = 3) -> Dict[str, float]:
+    """Steady-state bytes per round at ``churn`` fraction of keys mutated:
+    v2 per-key deltas vs the v1 full-store swap, identical state both
+    times."""
+    results: Dict[str, List[int]] = {"v1": [], "v2": []}
+    for proto in ("v2", "v1"):
+        sim, a, b = _pair(proto)
+        _seed_registry(a, n_keys, VERSIONS_PER_KEY)
+        _sync_bytes(sim, a, b)                   # initial replication
+        assert a.store.digest() == b.store.digest()
+        for r in range(rounds):
+            _churn(a, n_keys, churn, r + 1)
+            moved = _sync_bytes(sim, a, b)
+            assert a.store.digest() == b.store.digest(), "round diverged"
+            results[proto].append(moved)
+    v1 = sum(results["v1"]) / len(results["v1"])
+    v2 = sum(results["v2"]) / len(results["v2"])
+    return {"n_keys": n_keys, "churn": churn, "rounds": rounds,
+            "v1_bytes_per_round": v1, "v2_bytes_per_round": v2,
+            "ratio": v2 / v1 if v1 else 1.0}
+
+
+# ------------------------------------------------ 2. push-plane latency
+
+
+def run_push_latency(n_peers: int = 8, seed: int = 44) -> Dict[str, float]:
+    """A write on one peer must reach every other connected peer's
+    ``watch`` callback via the crdt/<ns> delta push — with *no*
+    anti-entropy loop running anywhere."""
+    fleet = make_fleet(n_peers, seed=seed, same_region="us")
+    sim = fleet.sim
+    writer = fleet.peers[0]
+    subs = fleet.peers[1:]
+    fired: Dict[str, float] = {}
+
+    def cb_for(name: str):
+        def cb(key: str, value: object, origin: str) -> None:
+            if origin == "remote" and name not in fired:
+                fired[name] = sim.now
+        return cb
+
+    for n in subs:
+        n.watch_crdt("bench/", cb_for(n.host.name))
+    sim.run(until=sim.now + 5)          # subscription propagation settles
+    t0 = sim.now
+    writer.store.orset("bench/versions").add((1, b"\x01" * 32),
+                                             writer.host.name)
+    sim.run(until=sim.now + 10)
+    latencies = [t - t0 for t in fired.values()]
+    return {"n_subscribers": len(subs), "reached": len(fired),
+            "max_latency_s": max(latencies) if latencies else float("inf"),
+            "push_docs": writer.crdt_stats["push_published"],
+            "push_bytes": writer.crdt_stats["push_bytes"]}
+
+
+# ------------------------------------------------ 3. v1 <-> v2 interop
+
+
+def run_mixed_interop(seed: int = 9) -> Dict[str, bool]:
+    """A v1-only peer and a v2 peer must converge in both directions."""
+    sim = Sim(seed=seed)
+    net = Network(sim)
+    v2 = LatticaNode(net, "v2node", crdt_proto="v2", crdt_push=False)
+    v1 = LatticaNode(net, "v1node", region="eu", crdt_proto="v1")
+    sim.run_process(v2.connect_info(v1.info()))
+
+    v2.store.counter("steps/f").increment("v2node", 3)
+    v2.store.orset("reg/k").add((1, b"\x01" * 32), "v2node")
+    v1.store.counter("steps/f").increment("v1node", 4)
+    sim.run_process(v2.sync_crdt_with(v1.info()), until=sim.now + 600)
+    v2_initiated = v2.store.digest() == v1.store.digest()
+
+    v1.store.orset("reg/k").add((2, b"\x02" * 32), "v1node")
+    sim.run_process(v1.sync_crdt_with(v2.info()), until=sim.now + 600)
+    v1_initiated = v1.store.digest() == v2.store.digest()
+    return {"v2_initiated_converged": v2_initiated,
+            "v1_initiated_converged": v1_initiated,
+            "fallbacks": v2.crdt_stats["full_exchanges"],
+            "value_agree": (v2.store.counter("steps/f").value()
+                            == v1.store.counter("steps/f").value() == 7)}
+
+
+# ------------------------------------------------ 4. anti-entropy fallback
+
+
+def run_convergence(n_peers: int, interval: float = 2.0,
+                    push: bool = True) -> dict:
+    """Whole-fleet convergence time after every peer writes.  With the push
+    plane on, writes go out event-driven and anti-entropy only mops up;
+    with it off, this is the old luck-driven random-pairwise baseline.
+    ``wait_converged`` (watch-based) replaces the old sleep-step-poll."""
     fleet = make_fleet(n_peers, seed=55, same_region="us")
     sim = fleet.sim
-    # every peer makes a local write
+    for node in fleet.peers:
+        node.crdt_push = node.crdt_push and push
+        if push:
+            node.join_crdt_push("steps")
+            node.join_crdt_push("versions")
+    sim.run(until=sim.now + 5)          # subscription propagation settles
     for i, node in enumerate(fleet.peers):
         node.store.counter("steps").increment(node.host.name, i + 1)
         node.store.orset("versions").add(i, node.host.name)
     target = sum(range(1, n_peers + 1))
-    loops = [sim.process(n.anti_entropy_loop(interval)) for n in fleet.peers]
+    for n in fleet.peers:
+        sim.process(n.anti_entropy_loop(interval))
     t0 = sim.now
-    deadline = t0 + 3600
-    rounds = 0
-    while sim.now < deadline:
-        sim.run(until=sim.now + interval)
-        rounds += 1
-        if all(n.store.counter("steps").value() == target
-               for n in fleet.peers):
-            break
-    digests = {n.store.digest() for n in fleet.peers}
-    return {"n": n_peers, "t_converge": sim.now - t0,
-            "converged": len(digests) == 1
+    converged = wait_converged(sim, fleet.peers, timeout=3600)
+    return {"n": n_peers, "push": push, "t_converge": sim.now - t0,
+            "converged": converged
             and fleet.peers[0].store.counter("steps").value() == target}
 
 
+# ---------------------------------------------------------------- reports
+
+
 def main(report: List[str]) -> None:
-    report.append("# CRDT store convergence (random pairwise anti-entropy, "
-                  "2 s interval)")
-    report.append(f"{'peers':>6} {'t_converge_s':>12} {'converged':>9}")
+    report.append("# CRDT store convergence (anti-entropy 2 s interval, "
+                  "with/without delta push)")
+    report.append(f"{'peers':>6} {'push':>5} {'t_converge_s':>12} "
+                  f"{'converged':>9}")
     for n in (4, 8, 16):
-        r = run_convergence(n)
-        report.append(f"{r['n']:>6} {r['t_converge']:>12.1f} "
-                      f"{str(r['converged']):>9}")
+        for push in (False, True):
+            r = run_convergence(n, push=push)
+            report.append(f"{r['n']:>6} {str(r['push']):>5} "
+                          f"{r['t_converge']:>12.2f} "
+                          f"{str(r['converged']):>9}")
+
+
+def main_sync(report: List[str]) -> None:
+    report.append("# v2 delta sync vs v1 full-state exchange "
+                  f"({N_KEYS} keys, {CHURN:.0%} churn/round)")
+    eff = run_delta_efficiency()
+    report.append(f"v1 full-state: {eff['v1_bytes_per_round']:>10.0f} B/round")
+    report.append(f"v2 delta:      {eff['v2_bytes_per_round']:>10.0f} B/round"
+                  f"  ({eff['ratio']:.1%} of v1)")
+    push = run_push_latency()
+    report.append(f"# delta push: write -> {push['reached']}/"
+                  f"{push['n_subscribers']} subscriber watch callbacks, "
+                  f"max latency {push['max_latency_s']:.2f}s "
+                  f"({push['push_bytes']} B published, no anti-entropy)")
+    mixed = run_mixed_interop()
+    report.append(f"# mixed pair: v2-initiated converged = "
+                  f"{mixed['v2_initiated_converged']}, v1-initiated = "
+                  f"{mixed['v1_initiated_converged']} "
+                  f"(v1 fallbacks used: {mixed['fallbacks']})")
+
+
+def sync_smoke() -> int:
+    """CI gates for the delta replication plane."""
+    failures = []
+    eff = run_delta_efficiency()
+    print(f"[crdt-sync] v2 moves {eff['v2_bytes_per_round']:.0f} B/round vs "
+          f"v1 {eff['v1_bytes_per_round']:.0f} B/round "
+          f"({eff['ratio']:.1%}) at {eff['n_keys']} keys / "
+          f"{eff['churn']:.0%} churn")
+    if eff["ratio"] > 0.10:
+        failures.append(
+            f"delta sync moved {eff['ratio']:.1%} of full-state bytes "
+            "(gate: <=10%)")
+
+    push = run_push_latency()
+    print(f"[crdt-sync] push reached {push['reached']}/"
+          f"{push['n_subscribers']} subscribers, max latency "
+          f"{push['max_latency_s']:.2f}s (no anti-entropy running)")
+    if push["reached"] < push["n_subscribers"]:
+        failures.append(
+            f"push reached only {push['reached']}/{push['n_subscribers']} "
+            "subscribers")
+    elif push["max_latency_s"] > 3.0:
+        failures.append(
+            f"push latency {push['max_latency_s']:.2f}s exceeds one gossip "
+            "round (gate: <=3s)")
+
+    mixed = run_mixed_interop()
+    print(f"[crdt-sync] mixed v1<->v2 pair converged both directions: "
+          f"{mixed['v2_initiated_converged'] and mixed['v1_initiated_converged']}")
+    if not (mixed["v2_initiated_converged"] and mixed["v1_initiated_converged"]
+            and mixed["value_agree"]):
+        failures.append("mixed v1<->v2 pair failed to converge")
+
+    if failures:
+        for f in failures:
+            print(f"[crdt-sync] FAIL: {f}")
+        return 1
+    print("[crdt-sync] all gates passed")
+    return 0
 
 
 if __name__ == "__main__":
+    if "--sync-smoke" in sys.argv:
+        raise SystemExit(sync_smoke())
     out: List[str] = []
+    main_sync(out)
     main(out)
     print("\n".join(out))

@@ -10,7 +10,8 @@ Sections:
     cdn         model dissemination via Bitswap (Fig. 1-2/3)
     delta       per-tensor delta sync (v2 manifests, bytes ∝ churn)
     shifted     shifted-edit delta (CDC vs fixed chunk boundary stability)
-    crdt        replicated-store convergence
+    crdt        replicated-store convergence (anti-entropy vs delta push)
+    crdtsync    v2 delta sync bytes vs full-state, push latency, v1 interop
     shards      sharded inference + failover (Fig. 1-4)
     roofline    arch × shape roofline terms from the dry-run artifacts
 
@@ -36,6 +37,7 @@ SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
     ("delta", model_sync.main_delta),
     ("shifted", model_sync.main_shifted),
     ("crdt", crdt_sync.main),
+    ("crdtsync", crdt_sync.main_sync),
     ("shards", sharded_inference.main),
     ("roofline", roofline.main),
 ]

@@ -19,7 +19,7 @@ import jax
 from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
                                            CheckpointService)
 from repro.configs import get_config
-from repro.core.fleet import make_fleet
+from repro.core.fleet import make_fleet, wait_converged
 from repro.core.metrics import dashboard
 from repro.data import make_batch_iterator
 from repro.optim import cosine_schedule
@@ -70,10 +70,15 @@ def main():
     print(f"[t={sim.now:5.0f}s] partitioned: edges hold stale versions "
           f"{stale}; trainer kept publishing")
 
-    # phase 3: heal — maintenance restores relays, registry reconciles
+    # phase 3: heal — maintenance restores relays, the registry reconciles
+    # via delta push + CheckpointService resolution; wait_converged pumps
+    # the sim until every replica's digest agrees instead of guessing how
+    # long "enough gossip" takes (the old source of flakiness)
     fleet.net.set_partition("us", "eu", blocked=False)
     print(f"[t={sim.now:5.0f}s] *** link healed ***")
-    sim.run(until=sim.now + 120)
+    registries = wait_converged(sim, [cloud] + edges, timeout=240.0)
+    print(f"[t={sim.now:5.0f}s] registry replicas converged = {registries}")
+    sim.run(until=sim.now + 60)     # trailing fetches of the final version
     final = [s.current_step for s in subs]
     latest = CheckpointRegistry(cloud, "edge-city").latest()[0]
     print(f"[t={sim.now:5.0f}s] recovered: edge versions = {final}, "

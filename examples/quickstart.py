@@ -143,18 +143,40 @@ def main():
               f"tensor: re-publish reuses {d['reused_bytes']/total:.0%} of "
               f"bytes ==")
 
-    # -- 4. CRDT store --------------------------------------------------------
+    # -- 4. CRDT store: watch + delta push ------------------------------------
+    # The replicated store is a *delta-state* CRDT document: every local
+    # mutation ships as a minimal per-key delta on a crdt/<ns> pubsub
+    # topic (canonical JSON, not pickle), so a subscriber's watch callback
+    # fires one gossip round after a remote write — no anti-entropy tick,
+    # no full-state swap.
+    events = []
+    b.watch_crdt("train/", lambda key, value, origin:
+                 events.append((key, value, origin)))
+    sim.run(until=sim.now + 2)       # subscription update reaches the mesh
+
+    pushed0 = a.crdt_stats["push_bytes"]
     a.store.counter("train/steps").increment(a.host.name, 42)
-    b.store.orset("train/ckpts").add("v1", b.host.name)
+    a.store.orset("train/ckpts").add("v1", a.host.name)
+    sim.run(until=sim.now + 3)       # one gossip round
+    print(f"== 4. CRDT delta push: {b.host.name} watch fired {events}; "
+          f"subscriber sees steps="
+          f"{b.store.counter('train/steps').value()}, "
+          f"ckpts={b.store.orset('train/ckpts').value()}; "
+          f"{a.crdt_stats['push_bytes'] - pushed0} B on the wire vs "
+          f"{len(a.store.serialize())} B full state ==")
+
+    # anti-entropy is the mop-up path, and it too moves per-key deltas
+    # now: digest probe -> per-key digest summary -> delta transfer
+    b.store.orset("train/ckpts").add("v2", b.host.name)
 
     def sync():
         yield from a.sync_crdt_with(b.info())
 
     sim.run_process(sync())
-    print(f"== 4. CRDT store converged: digests equal = "
-          f"{a.store.digest() == b.store.digest()}, "
-          f"steps={b.store.counter('train/steps').value()}, "
-          f"ckpts={a.store.orset('train/ckpts').value()} ==")
+    print(f"== 4b. delta anti-entropy: ckpts={a.store.orset('train/ckpts').value()}, "
+          f"rounds={a.crdt_stats['delta_exchanges']} delta / "
+          f"{a.crdt_stats['full_exchanges']} full, "
+          f"{a.crdt_stats['tx_bytes'] + a.crdt_stats['rx_bytes']} B total ==")
 
     # -- 5. typed RPC service -------------------------------------------------
     # Declare methods with MethodSpecs: wire name, codecs (which compute the

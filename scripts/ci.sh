@@ -22,6 +22,11 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # all-cone fleet >=95%, and PORT_RESTRICTED<->SYMMETRIC(sequential)
     # must upgrade via predicted-port punching
     python benchmarks/nat_traversal.py --punch-smoke
+    # CRDT replication smoke: v2 delta sync must move <=10% of the bytes
+    # the v1 full-state exchange moves at 1k keys / 1% churn, a pushed
+    # write must reach every subscriber's watch callback within one gossip
+    # round with no anti-entropy running, and v1<->v2 pairs must converge
+    python benchmarks/crdt_sync.py --sync-smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

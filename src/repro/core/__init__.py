@@ -20,10 +20,11 @@ from .cid import (CID, DAG, ChunkSpec, ManifestEntry, build_dag,
                   decode_manifest_v2, encode_manifest, encode_manifest_v2,
                   manifest_children, manifest_version, read_dag)
 from .crdt import (GCounter, LWWRegister, MVRegister, ORSet, PNCounter,
-                   ReplicatedStore)
+                   ReplicatedStore, decode_entry, encode_entry)
 from .dht import KademliaDHT, KadService, PeerInfo, RoutingTable
 from .nat import NATBox, NATKind, PortAlloc, aggregate_nat_stats, nat_label
-from .node import CrdtSyncService, IdentityService, LatticaNode
+from .node import (CrdtSyncService, CrdtSyncV2Service, IdentityService,
+                   LatticaNode, crdt_ns)
 from .peer import Multiaddr, PeerId
 from .rpc import RpcChannel, RpcError, RpcRouter, call_unary, open_channel
 from .service import (ClientInterceptor, Codec, Fixed, MethodSpec,
@@ -38,9 +39,11 @@ __all__ = [
     "encode_manifest", "encode_manifest_v2", "manifest_children",
     "manifest_version", "read_dag",
     "GCounter", "LWWRegister", "MVRegister", "ORSet", "PNCounter",
-    "ReplicatedStore", "KademliaDHT", "KadService", "PeerInfo",
+    "ReplicatedStore", "decode_entry", "encode_entry",
+    "KademliaDHT", "KadService", "PeerInfo",
     "RoutingTable", "NATBox", "NATKind", "PortAlloc",
     "aggregate_nat_stats", "nat_label", "CrdtSyncService",
+    "CrdtSyncV2Service", "crdt_ns",
     "IdentityService", "LatticaNode", "Multiaddr", "PeerId",
     "RpcChannel", "RpcError", "RpcRouter", "call_unary", "open_channel",
     "ClientInterceptor", "Codec", "Fixed", "MethodSpec", "RpcMetrics",

@@ -6,21 +6,183 @@ regardless of delivery order, duplication, or partitions — exactly the
 property Lattica's decentralized store relies on, and exactly what the
 hypothesis tests in ``tests/test_crdt.py`` verify.
 
-The ``ReplicatedStore`` composes named CRDTs into a document, exposes a
-digest for cheap anti-entropy ("are we synced?"), and serializes deltas for
-gossip over the Lattica mesh.
+Since the delta-state redesign every kind is additionally a *delta-state*
+CRDT (Almeida et al. 2018 style): ``vv()`` reports a replica's causal state
+as a compact version-vector summary, and ``delta_since(vv)`` returns a
+minimal mergeable fragment — the same type, carrying only the state the
+summarized replica has not seen.  Syncing two replicas therefore moves
+O(changed-state), not O(total-state), and a fragment is safe to merge at
+*any* replica (fragments never overstate causal coverage: counters are
+cumulative, registers ship full state, and ORSet coverage is recomputed
+from the tags actually held).
+
+The wire format is a canonical, versioned JSON codec (one schema per kind,
+``encode_entry``/``decode_entry``); digests are computed over the canonical
+encoding so two honest replicas can never disagree on a digest for equal
+state (pickle bytes vary across Python/protocol versions — the old codec).
+``ReplicatedStore.deserialize`` still accepts legacy pickled v1 state
+through the ``safepickle`` restricted unpickler.
+
+The ``ReplicatedStore`` composes named CRDTs into a document, exposes
+per-key digests and a store-level causal context for the v2 sync protocol,
+and a ``watch(prefix, callback)`` subscription API that fires on local and
+merged-in remote changes — the foundation of the mesh's event-driven delta
+push plane (``LatticaNode.watch_crdt``).
 """
 
 from __future__ import annotations
 
+import base64
 import hashlib
-import pickle
-from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, Optional, Set, Tuple
+import json
+from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Optional,
+                    Set, Tuple)
+
+#: magic prefix of the canonical JSON wire format (store snapshots and
+#: delta documents); anything else falls back to the legacy pickle path
+WIRE_MAGIC = b"CRD2"
+
+#: current wire schema version
+WIRE_VERSION = 2
+
+
+# ---------------------------------------------------------------------------
+# Canonical value codec
+# ---------------------------------------------------------------------------
+#
+# CRDT user values (register contents, set elements) are restricted to JSON
+# primitives plus bytes / tuple / set / frozenset / non-str-keyed dicts,
+# encoded with reserved single-key tag objects.  The encoding is canonical:
+# dict keys sort, set elements sort by their encoded JSON — so equal values
+# always produce identical bytes, which is what makes digests comparable
+# across replicas.
+
+
+def canonical_dumps(doc: Any) -> bytes:
+    """Deterministic JSON bytes: sorted keys, no whitespace, no NaN/Inf."""
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"),
+                      allow_nan=False).encode("utf-8")
+
+
+def _enc_val(v: Any) -> Any:
+    """Python value -> JSON-able doc.  Raises ``ValueError`` on types the
+    canonical codec does not cover (store values must stay primitive).
+
+    Numerics are normalized by Python value-equality: ``3.0`` encodes as
+    ``3`` (and ``-0.0`` as ``0``), because ``3 == 3.0`` means they are the
+    *same* set element / dict key to every replica — encoding them
+    differently would let two equal-state replicas disagree on a digest
+    forever.  (Bools keep their own type; mixing ``True`` with ``1`` in
+    one container is outside the canonical domain.)"""
+    if v is None or type(v) in (bool, int, str):
+        return v
+    if type(v) is float:
+        if v != v or v in (float("inf"), float("-inf")):
+            raise ValueError("canonical codec: NaN/Inf not representable")
+        if v == int(v) and abs(v) < 2.0 ** 53:
+            return int(v)
+        return v
+    if isinstance(v, bytes):
+        return {"__b": base64.b64encode(v).decode("ascii")}
+    if type(v) is tuple:
+        return {"__t": [_enc_val(x) for x in v]}
+    if type(v) is list:
+        return {"__l": [_enc_val(x) for x in v]}
+    if type(v) in (set, frozenset):
+        enc = [_enc_val(x) for x in v]
+        enc.sort(key=lambda d: canonical_dumps(d))
+        return {"__s": enc}
+    if type(v) is dict:
+        pairs = [[_enc_val(k), _enc_val(x)] for k, x in v.items()]
+        pairs.sort(key=lambda p: canonical_dumps(p[0]))
+        return {"__d": pairs}
+    raise ValueError(f"canonical codec: unsupported value type {type(v)!r}")
+
+
+def _dec_val(doc: Any) -> Any:
+    """Inverse of :func:`_enc_val`; raises ``ValueError`` on malformed docs.
+    Sets decode to ``frozenset`` (hashable, ``==``-equal to the original)."""
+    if doc is None or type(doc) in (bool, int, str, float):
+        return doc
+    if type(doc) is dict:
+        if len(doc) != 1:
+            raise ValueError("canonical codec: malformed tag object")
+        tag, body = next(iter(doc.items()))
+        if tag == "__b":
+            if not isinstance(body, str):
+                raise ValueError("canonical codec: bad bytes payload")
+            try:
+                return base64.b64decode(body.encode("ascii"), validate=True)
+            except Exception as e:  # noqa: BLE001
+                raise ValueError(f"canonical codec: bad base64: {e}") from e
+        if tag == "__t" and isinstance(body, list):
+            return tuple(_dec_val(x) for x in body)
+        if tag == "__l" and isinstance(body, list):
+            return [_dec_val(x) for x in body]
+        if tag == "__s" and isinstance(body, list):
+            return frozenset(_dec_val(x) for x in body)
+        if tag == "__d" and isinstance(body, list):
+            out = {}
+            for p in body:
+                if not (isinstance(p, list) and len(p) == 2):
+                    raise ValueError("canonical codec: bad dict pair")
+                out[_dec_val(p[0])] = _dec_val(p[1])
+            return out
+    raise ValueError(f"canonical codec: undecodable doc {type(doc)!r}")
+
+
+def _str_int_map(d: Any) -> bool:
+    """``{str: int}`` with genuine ints (bools refused)."""
+    return isinstance(d, dict) and all(
+        isinstance(k, str) and type(v) is int for k, v in d.items())
+
+
+def _is_count_map(d: Any) -> bool:
+    """``{replica: count}``: a :func:`_str_int_map` of non-negatives."""
+    return _str_int_map(d) and all(v >= 0 for v in d.values())
+
+
+def _vv_counts(vv: Any, field: str) -> Dict[str, int]:
+    """Extract a count map from a peer-supplied version-vector summary;
+    malformed summaries degrade to {} (send full state) instead of raising —
+    a hostile vv must never crash the responder mid-sync."""
+    if isinstance(vv, dict):
+        m = vv.get(field)
+        if _is_count_map(m):
+            return m
+    return {}
+
+
+def _dec_tags(doc: Any) -> Set[Tuple[str, int]]:
+    """Decode ``[[replica, seq], ...]`` into a tag set, validating shape."""
+    if not isinstance(doc, list):
+        raise ValueError("crdt codec: tag list expected")
+    tags = set()
+    for t in doc:
+        if not (isinstance(t, list) and len(t) == 2
+                and isinstance(t[0], str) and type(t[1]) is int and t[1] > 0):
+            raise ValueError("crdt codec: malformed replica tag")
+        tags.add((t[0], t[1]))
+    return tags
+
+
+def _enc_tags(tags: Iterable[Tuple[str, int]]) -> List[List[Any]]:
+    return [[r, n] for r, n in sorted(tags)]
+
+
+# ---------------------------------------------------------------------------
+# CRDT kinds
+# ---------------------------------------------------------------------------
 
 
 class CRDT:
-    """Interface: value(), merge(other) -> changed(bool), copy()."""
+    """Interface: value(), merge(other) -> changed, vv(), delta_since(vv),
+    to_doc()/from_doc(), copy()."""
+
+    #: optional mutation listener, set by :class:`ReplicatedStore` so local
+    #: writes fire ``watch`` callbacks and the node's delta push plane;
+    #: never serialized (see ``__getstate__``)
+    _listener: Optional[Callable[[], None]] = None
 
     def value(self) -> Any:
         raise NotImplementedError
@@ -28,17 +190,42 @@ class CRDT:
     def merge(self, other: "CRDT") -> bool:
         raise NotImplementedError
 
+    def vv(self) -> Dict[str, Any]:
+        """Compact causal summary of this replica's state (JSON-able)."""
+        raise NotImplementedError
+
+    def delta_since(self, vv: Any) -> Optional["CRDT"]:
+        """Minimal fragment a replica summarized by ``vv`` is missing, or
+        ``None`` when it has seen everything.  ``vv=None`` (or malformed)
+        means "knows nothing" — the fragment is then the full state."""
+        raise NotImplementedError
+
+    def to_doc(self) -> Dict[str, Any]:
+        """Canonical JSON document for this state (one schema per kind)."""
+        raise NotImplementedError
+
     def copy(self) -> "CRDT":
         import copy as _copy
 
         return _copy.deepcopy(self)
+
+    # -- plumbing -----------------------------------------------------------
+    def _notify(self) -> None:
+        if self._listener is not None:
+            self._listener()
+
+    def __getstate__(self) -> Dict[str, Any]:
+        state = dict(self.__dict__)
+        state.pop("_listener", None)
+        return state
 
 
 # ---------------------------------------------------------------- counters
 
 
 class GCounter(CRDT):
-    """Grow-only counter: per-replica max."""
+    """Grow-only counter: per-replica max.  The counts map doubles as the
+    version vector, and deltas are cumulative — safe to merge anywhere."""
 
     def __init__(self) -> None:
         self.counts: Dict[str, int] = {}
@@ -46,7 +233,12 @@ class GCounter(CRDT):
     def increment(self, replica: str, n: int = 1) -> None:
         if n < 0:
             raise ValueError("GCounter cannot decrease")
-        self.counts[replica] = self.counts.get(replica, 0) + n
+        if n > 0:
+            # never materialize a zero entry: merge can't propagate it
+            # (0 > 0 is false), so it would exist on this replica only and
+            # desynchronize digests between replicas of equal value forever
+            self.counts[replica] = self.counts.get(replica, 0) + n
+        self._notify()
 
     def value(self) -> int:
         return sum(self.counts.values())
@@ -59,9 +251,38 @@ class GCounter(CRDT):
                 changed = True
         return changed
 
+    def vv(self) -> Dict[str, Any]:
+        return {"c": dict(self.counts)}
+
+    def delta_since(self, vv: Any) -> Optional["GCounter"]:
+        seen = _vv_counts(vv, "c")
+        news = {r: c for r, c in self.counts.items() if c > seen.get(r, 0)}
+        if not news:
+            return None
+        d = GCounter()
+        d.counts = news
+        return d
+
+    def to_doc(self) -> Dict[str, Any]:
+        # zero entries (legacy unpickled state) are stripped: they carry no
+        # information and never propagate through merge
+        return {"k": "g", "c": {r: c for r, c in self.counts.items() if c}}
+
+    @classmethod
+    def from_doc(cls, doc: Dict[str, Any]) -> "GCounter":
+        if not _is_count_map(doc.get("c")):
+            raise ValueError("gcounter doc: bad counts map")
+        c = cls()
+        c.counts = {r: n for r, n in doc["c"].items() if n}
+        return c
+
 
 class PNCounter(CRDT):
-    """Increment/decrement counter as a pair of GCounters."""
+    """Increment/decrement counter as a pair of GCounters.
+
+    The causal summary is the per-replica *sum* p+n: both halves grow
+    monotonically at their owner, so observed (p, n) snapshots of one
+    replica form a chain totally ordered by their sum."""
 
     def __init__(self) -> None:
         self.p = GCounter()
@@ -69,9 +290,11 @@ class PNCounter(CRDT):
 
     def increment(self, replica: str, n: int = 1) -> None:
         self.p.increment(replica, n)
+        self._notify()
 
     def decrement(self, replica: str, n: int = 1) -> None:
         self.n.increment(replica, n)
+        self._notify()
 
     def value(self) -> int:
         return self.p.value() - self.n.value()
@@ -81,35 +304,125 @@ class PNCounter(CRDT):
         b = self.n.merge(other.n)
         return a or b
 
+    def vv(self) -> Dict[str, Any]:
+        tot = {}
+        for r in set(self.p.counts) | set(self.n.counts):
+            tot[r] = self.p.counts.get(r, 0) + self.n.counts.get(r, 0)
+        return {"c": tot}
+
+    def delta_since(self, vv: Any) -> Optional["PNCounter"]:
+        seen = _vv_counts(vv, "c")
+        d = PNCounter()
+        stale = True
+        for r in set(self.p.counts) | set(self.n.counts):
+            tot = self.p.counts.get(r, 0) + self.n.counts.get(r, 0)
+            if tot > seen.get(r, 0):
+                stale = False
+                if r in self.p.counts:
+                    d.p.counts[r] = self.p.counts[r]
+                if r in self.n.counts:
+                    d.n.counts[r] = self.n.counts[r]
+        return None if stale else d
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {"k": "pn",
+                "p": {r: c for r, c in self.p.counts.items() if c},
+                "n": {r: c for r, c in self.n.counts.items() if c}}
+
+    @classmethod
+    def from_doc(cls, doc: Dict[str, Any]) -> "PNCounter":
+        if not (_is_count_map(doc.get("p")) and _is_count_map(doc.get("n"))):
+            raise ValueError("pncounter doc: bad counts maps")
+        c = cls()
+        c.p.counts = {r: n for r, n in doc["p"].items() if n}
+        c.n.counts = {r: n for r, n in doc["n"].items() if n}
+        return c
+
 
 # ---------------------------------------------------------------- registers
 
 
 class LWWRegister(CRDT):
-    """Last-writer-wins register; ties broken by replica id (total order)."""
+    """Last-writer-wins register; ties broken by replica id (total order).
+
+    Carries a per-replica write counter so ``delta_since`` can tell whether
+    a peer has seen our latest write.  Deltas ship the full (tiny) state —
+    a register fragment always justifies the clock it carries, so it is
+    safe to merge at any replica."""
 
     def __init__(self) -> None:
         self.ts: Tuple[float, str] = (-1.0, "")
         self._value: Any = None
+        self.clock: Dict[str, int] = {}
 
     def set(self, value: Any, timestamp: float, replica: str) -> None:
-        if (timestamp, replica) > self.ts:
-            self.ts = (timestamp, replica)
+        self.clock[replica] = self.clock.get(replica, 0) + 1
+        # float() keeps the canonical encoding stable: an int timestamp
+        # would re-encode differently after a wire roundtrip
+        if (float(timestamp), replica) > self.ts:
+            self.ts = (float(timestamp), replica)
             self._value = value
+        self._notify()
 
     def value(self) -> Any:
         return self._value
 
     def merge(self, other: "LWWRegister") -> bool:
+        changed = False
         if other.ts > self.ts:
             self.ts = other.ts
             self._value = other._value
-            return True
-        return False
+            changed = True
+        for r, c in getattr(other, "clock", {}).items():
+            if c > self.clock.get(r, 0):
+                self.clock[r] = c
+        return changed
+
+    def vv(self) -> Dict[str, Any]:
+        return {"c": dict(self.clock)}
+
+    def delta_since(self, vv: Any) -> Optional["LWWRegister"]:
+        if self.ts == (-1.0, "") and not self.clock:
+            return None                         # virgin register: no state
+        seen = _vv_counts(vv, "c")
+        if self.clock and all(c <= seen.get(r, 0)
+                              for r, c in self.clock.items()):
+            return None
+        return self.copy()
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {"k": "lww", "t": [self.ts[0], self.ts[1]],
+                "v": _enc_val(self._value), "c": dict(self.clock)}
+
+    @classmethod
+    def from_doc(cls, doc: Dict[str, Any]) -> "LWWRegister":
+        ts = doc.get("t")
+        if not (isinstance(ts, list) and len(ts) == 2
+                and type(ts[0]) in (int, float) and isinstance(ts[1], str)
+                and _is_count_map(doc.get("c"))):
+            raise ValueError("lww doc: bad timestamp/clock")
+        r = cls()
+        r.ts = (float(ts[0]), ts[1])
+        r._value = _dec_val(doc.get("v"))
+        r.clock = dict(doc["c"])
+        return r
+
+    def __setstate__(self, state: Dict[str, Any]) -> None:
+        # legacy pickled registers predate the write clock and may carry
+        # an int timestamp; normalize both
+        self.__dict__.update(state)
+        self.__dict__.setdefault("clock", {})
+        ts = self.__dict__.get("ts")
+        if (isinstance(ts, tuple) and len(ts) == 2
+                and isinstance(ts[0], (int, float))
+                and not isinstance(ts[0], bool)):
+            self.ts = (float(ts[0]), ts[1])
 
 
 class MVRegister(CRDT):
-    """Multi-value register with vector-clock causality (keeps siblings)."""
+    """Multi-value register with vector-clock causality (keeps siblings).
+    The vector clock is the causal summary; deltas ship full state (the
+    sibling set is already minimal)."""
 
     def __init__(self) -> None:
         self.versions: Dict[FrozenSet[Tuple[str, int]], Any] = {}
@@ -119,6 +432,7 @@ class MVRegister(CRDT):
         self.clock[replica] = self.clock.get(replica, 0) + 1
         vc = frozenset(self.clock.items())
         self.versions = {vc: value}
+        self._notify()
 
     @staticmethod
     def _dominates(a: FrozenSet[Tuple[str, int]], b: FrozenSet[Tuple[str, int]]) -> bool:
@@ -144,12 +458,49 @@ class MVRegister(CRDT):
             self.clock[r] = max(self.clock.get(r, 0), c)
         return changed
 
+    def vv(self) -> Dict[str, Any]:
+        return {"c": dict(self.clock)}
+
+    def delta_since(self, vv: Any) -> Optional["MVRegister"]:
+        if not self.clock and not self.versions:
+            return None
+        seen = _vv_counts(vv, "c")
+        if self.clock and all(c <= seen.get(r, 0)
+                              for r, c in self.clock.items()):
+            return None
+        return self.copy()
+
+    def to_doc(self) -> Dict[str, Any]:
+        vs = [[_enc_tags(vc), _enc_val(val)]
+              for vc, val in self.versions.items()]
+        vs.sort(key=lambda p: canonical_dumps(p[0]))
+        return {"k": "mv", "vs": vs, "c": dict(self.clock)}
+
+    @classmethod
+    def from_doc(cls, doc: Dict[str, Any]) -> "MVRegister":
+        if not (_is_count_map(doc.get("c")) and isinstance(doc.get("vs"), list)):
+            raise ValueError("mv doc: bad clock/versions")
+        r = cls()
+        for p in doc["vs"]:
+            if not (isinstance(p, list) and len(p) == 2):
+                raise ValueError("mv doc: bad version pair")
+            r.versions[frozenset(_dec_tags(p[0]))] = _dec_val(p[1])
+        r.clock = dict(doc["c"])
+        return r
+
 
 # -------------------------------------------------------------------- sets
 
 
 class ORSet(CRDT):
-    """Observed-remove set: add wins over concurrent remove."""
+    """Observed-remove set: add wins over concurrent remove.
+
+    Delta interface: adds are summarized by a per-replica *contiguous*
+    coverage vector recomputed from the tags actually held (``coverage``),
+    so a fragment merged at a replica that missed earlier fragments can
+    never overstate what it has seen — gaps keep the coverage low and a
+    later sync refills them.  Tombstones are summarized by a digest: any
+    difference ships the (typically tiny) tombstone set whole."""
 
     def __init__(self) -> None:
         self.adds: Dict[Any, Set[Tuple[str, int]]] = {}
@@ -160,10 +511,12 @@ class ORSet(CRDT):
         self._tag_seq[replica] = self._tag_seq.get(replica, 0) + 1
         tag = (replica, self._tag_seq[replica])
         self.adds.setdefault(element, set()).add(tag)
+        self._notify()
 
     def remove(self, element: Any) -> None:
         tags = self.adds.get(element, set())
         self.tombstones |= tags
+        self._notify()
 
     def contains(self, element: Any) -> bool:
         live = self.adds.get(element, set()) - self.tombstones
@@ -186,17 +539,105 @@ class ORSet(CRDT):
             self._tag_seq[r] = max(self._tag_seq.get(r, 0), s)
         return changed
 
+    # -- causal summary -----------------------------------------------------
+    def coverage(self) -> Dict[str, int]:
+        """Per-replica contiguous add-tag prefix actually held.  At a
+        replica that never merged a gapped fragment this equals the tag
+        allocator; after a gap it is truthfully lower, so peers resend."""
+        held: Dict[str, Set[int]] = {}
+        for tags in self.adds.values():
+            for r, n in tags:
+                held.setdefault(r, set()).add(n)
+        cov = {}
+        for r, seqs in held.items():
+            c = 0
+            while c + 1 in seqs:
+                c += 1
+            if c:
+                cov[r] = c
+        return cov
 
-# ----------------------------------------------------------- composed store
+    def _tomb_digest(self) -> str:
+        raw = canonical_dumps(_enc_tags(self.tombstones))
+        return base64.b64encode(
+            hashlib.sha256(raw).digest()[:8]).decode("ascii")
+
+    def vv(self) -> Dict[str, Any]:
+        return {"s": self.coverage(), "t": self._tomb_digest()}
+
+    def delta_since(self, vv: Any) -> Optional["ORSet"]:
+        seen = _vv_counts(vv, "s")
+        tomb_seen = vv.get("t") if isinstance(vv, dict) else None
+        d = ORSet()
+        fresh = False
+        for e, tags in self.adds.items():
+            new = {t for t in tags if t[1] > seen.get(t[0], 0)}
+            if new:
+                d.adds[e] = new
+                fresh = True
+        if self.tombstones and tomb_seen != self._tomb_digest():
+            d.tombstones = set(self.tombstones)
+            fresh = True
+        if not fresh:
+            return None
+        d._tag_seq = dict(self._tag_seq)    # allocator state, not coverage
+        return d
+
+    def to_doc(self) -> Dict[str, Any]:
+        adds = [[_enc_val(e), _enc_tags(tags)]
+                for e, tags in self.adds.items()]
+        adds.sort(key=lambda p: canonical_dumps(p[0]))
+        return {"k": "orset", "a": adds,
+                "t": _enc_tags(self.tombstones), "s": dict(self._tag_seq)}
+
+    @classmethod
+    def from_doc(cls, doc: Dict[str, Any]) -> "ORSet":
+        if not (isinstance(doc.get("a"), list) and _is_count_map(doc.get("s"))):
+            raise ValueError("orset doc: bad adds/seq")
+        s = cls()
+        for p in doc["a"]:
+            if not (isinstance(p, list) and len(p) == 2):
+                raise ValueError("orset doc: bad add pair")
+            elem = _dec_val(p[0])
+            try:
+                hash(elem)
+            except TypeError as e:
+                raise ValueError("orset doc: unhashable element") from e
+            s.adds[elem] = _dec_tags(p[1])
+        s.tombstones = _dec_tags(doc.get("t", []))
+        s._tag_seq = dict(doc["s"])
+        return s
+
+
+# ----------------------------------------------------------- codec dispatch
 
 
 _KINDS = {"g": GCounter, "pn": PNCounter, "lww": LWWRegister,
           "mv": MVRegister, "orset": ORSet}
+_KIND_TAGS = {cls: tag for tag, cls in _KINDS.items()}
 
 
-def _str_int_map(d: Any) -> bool:
-    return isinstance(d, dict) and all(
-        isinstance(k, str) and isinstance(v, int) for k, v in d.items())
+def encode_entry(entry: CRDT) -> Dict[str, Any]:
+    """CRDT -> canonical JSON document (tagged with its kind)."""
+    if type(entry) not in _KIND_TAGS:
+        raise ValueError(f"unknown CRDT kind {type(entry).__name__}")
+    return entry.to_doc()
+
+
+def decode_entry(doc: Any) -> CRDT:
+    """Canonical JSON document -> CRDT; raises ``ValueError`` on anything
+    malformed (documents arrive from arbitrary peers)."""
+    if not isinstance(doc, dict):
+        raise ValueError("crdt doc: object expected")
+    cls = _KINDS.get(doc.get("k"))
+    if cls is None:
+        raise ValueError(f"crdt doc: unknown kind {doc.get('k')!r}")
+    return cls.from_doc(doc)
+
+
+def entry_digest(entry: CRDT) -> bytes:
+    """Stable state fingerprint: sha256 over the canonical encoding."""
+    return hashlib.sha256(canonical_dumps(encode_entry(entry))).digest()
 
 
 def _tag_set(s: Any) -> bool:
@@ -207,13 +648,13 @@ def _tag_set(s: Any) -> bool:
 
 
 def _wire_valid(entry: Any) -> bool:
-    """Deep shape check for a peer-supplied CRDT: the restricted unpickler
-    guarantees the *classes*, but an attacker still controls the instance
-    state, and type-confused internals (a str count, an unsortable clock)
-    would blow up later inside merge()/digest() — after partial mutation.
-    Validate everything merge relies on before any of it is let near local
-    state.  User-level values (register contents, set elements) stay
-    arbitrary primitives; only the CRDT bookkeeping is constrained."""
+    """Deep shape check for a peer-supplied *legacy pickled* CRDT: the
+    restricted unpickler guarantees the classes, but an attacker still
+    controls the instance state, and type-confused internals (a str count,
+    an unsortable clock) would blow up later inside merge()/digest() —
+    after partial mutation.  Validate everything merge relies on before any
+    of it is let near local state.  (The canonical JSON path validates in
+    ``from_doc`` instead.)"""
     try:
         t = type(entry)
         if t is GCounter:
@@ -226,7 +667,8 @@ def _wire_valid(entry: Any) -> bool:
             ts = entry.ts
             return (isinstance(ts, tuple) and len(ts) == 2
                     and isinstance(ts[0], (int, float))
-                    and not isinstance(ts[0], bool) and isinstance(ts[1], str))
+                    and not isinstance(ts[0], bool) and isinstance(ts[1], str)
+                    and _str_int_map(getattr(entry, "clock", {})))
         if t is MVRegister:
             return (_str_int_map(entry.clock)
                     and isinstance(entry.versions, dict)
@@ -242,24 +684,40 @@ def _wire_valid(entry: Any) -> bool:
         return False
 
 
+# ----------------------------------------------------------- composed store
+
+
 class ReplicatedStore(CRDT):
     """A named map of CRDTs — Lattica's decentralized data store.
 
     Used as the model-version registry: an ORSet of published checkpoint
     CIDs, an LWW pointer to the latest manifest, and G-Counters for global
-    step / sample counts.  ``digest()`` gives a cheap state fingerprint for
-    anti-entropy rounds; ``delta_since`` is full-state here (state-based
-    CRDTs tolerate that; gossip batches keep it amortized).
+    step / sample counts.
+
+    Sync surface (the v2 anti-entropy protocol is built on these):
+
+    * ``digest()``          — order-independent full-state fingerprint
+    * ``key_digests()``     — per-key truncated fingerprints (summary round)
+    * ``vv()``              — store-level causal context {key: kind vv}
+    * ``delta_since(vv)``   — {key: fragment} of everything a peer misses
+    * ``apply_delta(...)``  — merge fragments, firing ``watch`` callbacks
+
+    ``watch(prefix, callback)`` subscribes to changes: the callback fires as
+    ``callback(key, value, origin)`` on local mutations (origin="local") and
+    on merged-in remote state (origin="remote").
     """
 
     def __init__(self, replica: str = "") -> None:
         self.replica = replica
         self.entries: Dict[str, CRDT] = {}
+        self._watchers: Dict[int, Tuple[str, Callable[[str, Any, str], None]]] = {}
+        self._watch_seq = 0
+        self._local_hooks: List[Callable[[str], None]] = []
 
     # -- typed accessors ----------------------------------------------------
     def _get(self, key: str, kind: str) -> CRDT:
         if key not in self.entries:
-            self.entries[key] = _KINDS[kind]()
+            self._adopt(key, _KINDS[kind]())
         entry = self.entries[key]
         if not isinstance(entry, _KINDS[kind]):
             raise TypeError(f"{key} is {type(entry).__name__}, wanted {kind}")
@@ -280,19 +738,118 @@ class ReplicatedStore(CRDT):
     def mv(self, key: str) -> MVRegister:
         return self._get(key, "mv")  # type: ignore[return-value]
 
+    def _adopt(self, key: str, entry: CRDT) -> CRDT:
+        """Install ``entry`` under ``key`` wired to the watch plane."""
+        self.entries[key] = entry
+        entry._listener = lambda k=key: self._on_local_mutation(k)
+        return entry
+
+    # -- watch plane ---------------------------------------------------------
+    def watch(self, prefix: str,
+              callback: Callable[[str, Any, str], None]) -> int:
+        """Subscribe ``callback(key, value, origin)`` to every change of a
+        key starting with ``prefix`` ("" watches everything).  Fires on
+        local mutations and on merged-in remote state.  Returns a handle
+        for :meth:`unwatch`."""
+        self._watch_seq += 1
+        self._watchers[self._watch_seq] = (prefix, callback)
+        return self._watch_seq
+
+    def unwatch(self, handle: int) -> None:
+        self._watchers.pop(handle, None)
+
+    def on_local_change(self, hook: Callable[[str], None]) -> None:
+        """Register a store-wide local-mutation hook (the node's delta push
+        plane); called with the mutated key before watch callbacks."""
+        self._local_hooks.append(hook)
+
+    def _on_local_mutation(self, key: str) -> None:
+        for hook in list(self._local_hooks):
+            hook(key)
+        self._fire(key, "local")
+
+    def _fire(self, key: str, origin: str) -> None:
+        entry = self.entries.get(key)
+        if entry is None:       # defensive: watcher raced an adoption
+            return
+        for prefix, cb in list(self._watchers.values()):
+            if key.startswith(prefix):
+                cb(key, entry.value(), origin)
+
     # -- CRDT interface ------------------------------------------------------
     def value(self) -> Dict[str, Any]:
         return {k: v.value() for k, v in self.entries.items()}
 
     def merge(self, other: "ReplicatedStore") -> bool:
-        changed = False
+        changed_keys = []
         for k, v in other.entries.items():
             if k in self.entries:
                 if self.entries[k].merge(v):  # type: ignore[arg-type]
-                    changed = True
+                    changed_keys.append(k)
             else:
-                self.entries[k] = v.copy()
-                changed = True
+                self._adopt(k, v.copy())
+                changed_keys.append(k)
+        for k in changed_keys:
+            self._fire(k, "remote")
+        return bool(changed_keys)
+
+    # -- causal context / deltas ----------------------------------------------
+    def vv(self) -> Dict[str, Any]:
+        """Store-level causal context: {key: kind-specific version vector}."""
+        return {k: e.vv() for k, e in self.entries.items()}
+
+    def entry_vv(self, key: str) -> Optional[Dict[str, Any]]:
+        entry = self.entries.get(key)
+        return None if entry is None else entry.vv()
+
+    def key_digests(self) -> Dict[str, str]:
+        """Per-key truncated state fingerprints (the v2 summary round)."""
+        return {k: base64.b64encode(entry_digest(e)[:8]).decode("ascii")
+                for k, e in self.entries.items()}
+
+    def delta_since(self, vv_map: Any,
+                    keys: Optional[Iterable[str]] = None) -> Dict[str, CRDT]:
+        """Per-key fragments a replica summarized by ``vv_map`` is missing.
+        ``vv_map`` maps key -> kind vv (or None = key unknown there); keys
+        absent from the map count as unknown.  With ``keys``, only those
+        are considered (the per-key protocol round)."""
+        if not isinstance(vv_map, dict):
+            vv_map = {}
+        out: Dict[str, CRDT] = {}
+        for k in (keys if keys is not None else self.entries):
+            entry = self.entries.get(k)
+            if entry is None:
+                continue
+            d = entry.delta_since(vv_map.get(k))
+            if d is not None:
+                out[k] = d
+        return out
+
+    def apply_delta(self, deltas: Dict[str, CRDT],
+                    origin: str = "remote") -> List[str]:
+        """Merge per-key fragments; returns the keys that changed (watch
+        callbacks fire for each).  Raises ``ValueError`` on a kind conflict
+        with local state — and validates the *whole* document before
+        merging any of it, so a poisoned fragment can never land part of a
+        delta without its watch callbacks firing."""
+        for k, frag in deltas.items():
+            if not isinstance(k, str) or not isinstance(frag, CRDT):
+                raise ValueError("delta: malformed fragment map")
+            cur = self.entries.get(k)
+            if cur is not None and type(cur) is not type(frag):
+                raise ValueError(
+                    f"delta kind conflict for {k!r}: "
+                    f"{type(cur).__name__} vs {type(frag).__name__}")
+        changed = []
+        for k, frag in deltas.items():
+            cur = self.entries.get(k)
+            if cur is None:
+                self._adopt(k, frag.copy())
+                changed.append(k)
+            elif cur.merge(frag):  # type: ignore[arg-type]
+                changed.append(k)
+        for k in changed:
+            self._fire(k, origin)
         return changed
 
     # -- sync helpers ----------------------------------------------------------
@@ -301,30 +858,21 @@ class ReplicatedStore(CRDT):
         h = hashlib.sha256()
         for k in sorted(self.entries):
             h.update(k.encode())
-            h.update(hashlib.sha256(self._canonical(self.entries[k])).digest())
+            h.update(entry_digest(self.entries[k]))
         return h.digest()
 
     @staticmethod
     def _canonical(entry: CRDT) -> bytes:
-        if isinstance(entry, GCounter):
-            state: Any = sorted(entry.counts.items())
-        elif isinstance(entry, PNCounter):
-            state = (sorted(entry.p.counts.items()), sorted(entry.n.counts.items()))
-        elif isinstance(entry, LWWRegister):
-            state = (entry.ts, entry._value)
-        elif isinstance(entry, ORSet):
-            state = (sorted((repr(e), tuple(sorted(t))) for e, t in entry.adds.items()),
-                     tuple(sorted(entry.tombstones)))
-        elif isinstance(entry, MVRegister):
-            state = sorted((tuple(sorted(vc)), repr(v)) for vc, v in entry.versions.items())
-        else:  # pragma: no cover
-            state = entry
-        return pickle.dumps(state)
+        """Canonical bytes of one entry's state (codec-based; stable across
+        Python and pickle-protocol versions, unlike the old pickle.dumps)."""
+        return canonical_dumps(encode_entry(entry))
 
-    #: globals anti-entropy state may resolve: the CRDT classes themselves
-    #: plus set/frozenset (which pickle routes through find_class).  The
-    #: payload arrives from arbitrary peers, so everything else is refused —
-    #: an open pickle.loads here would hand the sender code execution.
+    # -- wire format -----------------------------------------------------------
+    #: globals legacy anti-entropy state may resolve: the CRDT classes
+    #: themselves plus set/frozenset (which pickle routes through
+    #: find_class).  The payload arrives from arbitrary peers, so everything
+    #: else is refused — an open pickle.loads here would hand the sender
+    #: code execution.
     _WIRE_ALLOWED = frozenset({
         ("repro.core.crdt", "GCounter"),
         ("repro.core.crdt", "PNCounter"),
@@ -336,12 +884,42 @@ class ReplicatedStore(CRDT):
     })
 
     def serialize(self) -> bytes:
-        return pickle.dumps(self.entries)
+        """Canonical versioned snapshot (v2 JSON wire format)."""
+        doc = {"v": WIRE_VERSION,
+               "entries": {k: encode_entry(e) for k, e in self.entries.items()}}
+        return WIRE_MAGIC + canonical_dumps(doc)
+
+    @staticmethod
+    def encode_delta(deltas: Dict[str, CRDT]) -> bytes:
+        """Per-key fragments -> canonical versioned delta document."""
+        doc = {"v": WIRE_VERSION,
+               "d": {k: encode_entry(e) for k, e in deltas.items()}}
+        return WIRE_MAGIC + canonical_dumps(doc)
+
+    @staticmethod
+    def decode_delta(raw: bytes) -> Dict[str, CRDT]:
+        """Decode + validate a peer-supplied delta document."""
+        doc = _load_wire_doc(raw)
+        d = doc.get("d")
+        if not isinstance(d, dict):
+            raise ValueError("delta doc: missing fragment map")
+        return {_chk_key(k): decode_entry(v) for k, v in d.items()}
 
     @classmethod
     def deserialize(cls, data: bytes, replica: str = "") -> "ReplicatedStore":
-        """Decode peer-supplied state; raises ``ValueError`` on payloads that
-        are malformed or carry anything beyond CRDTs and primitives."""
+        """Decode peer-supplied state; raises ``ValueError`` on payloads
+        that are malformed or carry anything beyond CRDTs and primitives.
+        Accepts both the canonical v2 JSON format and legacy pickled v1
+        state (restricted unpickling, CRDT classes only)."""
+        if data[:len(WIRE_MAGIC)] == WIRE_MAGIC:
+            doc = _load_wire_doc(data)
+            raw_entries = doc.get("entries")
+            if not isinstance(raw_entries, dict):
+                raise ValueError("CRDT state must be a {name: doc} map")
+            store = cls(replica)
+            for k, d in raw_entries.items():
+                store._adopt(_chk_key(k), decode_entry(d))
+            return store
         from .safepickle import restricted_loads
 
         entries = restricted_loads(data, cls._WIRE_ALLOWED)
@@ -351,5 +929,82 @@ class ReplicatedStore(CRDT):
             if not isinstance(k, str) or not _wire_valid(v):
                 raise ValueError(f"malformed CRDT state for entry {k!r}")
         store = cls(replica)
-        store.entries = entries
+        for k, v in entries.items():
+            store._adopt(k, v)
         return store
+
+
+def _chk_key(k: Any) -> str:
+    if not isinstance(k, str) or not k:
+        raise ValueError("crdt doc: entry keys must be non-empty strings")
+    return k
+
+
+def _load_wire_doc(raw: bytes) -> Dict[str, Any]:
+    """Parse + version-check a ``CRD2``-magic wire document."""
+    if raw[:len(WIRE_MAGIC)] != WIRE_MAGIC:
+        raise ValueError("crdt wire: bad magic")
+    try:
+        doc = json.loads(raw[len(WIRE_MAGIC):].decode("utf-8"))
+    except Exception as e:  # noqa: BLE001 — undecodable peer payload
+        raise ValueError(f"crdt wire: undecodable JSON: {e}") from e
+    if not isinstance(doc, dict) or doc.get("v") != WIRE_VERSION:
+        raise ValueError("crdt wire: unsupported document version")
+    return doc
+
+
+# ----------------------------------------------------------- summary wire
+
+
+def encode_summary(digests: Dict[str, str]) -> bytes:
+    """Per-key digest map -> summary request document."""
+    return WIRE_MAGIC + canonical_dumps({"v": WIRE_VERSION, "kd": digests})
+
+
+def decode_summary(raw: bytes) -> Dict[str, str]:
+    doc = _load_wire_doc(raw)
+    kd = doc.get("kd")
+    if not (isinstance(kd, dict) and all(
+            isinstance(k, str) and isinstance(v, str) for k, v in kd.items())):
+        raise ValueError("summary doc: bad digest map")
+    return kd
+
+
+def encode_vv_map(vv_map: Dict[str, Optional[Dict[str, Any]]]) -> bytes:
+    """{key: kind vv or None} -> summary response document."""
+    return WIRE_MAGIC + canonical_dumps({"v": WIRE_VERSION, "vv": vv_map})
+
+
+def decode_vv_map(raw: bytes) -> Dict[str, Optional[Dict[str, Any]]]:
+    doc = _load_wire_doc(raw)
+    vv = doc.get("vv")
+    if not (isinstance(vv, dict) and all(
+            isinstance(k, str) and (v is None or isinstance(v, dict))
+            for k, v in vv.items())):
+        raise ValueError("vv doc: bad version-vector map")
+    return vv
+
+
+def encode_delta_request(vv_map: Dict[str, Optional[Dict[str, Any]]],
+                         deltas: Dict[str, CRDT]) -> bytes:
+    """The delta round's request: the caller's per-key vv for the keys it
+    wants updates on, plus its own fragments for the responder."""
+    doc = {"v": WIRE_VERSION, "vv": vv_map,
+           "d": {k: encode_entry(e) for k, e in deltas.items()}}
+    return WIRE_MAGIC + canonical_dumps(doc)
+
+
+def decode_delta_request(raw: bytes) -> Tuple[
+        Dict[str, Optional[Dict[str, Any]]], Dict[str, CRDT]]:
+    doc = _load_wire_doc(raw)
+    vv = doc.get("vv")
+    d = doc.get("d")
+    if not (isinstance(vv, dict) and isinstance(d, dict)):
+        raise ValueError("delta request: bad vv/fragment maps")
+    vv_map = {}
+    for k, v in vv.items():
+        if not isinstance(k, str) or not (v is None or isinstance(v, dict)):
+            raise ValueError("delta request: bad vv entry")
+        vv_map[k] = v
+    deltas = {_chk_key(k): decode_entry(v) for k, v in d.items()}
+    return vv_map, deltas

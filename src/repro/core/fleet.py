@@ -69,6 +69,42 @@ class Fleet:
 NatSpec = Union[None, NATKind, Tuple[NATKind, Union[PortAlloc, str], int]]
 
 
+def wait_converged(sim: Sim, nodes_or_stores: Sequence[object],
+                   timeout: float = 120.0) -> bool:
+    """Run the sim until every replica's store digest agrees (or timeout).
+
+    Built on the CRDT watch API: a change at *any* replica re-checks
+    convergence immediately, so tests and examples no longer guess how many
+    anti-entropy rounds to sleep through (the old registry-convergence
+    flakiness).  Accepts ``LatticaNode``s or bare ``ReplicatedStore``s;
+    background processes (gossip, fetch loops) keep running while this
+    pumps the event loop.  Returns True once all digests are equal."""
+    stores = [getattr(s, "store", s) for s in nodes_or_stores]
+
+    def waiter() -> Generator:
+        deadline = sim.now + timeout
+        wake = [sim.event()]
+
+        def ping(_key: object, _value: object, _origin: str) -> None:
+            if not wake[0].triggered:
+                wake[0].succeed()
+
+        handles = [(s, s.watch("", ping)) for s in stores]
+        try:
+            while True:
+                if len({s.digest() for s in stores}) == 1:
+                    return True
+                if sim.now >= deadline:
+                    return False
+                yield sim.any_of([wake[0], sim.timeout(deadline - sim.now)])
+                wake[0] = sim.event()
+        finally:
+            for s, h in handles:
+                s.unwatch(h)
+
+    return sim.run_process(waiter(), until=sim.now + timeout + 1.0)
+
+
 def make_nat(net: Network, spec: NatSpec) -> Optional[NATBox]:
     """Materialize a :data:`NatSpec` into a NAT box (or None for public)."""
     if spec is None:

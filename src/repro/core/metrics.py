@@ -47,6 +47,7 @@ def node_snapshot(node: "LatticaNode") -> Dict[str, Any]:
                           ("rpc", node.router.stats),
                           ("dht", node.dht.stats),
                           ("pubsub", node.pubsub.stats),
+                          ("crdt", node.crdt_stats),
                           ("store", node.blockstore.stats),
                           ("bitswap", node.bitswap.stats)):
         for k, v in stats.items():

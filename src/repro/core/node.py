@@ -17,15 +17,17 @@ from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
 from .bitswap import Bitswap
 from .blockstore import BlockStore
 from .cid import CID, ChunkSpec, build_dag, build_tree_dag
-from .crdt import ReplicatedStore
+from .crdt import (ReplicatedStore, decode_delta_request, decode_summary,
+                   decode_vv_map, encode_delta_request, encode_summary,
+                   encode_vv_map)
 from .dht import KademliaDHT, PeerInfo
 from .peer import Multiaddr, PeerId
 from .pubsub import PubSub
 from .rendezvous import RendezvousServer
 from .rpc import RpcContext, RpcError, RpcRouter
 from .service import (ByteLength, ClientInterceptor, Fixed, PEER_INFO,
-                      RpcMetrics, Service, ServerInterceptor, Stub,
-                      serve_service, unary)
+                      RpcMetrics, RpcStatus, Service, ServerInterceptor,
+                      ServiceError, Stub, serve_service, unary)
 from .simnet import Connection, DialError, Host, Network, Sim
 from .traversal import MAIN_PORT, Transport
 
@@ -56,8 +58,9 @@ class IdentityService(Service):
 
 
 class CrdtSyncService(Service):
-    """Anti-entropy pair: digest probe, then full state exchange+merge.
-    Both methods are idempotent — CRDT merge is, by definition."""
+    """v1 anti-entropy pair: digest probe, then full state exchange+merge.
+    Both methods are idempotent — CRDT merge is, by definition.  Kept as
+    the complete v1 surface so legacy peers are still served."""
 
     name = "crdt"
 
@@ -79,12 +82,59 @@ class CrdtSyncService(Service):
         return self.node.store.serialize()
 
 
+class CrdtSyncV2Service(CrdtSyncService):
+    """v2 anti-entropy: summary exchange, then per-key delta transfer.
+
+    ``summary`` takes the caller's per-key digest map and answers with our
+    version vectors for exactly the keys that differ (or that one side is
+    missing); ``delta`` then moves minimal per-key fragments both ways in a
+    single RPC — the caller's fragments ride in the request, ours in the
+    response.  Bytes moved are O(changed-state); the v1 methods remain
+    served for peers that never learned the v2 surface."""
+
+    @unary("crdt.summary", request=ByteLength(), response=ByteLength(),
+           idempotent=True, timeout=30.0)
+    def summary(self, payload: Any, ctx: RpcContext) -> Generator:
+        theirs = decode_summary(payload)
+        yield ctx.cpu(20e-6)
+        store = self.node.store
+        mine = store.key_digests()
+        diff: Dict[str, Any] = {}
+        for key, dg in theirs.items():
+            if mine.get(key) != dg:
+                diff[key] = store.entry_vv(key)
+        for key in mine:
+            if key not in theirs:
+                diff[key] = store.entry_vv(key)
+        return encode_vv_map(diff)
+
+    @unary("crdt.delta", request=ByteLength(), response=ByteLength(),
+           idempotent=True, timeout=60.0)
+    def delta(self, payload: Any, ctx: RpcContext) -> Generator:
+        vv_map, their_deltas = decode_delta_request(payload)
+        yield ctx.cpu(30e-6)
+        store = self.node.store
+        if their_deltas and store.apply_delta(their_deltas):
+            self.node._schedule_crdt_push()     # rumor-monger fresh state
+        mine = store.delta_since(vv_map, keys=vv_map.keys())
+        return ReplicatedStore.encode_delta(mine)
+
+
+def crdt_ns(key: str) -> str:
+    """Namespace of a store key: its first path segment (``ckpt/f`` →
+    ``ckpt``).  Delta pushes are published per-namespace on
+    ``crdt/<ns>`` pubsub topics."""
+    return key.split("/", 1)[0]
+
+
 class LatticaNode:
     def __init__(self, net: Network, name: str, region: str = "us",
                  zone: str = "a", nat: Optional[Any] = None, cores: int = 4,
                  serve_rendezvous: bool = False,
                  machine: Optional[str] = None,
-                 store_budget: Optional[int] = None):
+                 store_budget: Optional[int] = None,
+                 crdt_proto: str = "v2",
+                 crdt_push: bool = True):
         self.net = net
         self.sim: Sim = net.sim
         self.host: Host = net.host(name, region=region, zone=zone, nat=nat,
@@ -99,8 +149,30 @@ class LatticaNode:
         self.store = ReplicatedStore(replica=name)
         self.peers: Dict[PeerId, PeerInfo] = {}
         self.infos_by_host: Dict[str, PeerInfo] = {}
+        if crdt_proto not in ("v1", "v2"):
+            raise ValueError(f"unknown crdt_proto {crdt_proto!r}")
+        #: "v2" syncs via summary + per-key deltas (falling back per peer);
+        #: "v1" forces the legacy digest→full-swap protocol and serves only
+        #: the v1 wire surface (used to exercise mixed-version fleets)
+        self.crdt_proto = crdt_proto
+        #: eager convergence: local mutations publish deltas on crdt/<ns>
+        #: pubsub topics so connected subscribers converge in one gossip
+        #: round instead of waiting for an anti-entropy tick
+        self.crdt_push = crdt_push and crdt_proto == "v2"
+        self.crdt_stats = {"rounds": 0, "delta_exchanges": 0,
+                           "full_exchanges": 0, "tx_bytes": 0, "rx_bytes": 0,
+                           "push_published": 0, "push_bytes": 0,
+                           "push_applied": 0, "push_rejected": 0}
+        self._crdt_peer_proto: Dict[PeerId, str] = {}
+        self._push_vv: Dict[str, Any] = {}       # store.vv() at last push
+        self._push_pending = False
+        self._crdt_topics: set = set()
         self.identity = self.serve(IdentityService(self))
-        self.crdt_sync = self.serve(CrdtSyncService(self))
+        self.crdt_sync = self.serve(
+            CrdtSyncV2Service(self) if crdt_proto == "v2"
+            else CrdtSyncService(self))
+        if self.crdt_push:
+            self.store.on_local_change(self._on_crdt_mutation)
         self.dht = KademliaDHT(self)
         self.pubsub = PubSub(self)
         self.bitswap = Bitswap(self)
@@ -346,15 +418,142 @@ class LatticaNode:
 
     # ------------------------------------------------------------------ CRDT
     def sync_crdt_with(self, info: PeerInfo) -> Generator:
-        """One anti-entropy round with one peer; returns True if state moved."""
-        stub = self.stub(CrdtSyncService, info)
+        """One anti-entropy round with one peer; returns True if state moved.
+
+        v2 (default): digest probe → per-key digest summary → per-key delta
+        transfer, so bytes moved are O(changed-state).  Peers that do not
+        serve the v2 methods (``NOT_FOUND``) are remembered and get the v1
+        full-state exchange; a v1-configured node always speaks v1."""
+        stats = self.crdt_stats
+        stub = self.stub(CrdtSyncV2Service, info)
         theirs = yield from stub.digest()
+        stats["rounds"] += 1
         if theirs == self.store.digest():
             return False
+        if (self.crdt_proto == "v2"
+                and self._crdt_peer_proto.get(info.peer_id) != "v1"):
+            try:
+                moved = yield from self._sync_crdt_v2(stub)
+                stats["delta_exchanges"] += 1
+                return moved
+            except ServiceError as e:
+                if e.status is not RpcStatus.NOT_FOUND:
+                    raise
+                # peer only serves the v1 surface; remember and fall back
+                self._crdt_peer_proto[info.peer_id] = "v1"
+        stats["full_exchanges"] += 1
         mine = self.store.serialize()
         resp = yield from stub.exchange(mine)
-        self.store.merge(ReplicatedStore.deserialize(resp))
+        stats["tx_bytes"] += len(mine)
+        stats["rx_bytes"] += len(resp)
+        if self.store.merge(ReplicatedStore.deserialize(resp)):
+            # rumor-monger state learned via anti-entropy: a peer the flood
+            # could not reach re-publishes once it catches up, so the last
+            # stragglers converge epidemically instead of pairwise-randomly
+            self._schedule_crdt_push()
         return True
+
+    def _sync_crdt_v2(self, stub: Stub) -> Generator:
+        """Summary + delta rounds of the v2 protocol (digest already
+        differed).  Returns True if any state moved in either direction."""
+        stats = self.crdt_stats
+        summary = encode_summary(self.store.key_digests())
+        resp = yield from stub.summary(summary)
+        stats["tx_bytes"] += len(summary)
+        stats["rx_bytes"] += len(resp)
+        diff = decode_vv_map(resp)
+        if not diff:
+            return False
+        # their vv per differing key -> what we have that they lack; our vv
+        # rides along so the response carries what they have that we lack
+        push = self.store.delta_since(diff, keys=diff.keys())
+        my_vv = {k: self.store.entry_vv(k) for k in diff}
+        req = encode_delta_request(my_vv, push)
+        dresp = yield from stub.delta(req)
+        stats["tx_bytes"] += len(req)
+        stats["rx_bytes"] += len(dresp)
+        their_deltas = ReplicatedStore.decode_delta(dresp)
+        changed = self.store.apply_delta(their_deltas) if their_deltas else []
+        if changed:
+            self._schedule_crdt_push()      # rumor-monger what we learned
+        return bool(changed) or bool(push)
+
+    # ------------------------------------------------------- CRDT delta push
+    def watch_crdt(self, prefix: str, callback: Any) -> int:
+        """Watch store keys under ``prefix`` *and* join the namespace's
+        delta-push topic: ``callback(key, value, origin)`` fires on local
+        mutations, merged-in anti-entropy state, and pushed deltas arriving
+        via pubsub — i.e. one gossip round after a remote write, no
+        anti-entropy tick required.  Returns the store watch handle.
+
+        ``prefix`` must name a full namespace (its first path segment is
+        the ``crdt/<ns>`` topic pushes are published on); an empty prefix
+        would silently subscribe to a topic nothing publishes — watch
+        everything with ``store.watch("")`` plus ``join_crdt_push`` per
+        namespace instead."""
+        if not prefix:
+            raise ValueError(
+                "watch_crdt needs a namespaced prefix; use store.watch('') "
+                "+ join_crdt_push(ns) to watch everything")
+        self.join_crdt_push(crdt_ns(prefix))
+        return self.store.watch(prefix, callback)
+
+    def join_crdt_push(self, ns: str) -> None:
+        """Subscribe to ``crdt/<ns>`` delta pushes (idempotent)."""
+        topic = f"crdt/{ns}"
+        if topic in self._crdt_topics:
+            return
+        self._crdt_topics.add(topic)
+        self.pubsub.subscribe(topic, self._on_crdt_push_msg)
+
+    def _on_crdt_push_msg(self, topic: str, data: Any, frm: PeerId) -> None:
+        try:
+            deltas = ReplicatedStore.decode_delta(data)
+            changed = self.store.apply_delta(deltas)
+        except (ValueError, TypeError):
+            self.crdt_stats["push_rejected"] += 1
+            return
+        if changed:
+            self.crdt_stats["push_applied"] += 1
+
+    def _on_crdt_mutation(self, key: str) -> None:
+        """Store local-mutation hook: debounce-schedule one push process so
+        a burst of same-instant writes ships as a single delta batch."""
+        self._schedule_crdt_push()
+
+    def _schedule_crdt_push(self) -> None:
+        if not self.crdt_push or self._push_pending:
+            return
+        self._push_pending = True
+        self.sim.process(self._crdt_push_once())
+
+    def _crdt_push_once(self) -> Generator:
+        yield 0.0           # let the mutating call finish its write batch
+        self._push_pending = False
+        yield from self.crdt_push_flush()
+        return None
+
+    def crdt_push_flush(self) -> Generator:
+        """Publish per-namespace delta documents for everything mutated
+        since the last push on the ``crdt/<ns>`` topics; connected
+        subscribers converge in one gossip round.  Returns the number of
+        topics published (0 when clean or push is disabled)."""
+        if not self.crdt_push:
+            return 0
+        deltas = self.store.delta_since(self._push_vv)
+        if not deltas:
+            return 0
+        self._push_vv = self.store.vv()
+        by_ns: Dict[str, Dict[str, Any]] = {}
+        for k, frag in deltas.items():
+            by_ns.setdefault(crdt_ns(k), {})[k] = frag
+        for ns in sorted(by_ns):
+            blob = ReplicatedStore.encode_delta(by_ns[ns])
+            self.crdt_stats["push_published"] += 1
+            self.crdt_stats["push_bytes"] += len(blob)
+            yield from self.pubsub.publish(f"crdt/{ns}", blob,
+                                           size=max(len(blob), 64))
+        return len(by_ns)
 
     def maintenance_loop(self, interval: float = 10.0) -> Generator:
         """Background upkeep of relay reservations.  Reservations are TTL'd

@@ -77,17 +77,35 @@ class PubSub:
 
     # -- subscription management ---------------------------------------------
     def subscribe(self, topic: str, callback: Callable[[str, Any, PeerId], None]) -> None:
+        is_new = topic not in self.subscriptions
         self.subscriptions.setdefault(topic, []).append(callback)
+        if is_new:
+            self._push_subscription_update()
+
+    def _push_subscription_update(self) -> None:
+        """Proactively push our topic set to every peer we know.
+        Subscription state is otherwise exchanged only at announce time
+        (bootstrap / explicit ``announce_subscriptions``), so a
+        subscription made *after* joining would stay invisible to the mesh
+        and the fresh subscriber would miss the next publish.  The update
+        is one tiny idempotent unary per peer, over reused connections."""
+        node = self.node
+        for pid in list(node.peers):
+            node.sim.process(self.announce_subscriptions(pid))
 
     def announce_subscriptions(self, peer: "PeerId") -> Generator:
-        """Tell one peer which topics we care about (piggybacks on connect)."""
+        """Tell one peer which topics we care about (piggybacks on connect);
+        the response carries the peer's topics, so both sides learn."""
         info = self.node.peers.get(peer)
         if info is None:
             return None
         try:
             stub = self.node.stub(PubSubService, info)
-            yield from stub.sub((self.node.peer_id,
-                                 sorted(self.subscriptions)))
+            theirs = yield from stub.sub((self.node.peer_id,
+                                          sorted(self.subscriptions)))
+            if isinstance(theirs, list):
+                self.peer_topics[peer] = {
+                    t for t in theirs if isinstance(t, str)}
         except (DialError, RpcError):
             pass
         return None
@@ -115,12 +133,21 @@ class PubSub:
         unknown = [p for p in self.node.peers
                    if p not in self.peer_topics and p not in exclude
                    and p != self.node.peer_id]
-        # prefer peers known to subscribe; pad with unknowns up to mesh degree
+        # prefer peers known to subscribe, then unknowns, then peers whose
+        # recorded topic set lacks the topic: that knowledge may be stale
+        # (sets are exchanged, not streamed), and relays like the bootstrap
+        # servers know the *actual* subscribers — dropping them from the
+        # flood used to strand messages whose only eager targets were
+        # undialable
+        others = [p for p in self.node.peers
+                  if p not in exclude and p != self.node.peer_id
+                  and p in self.peer_topics and topic not in self.peer_topics[p]]
         chosen = interested[:MESH_DEGREE]
-        for p in unknown:
-            if len(chosen) >= MESH_DEGREE:
-                break
-            chosen.append(p)
+        for pool in (unknown, others):
+            for p in pool:
+                if len(chosen) >= MESH_DEGREE:
+                    break
+                chosen.append(p)
         return chosen
 
     def publish(self, topic: str, data: Any, size: int = 256) -> Generator:

@@ -103,11 +103,17 @@ class LatticaSyncTrainer(Trainer):
                         f"loss={rec['loss']:.4f} root={root}")
         return self.published
 
-    def _gossip_registry(self, fanout: int = 3) -> Generator:
-        """Push the fresh registry entry to a few random peers right after a
-        publish.  Anti-entropy is symmetric, so subscribers' own random
-        sync rounds then converge epidemically instead of depending on
-        someone happening to dial the (possibly NAT'd) trainer directly."""
+    def _gossip_registry(self, fanout: int = 2) -> Generator:
+        """Propagate the fresh registry entry right after a publish.
+
+        Primary path: flush the delta push plane — the mutations from
+        ``publish_checkpoint`` go out as per-key delta documents on the
+        ``crdt/<ns>`` topics, so connected subscribers' ``watch`` callbacks
+        fire within one gossip round.  Fallback: a couple of direct
+        anti-entropy rounds with random peers for anyone the flood missed
+        (NAT'd stragglers, empty meshes) — each of those now moves only
+        per-key deltas, not the whole serialized store."""
+        yield from self.node.crdt_push_flush()
         sim = self.node.sim
         peers = sorted(self.node.peers, key=lambda p: p.digest)
         if not peers:
@@ -123,10 +129,14 @@ class LatticaSyncTrainer(Trainer):
 class ModelSubscriber:
     """Inference-cluster side: follow a fleet's model versions.
 
-    With ``resolve_from`` (the publisher's PeerInfo), each poll also asks
-    that peer's ``CheckpointService`` for the fleet's latest version —
-    convergence no longer waits on CRDT anti-entropy reaching this replica
-    (best-effort: a partition just falls back to local knowledge).
+    Registry freshness is event-driven: the subscriber *watches*
+    ``ckpt/<fleet>`` through the node's CRDT delta push plane, so a
+    publisher's registry write lands here one gossip round after the
+    publish and wakes the follow loop immediately — no anti-entropy
+    lottery.  With ``resolve_from`` (the publisher's PeerInfo), each poll
+    additionally asks that peer's ``CheckpointService`` for the fleet's
+    latest version as a fallback — convergence survives missed floods and
+    partitions (an unreachable peer just falls back to local knowledge).
     """
 
     def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
@@ -141,10 +151,23 @@ class ModelSubscriber:
         self.params: Any = None
         self.fetch_log: List[Dict[str, float]] = []
         self._announced: List[Any] = []
+        self._wake = node.sim.event()
         node.pubsub.subscribe(self.registry.topic, self._on_announce)
+        # pushed registry deltas (and merged-in anti-entropy state) wake
+        # the follow loop the moment the local replica learns of a change
+        node.watch_crdt(f"ckpt/{fleet}", self._on_registry_change)
 
     def _on_announce(self, topic: str, data: Any, frm: Any) -> None:
         self._announced.append(data)
+        self._wakeup()
+
+    def _on_registry_change(self, key: str, value: Any, origin: str) -> None:
+        if origin == "remote":      # our own record_fetched must not self-wake
+            self._wakeup()
+
+    def _wakeup(self) -> None:
+        if not self._wake.triggered:
+            self._wake.succeed()
 
     def _best_known(self) -> Any:
         """Newest version from the CRDT register AND live announcements;
@@ -217,17 +240,22 @@ class ModelSubscriber:
         return step
 
     def follow(self, interval: float = 5.0, until_step: int = 10**9) -> Generator:
-        """Background process: sync CRDT + fetch new versions as they appear."""
+        """Background process: fetch new versions as they appear.
+
+        Event-driven: a pushed registry delta (or a pubsub announcement)
+        wakes the loop immediately; the ``interval`` poll is the fallback
+        when no push arrives (partitions, missed floods), resolving through
+        the publisher's ``CheckpointService`` when ``resolve_from`` is set.
+        The old random-peer anti-entropy round per tick is gone — the push
+        plane delivers registry changes in one gossip round instead."""
+        sim = self.node.sim
         while self.current_step < until_step:
-            yield interval
-            # anti-entropy against a random peer keeps the registry fresh
-            if self.node.peers:
-                pid = self.node.sim.rng.choice(
-                    sorted(self.node.peers, key=lambda p: p.digest))
-                try:
-                    yield from self.node.sync_crdt_with(self.node.peers[pid])
-                except Exception:       # noqa: BLE001 — best-effort gossip
-                    pass
+            yield sim.any_of([self._wake, sim.timeout(interval)])
+            # always a fresh event: re-arming only on trigger would leave
+            # the timeout path accumulating stale any_of waiters on the
+            # same Event forever; re-arming *before* the poll means a push
+            # arriving mid-fetch wakes the next iteration immediately
+            self._wake = sim.event()
             try:
                 yield from self.poll_and_fetch()
             except Exception:           # noqa: BLE001 — a partition or a

@@ -40,6 +40,12 @@ except ImportError:
         def __call__(self, *_args, **_kwargs):
             return self
 
+        def __or__(self, _other):       # st.none() | st.booleans() | ...
+            return self
+
+        def __ror__(self, _other):
+            return self
+
     _shim = types.ModuleType("hypothesis")
     _shim.given = _skipping_decorator
     _shim.settings = _skipping_decorator

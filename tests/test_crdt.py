@@ -1,4 +1,6 @@
-"""Property tests: CRDT join-semilattice laws + convergence (hypothesis)."""
+"""Property tests: CRDT join-semilattice laws, delta-state laws
+(``apply_delta(delta_since(vv))`` ≡ full merge), canonical-codec
+roundtrips + convergence (hypothesis)."""
 
 import copy
 
@@ -6,7 +8,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.crdt import (GCounter, LWWRegister, MVRegister, ORSet,
-                             PNCounter, ReplicatedStore)
+                             PNCounter, ReplicatedStore, WIRE_MAGIC,
+                             canonical_dumps, decode_entry, encode_entry)
 
 REPLICAS = ["r0", "r1", "r2"]
 
@@ -29,19 +32,48 @@ def apply_orset(s: ORSet, op):
         s.remove(elem)
 
 
-gcounter_ops = st.lists(st.tuples(st.sampled_from(REPLICAS),
-                                  st.integers(0, 10)), max_size=20)
-pncounter_ops = st.lists(st.tuples(st.sampled_from(REPLICAS),
-                                   st.integers(0, 10), st.booleans()),
-                         max_size=20)
-orset_ops = st.lists(st.tuples(st.sampled_from(REPLICAS),
-                               st.integers(0, 5), st.booleans()),
-                     max_size=24)
+def apply_lww(c: LWWRegister, op):
+    replica, val, ts = op
+    c.set(f"v{val}", float(ts), replica)
+
+
+def apply_mv(c: MVRegister, op):
+    c.set(op[1], op[0])
+
+
+def ops_for(kind: str, replicas):
+    """Op-list strategy for one kind, writing as one of ``replicas``."""
+    r = st.sampled_from(replicas)
+    return {
+        "g": st.lists(st.tuples(r, st.integers(0, 10)), max_size=20),
+        "pn": st.lists(st.tuples(r, st.integers(0, 10), st.booleans()),
+                       max_size=20),
+        "orset": st.lists(st.tuples(r, st.integers(0, 5), st.booleans()),
+                          max_size=24),
+        "lww": st.lists(st.tuples(r, st.integers(0, 20), st.integers(0, 9)),
+                        max_size=16),
+        "mv": st.lists(st.tuples(r, st.integers(0, 10)), max_size=16),
+    }[kind]
+
+
+def ops3_shared(kind):
+    """Three op lists sharing the replica-id space (legal for the
+    commutative-by-construction kinds; exercises tag collisions)."""
+    s = ops_for(kind, REPLICAS)
+    return st.tuples(s, s, s)
+
+
+def ops3_disjoint(kind):
+    """Three op lists with disjoint replica ids — the real-world invariant
+    (one writer per id); required for the register kinds, where two
+    'replicas' writing under one id could tie timestamps / collide vector
+    clocks in ways a genuine distributed run cannot."""
+    return st.tuples(*(ops_for(kind, [r]) for r in REPLICAS))
 
 
 def _build(cls, apply_fn, ops_by_replica):
     out = []
-    for r, ops in zip(REPLICAS, ops_by_replica):
+    for ops in ops_by_replica:
         c = cls()
         for op in ops:
             apply_fn(c, op)
@@ -50,17 +82,22 @@ def _build(cls, apply_fn, ops_by_replica):
 
 
 CASES = [
-    (GCounter, apply_gcounter, gcounter_ops),
-    (PNCounter, apply_pncounter, pncounter_ops),
-    (ORSet, apply_orset, orset_ops),
+    (GCounter, apply_gcounter, ops3_shared("g")),
+    (PNCounter, apply_pncounter, ops3_shared("pn")),
+    (ORSet, apply_orset, ops3_shared("orset")),
+    (LWWRegister, apply_lww, ops3_disjoint("lww")),
+    (MVRegister, apply_mv, ops3_disjoint("mv")),
 ]
+CASE_IDS = ["gcounter", "pncounter", "orset", "lww", "mv"]
+
+DELTA_CASES = [(cls, fn, kind) for (cls, fn, _), kind
+               in zip(CASES, ["g", "pn", "orset", "lww", "mv"])]
 
 
-@pytest.mark.parametrize("cls,apply_fn,ops_st", CASES,
-                         ids=["gcounter", "pncounter", "orset"])
-def test_merge_laws(cls, apply_fn, ops_st):
+@pytest.mark.parametrize("cls,apply_fn,ops3_st", CASES, ids=CASE_IDS)
+def test_merge_laws(cls, apply_fn, ops3_st):
     @settings(max_examples=60, deadline=None)
-    @given(st.tuples(ops_st, ops_st, ops_st))
+    @given(ops3_st)
     def run(ops3):
         a, b, c = _build(cls, apply_fn, ops3)
         # commutativity: a ⊔ b == b ⊔ a
@@ -80,12 +117,11 @@ def test_merge_laws(cls, apply_fn, ops_st):
     run()
 
 
-@pytest.mark.parametrize("cls,apply_fn,ops_st", CASES,
-                         ids=["gcounter", "pncounter", "orset"])
-def test_convergence_any_delivery_order(cls, apply_fn, ops_st):
+@pytest.mark.parametrize("cls,apply_fn,ops3_st", CASES, ids=CASE_IDS)
+def test_convergence_any_delivery_order(cls, apply_fn, ops3_st):
     """All replicas converge regardless of merge order/duplication."""
     @settings(max_examples=40, deadline=None)
-    @given(st.tuples(ops_st, ops_st, ops_st),
+    @given(ops3_st,
            st.lists(st.tuples(st.integers(0, 2), st.integers(0, 2)),
                     min_size=6, max_size=20))
     def run(ops3, gossip):
@@ -200,3 +236,229 @@ def test_deserialize_refuses_hostile_state():
     s.register("latest").set((1, 0x70, b"\x01" * 32), 1.0, "a")
     back = ReplicatedStore.deserialize(s.serialize(), "b")
     assert back.digest() == s.digest()
+
+
+# ---------------------------------------------------------- delta-state laws
+
+
+def _canon(entry):
+    return canonical_dumps(encode_entry(entry))
+
+
+@pytest.mark.parametrize("cls,apply_fn,kind", DELTA_CASES, ids=CASE_IDS)
+def test_delta_since_equals_full_merge(cls, apply_fn, kind):
+    """apply_delta(delta_since(vv)) ≡ full-state merge, for random op
+    interleavings and arbitrary vv cut points: B last saw A at ``cut``
+    (and has concurrent writes of its own), A keeps writing, then the
+    delta fragment must land B in exactly the state a full merge would."""
+    ops_a = ops_for(kind, ["a0", "a1"])
+    ops_b = ops_for(kind, ["b0", "b1"])
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops_a, ops_b, st.integers(0, 24))
+    def run(a_ops, b_ops, cut):
+        cut = min(cut, len(a_ops))
+        a = cls()
+        for op in a_ops[:cut]:
+            apply_fn(a, op)
+        b = cls()
+        for op in b_ops:
+            apply_fn(b, op)
+        b.merge(a)                      # B's knowledge of A at the cut
+        for op in a_ops[cut:]:
+            apply_fn(a, op)
+
+        b_delta = copy.deepcopy(b)
+        frag = a.delta_since(b_delta.vv())
+        if frag is not None:
+            b_delta.merge(frag)
+        b_full = copy.deepcopy(b)
+        b_full.merge(a)
+        assert _canon(b_delta) == _canon(b_full)
+        # a second identical application changes nothing (idempotent)
+        if frag is not None:
+            b_delta.merge(frag)
+            assert _canon(b_delta) == _canon(b_full)
+        # and between byte-identical replicas the delta dries up entirely
+        # (no wasted resend every future sync round)
+        a.merge(b_full)
+        assert _canon(a) == _canon(b_full)
+        assert a.delta_since(b_full.vv()) is None
+        assert b_full.delta_since(a.vv()) is None
+
+    run()
+
+
+@pytest.mark.parametrize("cls,apply_fn,kind", DELTA_CASES, ids=CASE_IDS)
+def test_delta_fragment_safe_at_third_replica(cls, apply_fn, kind):
+    """A fragment cut for B must be safe to merge at C (who saw less than
+    B): C may stay behind, but a follow-up delta_since(C.vv()) must close
+    the gap — fragments never poison a replica's causal claims."""
+    ops_a = ops_for(kind, ["a0", "a1"])
+
+    @settings(max_examples=50, deadline=None)
+    @given(ops_a, st.integers(0, 24), st.integers(0, 24))
+    def run(a_ops, cut_b, cut_c):
+        cut_b, cut_c = (min(cut_b, len(a_ops)), min(cut_c, len(a_ops)))
+        a, b, c = cls(), cls(), cls()
+        for i, op in enumerate(a_ops):
+            if i == cut_b:
+                b.merge(a)
+            if i == cut_c:
+                c.merge(a)
+            apply_fn(a, op)
+        frag_for_b = a.delta_since(b.vv())
+        if frag_for_b is not None:
+            c.merge(frag_for_b)         # gapped delivery at C
+        repair = a.delta_since(c.vv())
+        if repair is not None:
+            c.merge(repair)
+        full = cls()
+        full.merge(a)
+        assert c.value() == full.value()
+
+    run()
+
+
+def test_store_delta_roundtrip_equals_full_merge():
+    """Store-level: delta_since/apply_delta over the wire codec lands the
+    receiver in the same state as a full-store merge."""
+    @settings(max_examples=40, deadline=None)
+    @given(ops_for("g", ["a0"]), ops_for("orset", ["a0"]),
+           ops_for("lww", ["a0"]), ops_for("g", ["b0"]),
+           st.integers(0, 10))
+    def run(g_ops, o_ops, l_ops, bg_ops, cut):
+        a = ReplicatedStore("a")
+        for op in g_ops[:cut]:
+            apply_gcounter(a.counter("steps"), op)
+        b = ReplicatedStore("b")
+        for op in bg_ops:
+            apply_gcounter(b.counter("steps"), op)
+        b.apply_delta(a.delta_since(b.vv()))
+        for op in g_ops[cut:]:
+            apply_gcounter(a.counter("steps"), op)
+        for op in o_ops:
+            apply_orset(a.orset("reg/k"), op)
+        for op in l_ops:
+            apply_lww(a.register("reg/latest"), op)
+
+        b_delta = ReplicatedStore.deserialize(b.serialize(), "b2")
+        wire = ReplicatedStore.encode_delta(a.delta_since(b_delta.vv()))
+        b_delta.apply_delta(ReplicatedStore.decode_delta(wire))
+        b_full = ReplicatedStore.deserialize(b.serialize(), "b3")
+        b_full.merge(a)
+        assert b_delta.digest() == b_full.digest()
+
+    run()
+
+
+# ------------------------------------------------------------ codec laws
+
+
+_values = st.recursive(
+    st.none() | st.booleans() | st.integers(-2**40, 2**40)
+    | st.floats(allow_nan=False, allow_infinity=False)
+    | st.text(max_size=6) | st.binary(max_size=8),
+    lambda ch: st.tuples(ch, ch) | st.frozensets(ch, max_size=3),
+    max_leaves=6)
+
+
+def test_codec_roundtrip_and_digest_stability():
+    """encode→decode is lossless and two separately-built equal-state
+    replicas always agree byte-for-byte on the canonical encoding (the
+    old pickle digests could differ across Python/protocol versions)."""
+    @settings(max_examples=60, deadline=None)
+    @given(_values, st.floats(0, 1e9, allow_nan=False))
+    def run(value, ts):
+        r1, r2 = LWWRegister(), LWWRegister()
+        r1.set(value, ts, "r0")
+        r2.set(value, ts, "r0")
+        assert canonical_dumps(encode_entry(r1)) == \
+            canonical_dumps(encode_entry(r2))
+        back = decode_entry(encode_entry(r1))
+        assert canonical_dumps(encode_entry(back)) == \
+            canonical_dumps(encode_entry(r1))
+        assert back.value() == r1.value()
+
+    run()
+
+
+def test_codec_roundtrip_all_kinds():
+    @settings(max_examples=40, deadline=None)
+    @given(ops_for("g", REPLICAS), ops_for("pn", REPLICAS),
+           ops_for("orset", REPLICAS), ops_for("lww", REPLICAS),
+           ops_for("mv", ["r0"]))
+    def run(g_ops, pn_ops, o_ops, l_ops, m_ops):
+        for cls, fn, ops in ((GCounter, apply_gcounter, g_ops),
+                             (PNCounter, apply_pncounter, pn_ops),
+                             (ORSet, apply_orset, o_ops),
+                             (LWWRegister, apply_lww, l_ops),
+                             (MVRegister, apply_mv, m_ops)):
+            c = cls()
+            for op in ops:
+                fn(c, op)
+            back = decode_entry(encode_entry(c))
+            assert type(back) is cls
+            assert canonical_dumps(encode_entry(back)) == \
+                canonical_dumps(encode_entry(c))
+            assert back.value() == c.value()
+
+    run()
+
+
+def test_codec_rejects_malformed_docs():
+    for doc in (None, [], "x", {"k": "nope"}, {"k": "g", "c": {"r": -1}},
+                {"k": "g", "c": {"r": "NaN"}}, {"k": "g", "c": {"r": True}},
+                {"k": "lww", "t": [1.0], "v": None, "c": {}},
+                {"k": "orset", "a": [["e", [["r", 0]]]], "t": [], "s": {}},
+                {"k": "orset", "a": [[{"__l": []}, [["r", 1]]]],
+                 "t": [], "s": {}},          # unhashable element
+                {"k": "mv", "vs": [["bad"]], "c": {}}):
+        with pytest.raises(ValueError):
+            decode_entry(doc)
+    with pytest.raises(ValueError):
+        ReplicatedStore.decode_delta(WIRE_MAGIC + b'{"v":2,"d":[]}')
+    with pytest.raises(ValueError):
+        ReplicatedStore.decode_delta(WIRE_MAGIC + b"not json")
+    with pytest.raises(ValueError):
+        ReplicatedStore.deserialize(WIRE_MAGIC + b'{"v":99,"entries":{}}')
+
+
+# ------------------------------------------------------------ watch plane
+
+
+def test_watch_fires_local_and_remote():
+    a, b = ReplicatedStore("a"), ReplicatedStore("b")
+    events = []
+    h = a.watch("reg/", lambda k, v, o: events.append((k, o)))
+    a.watch("", lambda k, v, o: events.append(("all:" + k, o)))
+
+    a.counter("steps").increment("a", 1)        # outside the reg/ prefix
+    a.orset("reg/k").add("v1", "a")             # local, under the prefix
+    assert ("reg/k", "local") in events
+    assert ("all:steps", "local") in events and ("steps", "local") not in [
+        e for e in events if not e[0].startswith("all:")]
+
+    b.orset("reg/k").add("v2", "b")
+    a.apply_delta(b.delta_since(a.vv()))        # remote merge fires too
+    assert ("reg/k", "remote") in events
+
+    events.clear()
+    a.unwatch(h)
+    a.orset("reg/k").add("v3", "a")
+    assert ("reg/k", "local") not in events     # handle detached
+    assert ("all:reg/k", "local") in events     # other watcher still live
+
+
+def test_watch_survives_serialization():
+    """Listeners are plumbing, not state: snapshots round-trip cleanly and
+    deltas cut from a watched store apply at other replicas."""
+    a = ReplicatedStore("a")
+    a.watch("", lambda k, v, o: None)
+    a.counter("steps").increment("a", 2)
+    snap = a.serialize()
+    back = ReplicatedStore.deserialize(snap, "b")
+    assert back.digest() == a.digest()
+    import pickle as _p
+    legacy = _p.dumps(a.entries)                # legacy path drops listeners
+    assert ReplicatedStore.deserialize(legacy, "c").digest() == a.digest()

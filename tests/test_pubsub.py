@@ -28,6 +28,24 @@ def test_publish_reaches_subscribers():
         assert len(msgs) <= 1
 
 
+def test_late_subscription_propagates_without_manual_announce():
+    """Regression: ``subscribe`` after connections exist used to stay
+    invisible (topics were only exchanged lazily at announce time), so a
+    fresh subscriber missed the next publish.  Subscribing must now push
+    the update to known peers by itself."""
+    fleet = make_fleet(6, seed=13, same_region="us")
+    sim = fleet.sim
+    got = []
+    # subscribe AFTER the mesh is joined — no announce_subscriptions calls
+    fleet.peers[3].pubsub.subscribe("late", lambda t, d, f: got.append(d))
+    sim.run(until=sim.now + 5)          # the proactive update lands
+
+    sim.run_process(fleet.peers[0].pubsub.publish("late", ("v", 7)),
+                    until=sim.now + 60)
+    sim.run(until=sim.now + 10)
+    assert got == [("v", 7)]
+
+
 def test_unsubscribed_topic_not_delivered():
     fleet = make_fleet(6, seed=3, same_region="us")
     sim = fleet.sim
