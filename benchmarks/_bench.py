@@ -1,0 +1,43 @@
+"""Machine-readable benchmark artifacts.
+
+Every section in :mod:`benchmarks.run` may return a metrics dict; the
+orchestrator writes it to ``BENCH_<section>.json`` at the repo root so CI
+and downstream tooling diff runs without scraping the text report.
+Sections run standalone (``python benchmarks/<x>.py``) emit through the
+same helper.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+__all__ = ["emit"]
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _jsonable(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, bool)) or obj is None:
+        return obj
+    if isinstance(obj, float):
+        return round(obj, 9)
+    if isinstance(obj, bytes):
+        return obj.hex()
+    if hasattr(obj, "item"):           # numpy scalars
+        return _jsonable(obj.item())
+    return str(obj)
+
+
+def emit(name: str, payload: Dict[str, Any]) -> str:
+    """Write ``BENCH_<name>.json`` at the repo root; returns the path."""
+    path = os.path.join(_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(_jsonable(payload), f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

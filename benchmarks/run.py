@@ -13,9 +13,12 @@ Sections:
     crdt        replicated-store convergence (anti-entropy vs delta push)
     crdtsync    v2 delta sync bytes vs full-state, push latency, v1 interop
     shards      sharded inference + failover (Fig. 1-4)
+    serving     continuous batching: N concurrent clients, kill, pressure
     roofline    arch × shape roofline terms from the dry-run artifacts
 
-Also emits a machine-readable ``name,us_per_call,derived`` CSV per section.
+Also emits a machine-readable ``name,us_per_call,derived`` CSV per section,
+and — for any section that returns a metrics dict — ``BENCH_<name>.json``
+at the repo root.
 """
 
 from __future__ import annotations
@@ -25,8 +28,8 @@ import sys
 import time
 from typing import Callable, List, Tuple
 
-from . import (crdt_sync, dht_lookup, model_sync, nat_traversal, roofline,
-               rpc_throughput, sharded_inference)
+from . import (_bench, crdt_sync, dht_lookup, model_sync, nat_traversal,
+               roofline, rpc_throughput, sharded_inference)
 
 SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
     ("table1", rpc_throughput.main),
@@ -39,6 +42,7 @@ SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
     ("crdt", crdt_sync.main),
     ("crdtsync", crdt_sync.main_sync),
     ("shards", sharded_inference.main),
+    ("serving", sharded_inference.main_serving),
     ("roofline", roofline.main),
 ]
 
@@ -58,8 +62,11 @@ def main() -> None:
         report: List[str] = []
         t0 = time.time()
         try:
-            fn(report)
+            metrics = fn(report)
             status = "ok"
+            if isinstance(metrics, dict):
+                path = _bench.emit(name, metrics)
+                report.append(f"(wrote {path})")
         except Exception as e:  # noqa: BLE001 — keep the harness going
             report.append(f"!! section {name} failed: {e!r}")
             status = "fail"

@@ -27,6 +27,11 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # write must reach every subscriber's watch callback within one gossip
     # round with no anti-entropy running, and v1<->v2 pairs must converge
     python benchmarks/crdt_sync.py --sync-smoke
+    # serving smoke: concurrent clients through the continuous-batching
+    # plane must beat the sequential v1 baseline >=3x, lose zero sessions
+    # when a busy provider is killed mid-run (migration replays prefill on
+    # a surviving replica), and pressure must spawn a hot-shard replica
+    python benchmarks/sharded_inference.py --serve-smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

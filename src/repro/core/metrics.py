@@ -52,6 +52,21 @@ def node_snapshot(node: "LatticaNode") -> Dict[str, Any]:
                           ("bitswap", node.bitswap.stats)):
         for k, v in stats.items():
             snap[f"{prefix}.{k}"] = v
+    # serving plane: a node may host several ShardServers / ShardClients
+    # (registered by serving/sharded.py); sum their counters
+    servers = getattr(node, "shard_servers", [])
+    if servers:
+        snap["serving.shards"] = len(servers)
+        snap["serving.slots_used"] = sum(s.engine.slots_used for s in servers)
+        snap["serving.queue_depth"] = sum(s.engine.queue_depth for s in servers)
+        for key in ("admitted", "evicted", "steps", "step_sessions",
+                    "slot_reuse", "queue_peak", "pages_peak", "idle_evicted"):
+            snap[f"serving.{key}"] = sum(s.engine.stats[key] for s in servers)
+    clients = getattr(node, "shard_clients", [])
+    if clients:
+        for key in ("requests", "completed", "failed_sessions",
+                    "sessions_migrated", "failovers", "hedged", "calls"):
+            snap[f"serving.client.{key}"] = sum(c.stats[key] for c in clients)
     return snap
 
 
@@ -109,6 +124,8 @@ def dashboard(nodes: Iterable["LatticaNode"]) -> str:
         "bytes_moved": sum(r.get("bitswap.bytes_fetched", 0) for r in rows),
         "rpc_served": sum(r.get("rpc.unary_served", 0) for r in rows),
         "rpc_errors": sum(r.get("rpc.errors", 0) for r in rows),
+        "sessions_migrated": sum(
+            r.get("serving.client.sessions_migrated", 0) for r in rows),
     }
     lines.append("-" * len(head))
     lines.append("fleet: " + "  ".join(f"{k}={v}" for k, v in totals.items()))

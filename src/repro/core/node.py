@@ -12,7 +12,7 @@ identity + transport (dial/AutoNAT/relay/DCUtR) + RPC router + Kademlia DHT
 
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, List, Optional, TYPE_CHECKING
+from typing import Any, Dict, Generator, List, Optional, Tuple, TYPE_CHECKING
 
 from .bitswap import Bitswap
 from .blockstore import BlockStore
@@ -162,8 +162,13 @@ class LatticaNode:
         self.crdt_stats = {"rounds": 0, "delta_exchanges": 0,
                            "full_exchanges": 0, "tx_bytes": 0, "rx_bytes": 0,
                            "push_published": 0, "push_bytes": 0,
-                           "push_applied": 0, "push_rejected": 0}
+                           "push_applied": 0, "push_rejected": 0,
+                           "summary_skipped": 0}
         self._crdt_peer_proto: Dict[PeerId, str] = {}
+        #: per peer (our digest, our vv) snapshotted when both sides last
+        #: held identical state — lets steady-state rounds skip the
+        #: crdt.summary exchange entirely (see sync_crdt_with)
+        self._crdt_sync_cache: Dict[PeerId, Tuple[bytes, Dict[str, Any]]] = {}
         self._push_vv: Dict[str, Any] = {}       # store.vv() at last push
         self._push_pending = False
         self._crdt_topics: set = set()
@@ -429,12 +434,26 @@ class LatticaNode:
         theirs = yield from stub.digest()
         stats["rounds"] += 1
         if theirs == self.store.digest():
+            # identical state: snapshot (digest, vv) atomically so the next
+            # divergent round can prove "peer == our old self" and skip the
+            # summary exchange
+            self._crdt_sync_cache[info.peer_id] = (theirs, self.store.vv())
             return False
         if (self.crdt_proto == "v2"
                 and self._crdt_peer_proto.get(info.peer_id) != "v1"):
+            cached = self._crdt_sync_cache.get(info.peer_id)
+            if cached is not None and cached[0] == theirs:
+                # the peer still holds exactly the state both sides shared
+                # after the last round (content digests match), so what it
+                # lacks is precisely delta_since(our vv back then): push it
+                # without the crdt.summary round trip
+                moved = yield from self._sync_crdt_skip(stub, info, cached[1])
+                return moved
             try:
                 moved = yield from self._sync_crdt_v2(stub)
                 stats["delta_exchanges"] += 1
+                self._crdt_sync_cache[info.peer_id] = (
+                    self.store.digest(), self.store.vv())
                 return moved
             except ServiceError as e:
                 if e.status is not RpcStatus.NOT_FOUND:
@@ -476,6 +495,29 @@ class LatticaNode:
         changed = self.store.apply_delta(their_deltas) if their_deltas else []
         if changed:
             self._schedule_crdt_push()      # rumor-monger what we learned
+        return bool(changed) or bool(push)
+
+    def _sync_crdt_skip(self, stub: Stub, info: PeerInfo,
+                        since_vv: Dict[str, Any]) -> Generator:
+        """Steady-state fast path: the peer's digest equals our snapshot
+        from the last converged round, so it is missing exactly
+        ``delta_since(since_vv)`` and has nothing we lack — one push-only
+        ``crdt.delta``, no summary."""
+        stats = self.crdt_stats
+        push = self.store.delta_since(since_vv)
+        # atomic (digest, vv) of the state the peer will hold post-merge;
+        # verified by digest equality before the next skip, so a concurrent
+        # local mutation mid-RPC only costs a fallback to the summary path
+        snap = (self.store.digest(), self.store.vv())
+        req = encode_delta_request({}, push)
+        dresp = yield from stub.delta(req)
+        stats["summary_skipped"] += 1
+        stats["delta_exchanges"] += 1
+        stats["tx_bytes"] += len(req)
+        stats["rx_bytes"] += len(dresp)
+        their_deltas = ReplicatedStore.decode_delta(dresp)
+        changed = self.store.apply_delta(their_deltas) if their_deltas else []
+        self._crdt_sync_cache[info.peer_id] = snap
         return bool(changed) or bool(push)
 
     # ------------------------------------------------------- CRDT delta push

@@ -1,5 +1,11 @@
 from .engine import GenerationEngine
-from .sharded import ShardClient, ShardServer, plan_shards, deploy_sharded
+from .batch import BatchEngine
+from .router import LoadAwareRouter, hedged_call
+from .pressure import PressureMonitor, load_publisher, publish_serving_plan
+from .sharded import (ShardClient, ShardServer, plan_shards, deploy_sharded,
+                      serve_fleet)
 
-__all__ = ["GenerationEngine", "ShardClient", "ShardServer", "plan_shards",
-           "deploy_sharded"]
+__all__ = ["GenerationEngine", "BatchEngine", "LoadAwareRouter",
+           "hedged_call", "PressureMonitor", "load_publisher",
+           "publish_serving_plan", "ShardClient", "ShardServer",
+           "plan_shards", "deploy_sharded", "serve_fleet"]

@@ -1,0 +1,266 @@
+"""Continuous-batching engine for one pipeline shard (Orca-style).
+
+A :class:`BatchEngine` owns a fixed table of decode *slots*.  Each slot
+holds one session's KV cache, allocated in pages of ``page_size`` tokens
+and grown on demand, so a shard admits new sequences and evicts finished
+ones at every decode step — prefill and decode interleave across
+concurrent sessions instead of queueing whole requests.
+
+Admission is FIFO: when the slot table is full, ``open`` parks the caller
+on a queue event and a freed slot is handed directly to the oldest
+waiter (no barging).  The engine is deliberately yield-free apart from
+that admission wait; compute methods return the floating-point op count
+alongside the result so the RPC handler charges simulated CPU time
+*once per batched call* — which is exactly where continuous batching
+wins: one wire message and one per-message CPU charge amortized over
+every active session instead of per session per token.
+
+Numerics are intentionally identical to the one-session-at-a-time v1
+path (per-slot batch=1 apply), so greedy decode through the batched
+plane matches :class:`repro.serving.engine.GenerationEngine` bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, Dict, Generator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simnet import Sim
+
+__all__ = ["BatchEngine", "SlotState"]
+
+
+class SlotState:
+    """One occupied decode slot: a session pinned to a paged KV cache."""
+
+    __slots__ = ("session", "slot", "cache", "capacity", "max_len",
+                 "last_used")
+
+    def __init__(self, session: Any, slot: int, cache: Dict[str, Any],
+                 capacity: int, max_len: int, now: float):
+        self.session = session
+        self.slot = slot
+        self.cache = cache
+        self.capacity = capacity
+        self.max_len = max_len
+        self.last_used = now
+
+
+class BatchEngine:
+    def __init__(self, module: Any, sim: Sim, n_slots: int = 8,
+                 page_size: int = 32):
+        self.module = module
+        self.sim = sim
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._slot_last_session: List[Any] = [None] * n_slots
+        self.by_session: Dict[Any, SlotState] = {}
+        # FIFO of (session, event) waiting for a slot; a freed slot is
+        # succeed()ed straight into the head waiter's event
+        self._queue: Deque[Tuple[Any, Any]] = deque()
+        # params are closed over as jit constants; shapes key the trace
+        # cache, so steady-state decode is one compiled call per slot
+        self._apply = jax.jit(
+            lambda x, pos, cache: module.apply(x, pos, cache))
+        self.stats = {
+            "admitted": 0, "evicted": 0, "prefills": 0, "steps": 0,
+            "step_sessions": 0, "queue_peak": 0, "slot_reuse": 0,
+            "pages": 0, "pages_peak": 0, "idle_evicted": 0,
+        }
+
+    # -- occupancy (what pressure publishing reports) -----------------------
+    @property
+    def slots_used(self) -> int:
+        return self.n_slots - len(self._free)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # -- paged cache --------------------------------------------------------
+    def _pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    def _alloc_cache(self, n_tokens: int) -> Tuple[Dict[str, Any], int]:
+        cap = self._pages_for(n_tokens) * self.page_size
+        cache = self.module.init_cache(1, cap)
+        return cache, cap
+
+    def _ensure_capacity(self, st: SlotState, need: int) -> None:
+        """Grow the slot's cache by whole pages until it can hold ``need``
+        tokens.  Growth pads each leaf along its (single) capacity axis,
+        so it is arch-agnostic: SSM/recurrent leaves keep their shapes and
+        window-limited caches stop growing at the window."""
+        if need <= st.capacity:
+            return
+        new_cap = self._pages_for(need) * self.page_size
+        fresh = self.module.init_cache(1, new_cap)
+
+        def merge(old: jax.Array, new: jax.Array) -> jax.Array:
+            if old.shape == new.shape:
+                return old
+            diff = [d for d in range(old.ndim) if old.shape[d] != new.shape[d]]
+            assert len(diff) == 1, (old.shape, new.shape)
+            ax = diff[0]
+            pad = [(0, new.shape[d] - old.shape[d]) if d == ax else (0, 0)
+                   for d in range(old.ndim)]
+            return jnp.pad(old, pad)
+
+        grown = jax.tree.map(merge, st.cache["layers"], fresh["layers"])
+        st.cache = {"len": st.cache["len"], "layers": grown}
+        self.stats["pages"] += (new_cap - st.capacity) // self.page_size
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self._pages_in_use())
+        st.capacity = new_cap
+
+    def _pages_in_use(self) -> int:
+        return sum(st.capacity // self.page_size
+                   for st in self.by_session.values())
+
+    # -- admission / eviction ------------------------------------------------
+    def open(self, session: Any, x: np.ndarray, max_len: int) -> Generator:
+        """Admit ``session`` (waiting FIFO for a slot if the table is full)
+        and run its prefill.  Returns ``(out, flops)``; idempotent per
+        session id — re-opening replaces the previous cache, so a retried
+        admission cannot leak a slot."""
+        if session in self.by_session:
+            slot = self.by_session.pop(session).slot
+        elif self._free:
+            slot = self._free.pop()
+        else:
+            ev = self.sim.event()
+            self._queue.append((session, ev))
+            self.stats["queue_peak"] = max(self.stats["queue_peak"],
+                                           len(self._queue))
+            slot = yield ev
+        out, flops = self._prefill(session, slot, x, max_len)
+        return out, flops
+
+    def close(self, sessions: List[Any]) -> int:
+        n = 0
+        for sid in list(sessions):
+            if sid in self.by_session:
+                self._release(sid)
+                n += 1
+        return n
+
+    def reap_idle(self, ttl: float) -> int:
+        """Evict sessions untouched for ``ttl`` sim-seconds (crashed or
+        timed-out clients must not pin slots forever)."""
+        now = self.sim.now
+        stale = [sid for sid, st in self.by_session.items()
+                 if now - st.last_used > ttl]
+        for sid in stale:
+            self._release(sid)
+            self.stats["idle_evicted"] += 1
+        return len(stale)
+
+    def fail_waiters(self, exc: BaseException) -> int:
+        """Crash path: wake every queued admission with ``exc``.  A dead
+        server must not pin parked callers until their RPC deadline — the
+        error surfaces immediately so the client re-admits elsewhere."""
+        n = 0
+        while self._queue:
+            _, ev = self._queue.popleft()
+            ev.fail(exc)
+            n += 1
+        return n
+
+    def _release(self, session: Any) -> None:
+        st = self.by_session.pop(session)
+        self.stats["evicted"] += 1
+        if self._queue:
+            _, ev = self._queue.popleft()
+            ev.succeed(st.slot)       # direct handoff keeps admission FIFO
+        else:
+            self._free.append(st.slot)
+
+    # -- compute ------------------------------------------------------------
+    def _positions(self, base: Any, B: int, S: int) -> jax.Array:
+        if S == 1:
+            pos = jnp.broadcast_to(jnp.asarray(base)[None, None],
+                                   (B, 1)).astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                   (B, S))
+        if self.module.cfg.mrope:
+            pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+        return pos
+
+    def _prefill(self, session: Any, slot: int, x: np.ndarray,
+                 max_len: int) -> Tuple[np.ndarray, float]:
+        m = self.module
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += 1
+        if self._slot_last_session[slot] not in (None, session):
+            self.stats["slot_reuse"] += 1
+        self._slot_last_session[slot] = session
+        xj = jnp.asarray(x)
+        if m.is_first and xj.dtype == jnp.int32:
+            xj = m.embed(xj)
+        S = xj.shape[1]
+        cache, cap = self._alloc_cache(S + 1)
+        st = SlotState(session, slot, cache, cap, max_len, self.sim.now)
+        self.by_session[session] = st
+        self.stats["pages"] += cap // self.page_size
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self._pages_in_use())
+        out, st.cache = self._apply(xj, self._positions(0, 1, S), st.cache)
+        if m.is_last:
+            out = m.head(out[:, -1:])[:, 0]       # (1, vocab)
+        return np.asarray(out), m.flops(S)
+
+    def step(self, sessions: List[Any], x: np.ndarray,
+             evict: Optional[List[Any]] = None,
+             ) -> Tuple[np.ndarray, List[Any], float]:
+        """One decode iteration over a batch of sessions.
+
+        ``x`` is row-aligned with ``sessions``: int32 token ids ``(M,)``
+        on the first shard, activations ``(M, d_model)`` downstream.
+        Sessions the engine no longer holds are skipped rather than
+        failing the whole batch; the returned ``served`` list tells the
+        driver which rows came back (missing ones get migrated).
+        ``evict`` frees finished sessions *before* compute, so their
+        slots are available to queued admissions within the same step.
+        """
+        if evict:
+            self.close(evict)
+        m = self.module
+        self.stats["steps"] += 1
+        served: List[Any] = []
+        outs: List[np.ndarray] = []
+        flops = 0.0
+        for i, sid in enumerate(sessions):
+            st = self.by_session.get(sid)
+            if st is None:
+                continue
+            st.last_used = self.sim.now
+            xi = jnp.asarray(x[i])[None]          # (1,) tokens or (1, D)
+            if m.is_first and xi.dtype == jnp.int32:
+                xi = m.embed(xi[:, None])
+            else:
+                xi = xi[:, None]                  # (1, 1, D)
+            cur = int(st.cache["len"])
+            self._ensure_capacity(st, cur + 1)
+            out, st.cache = self._apply(
+                xi, self._positions(cur, 1, 1), st.cache)
+            if m.is_last:
+                out = m.head(out)[:, 0]           # (1, vocab)
+            else:
+                out = out[:, 0]                   # (1, d_model)
+            outs.append(np.asarray(out[0]))
+            served.append(sid)
+            flops += m.flops(1)
+        self.stats["step_sessions"] += len(served)
+        out_arr = (np.stack(outs) if outs
+                   else np.zeros((0, 1), dtype=np.float32))
+        return out_arr, served, flops
+
+    def slot_of(self, session: Any) -> Optional[int]:
+        st = self.by_session.get(session)
+        return None if st is None else st.slot

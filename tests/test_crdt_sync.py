@@ -169,3 +169,35 @@ def test_v1_node_rejects_nothing_it_served_before():
     assert restored.digest() == a.store.digest()
     sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 300)
     assert a.store.digest() == b.store.digest()
+
+
+def test_steady_state_skips_summary_after_digest_match():
+    """Once a pair has converged, a round with local-only churn rides a
+    blind delta push keyed off the cached (digest, vv) snapshot — no
+    per-key summary exchange."""
+    sim, a, b = _two()
+    for i in range(20):
+        a.store.orset(f"reg/k{i}").add((1, bytes([i]) * 32), "a")
+    sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 300)
+    assert a.store.digest() == b.store.digest()
+    # clean round: digest probe matches, snapshot cached, nothing skipped
+    assert not sim.run_process(a.sync_crdt_with(b.info()),
+                               until=sim.now + 300)
+    assert a.crdt_stats["summary_skipped"] == 0
+    skipped_before = a.crdt_stats["delta_exchanges"]
+
+    # steady state: only A churns → summary round elided entirely
+    a.store.orset("reg/k0").add((2, b"\x02" * 32), "a")
+    sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 300)
+    assert a.store.digest() == b.store.digest()
+    assert a.crdt_stats["summary_skipped"] == 1
+    assert a.crdt_stats["delta_exchanges"] == skipped_before + 1
+    assert (2, b"\x02" * 32) in b.store.orset("reg/k0").value()
+
+    # both sides churned: the peer's digest no longer matches the cached
+    # snapshot, so the full summary path runs — and still converges
+    a.store.orset("reg/k1").add((3, b"\x03" * 32), "a")
+    b.store.orset("reg/k2").add((3, b"\x04" * 32), "b")
+    sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 300)
+    assert a.store.digest() == b.store.digest()
+    assert a.crdt_stats["summary_skipped"] == 1      # no bogus skip

@@ -1,0 +1,279 @@
+"""Serving v2: continuous batching (paged slots, FIFO admission), the
+load-aware router, mid-generation session migration, and pressure-driven
+replica spawn."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.fleet import make_fleet
+from repro.core.simnet import Sim
+from repro.models import ops_for
+from repro.serving.batch import BatchEngine
+from repro.serving.engine import GenerationEngine
+from repro.serving.pressure import PressureMonitor
+from repro.serving.router import LoadAwareRouter
+from repro.serving.sharded import ShardClient, ShardModule, serve_fleet
+
+
+def _cfg():
+    return get_config("granite-8b").reduced(n_layers=4, d_model=64, vocab=256)
+
+
+def _full_module(cfg, params):
+    return ShardModule(cfg, params, (0, cfg.n_layers),
+                       is_first=True, is_last=True)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    ops = ops_for(cfg)
+    params = ops.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# --------------------------------------------------------------------------
+# BatchEngine unit tests (no network)
+# --------------------------------------------------------------------------
+
+def test_slot_reuse_after_eviction(model):
+    cfg, params = model
+    sim = Sim(seed=1)
+    eng = BatchEngine(_full_module(cfg, params), sim, n_slots=1, page_size=8)
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0,
+                                      cfg.vocab), np.int32)
+    sim.run_process(eng.open("A", x, 16))
+    slot_a = eng.slot_of("A")
+    assert slot_a is not None and eng.slots_used == 1
+    eng.close(["A"])
+    assert eng.slots_used == 0 and eng.slot_of("A") is None
+    sim.run_process(eng.open("B", x, 16))
+    assert eng.slot_of("B") == slot_a          # freed slot is recycled
+    assert eng.stats["slot_reuse"] == 1
+    assert eng.stats["evicted"] == 1
+    assert eng.stats["admitted"] == 2
+
+
+def test_admission_fifo_under_full_slot_table(model):
+    cfg, params = model
+    sim = Sim(seed=2)
+    eng = BatchEngine(_full_module(cfg, params), sim, n_slots=2, page_size=8)
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (1, 4), 0,
+                                      cfg.vocab), np.int32)
+    sim.run_process(eng.open("A", x, 16))
+    sim.run_process(eng.open("B", x, 16))
+    assert eng.slots_used == 2
+
+    admitted = []
+
+    def waiter(sid):
+        yield from eng.open(sid, x, 16)
+        admitted.append(sid)
+
+    sim.process(waiter("C"))
+    sim.process(waiter("D"))
+    sim.run(until=sim.now + 1)
+    assert eng.queue_depth == 2 and admitted == []
+
+    # a freed slot must go to the *oldest* waiter, not the newest
+    eng.close(["A"])
+    sim.run(until=sim.now + 1)
+    assert admitted == ["C"] and eng.queue_depth == 1
+    eng.close(["B"])
+    sim.run(until=sim.now + 1)
+    assert admitted == ["C", "D"]
+    assert eng.stats["queue_peak"] == 2
+
+
+def test_paged_cache_grows_without_perturbing_decode(model):
+    """Decode past the first page: capacity grows by whole pages and the
+    greedy continuation still matches the unsharded engine."""
+    cfg, params = model
+    sim = Sim(seed=3)
+    eng = BatchEngine(_full_module(cfg, params), sim, n_slots=1, page_size=8)
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0,
+                                      cfg.vocab), np.int32)
+    n_new = 12                                  # 6 + 12 crosses the 8-page
+    out, _ = sim.run_process(eng.open("S", x, 32))
+    toks = [int(np.argmax(out[0]))]
+    for _ in range(n_new - 1):
+        step_out, served, _ = eng.step(["S"], np.asarray([toks[-1]], np.int32))
+        assert served == ["S"]
+        toks.append(int(np.argmax(step_out[0])))
+    st = eng.by_session["S"]
+    assert st.capacity > 8                      # grew past the first page
+    local = GenerationEngine(cfg, params, max_len=32)
+    want, _ = local.generate({"tokens": jnp.asarray(x)}, n_new)
+    np.testing.assert_array_equal(np.asarray(toks, np.int32), want[0])
+
+
+# --------------------------------------------------------------------------
+# Router unit tests (no network)
+# --------------------------------------------------------------------------
+
+def test_router_prefers_fast_provider_and_ewma_recovers():
+    sim = Sim(seed=4)
+    router = LoadAwareRouter(sim, alpha=0.3, explore=0.0)
+    key = ("shard", 0)
+    for _ in range(6):
+        router.observe(key, "fast", 0.010, ok=True)
+        router.observe(key, "slow", 0.200, ok=True)
+    assert router.rank(key, ["slow", "fast"])[0] == "fast"
+    assert router.score(key, "slow") > router.score(key, "fast")
+
+    # the slow provider recovers; EWMA decay lets it earn its way back
+    for _ in range(20):
+        router.observe(key, "slow", 0.002, ok=True)
+    assert router.rank(key, ["slow", "fast"])[0] == "slow"
+
+
+def test_router_error_rate_and_inflight_penalize():
+    sim = Sim(seed=5)
+    router = LoadAwareRouter(sim, alpha=0.3, explore=0.0)
+    key = ("shard", 1)
+    router.observe(key, "a", 0.010, ok=True)
+    router.observe(key, "b", 0.010, ok=True)
+    base = router.score(key, "a")
+    router.observe(key, "a", 0.010, ok=False)   # one failure
+    assert router.score(key, "a") > base
+    assert router.rank(key, ["a", "b"])[0] == "b"
+    # in-flight depth shapes the score like queueing delay
+    base_b = router.score(key, "b")
+    router.begin(key, "b")
+    assert router.score(key, "b") > base_b
+    router.end(key, "b")
+    assert router.score(key, "b") == base_b
+
+
+# --------------------------------------------------------------------------
+# End-to-end: batched serving over the mesh
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_v2(model):
+    cfg, params = model
+    fleet = make_fleet(10, seed=21, same_region="us")
+    sim = fleet.sim
+    servers = sim.run_process(
+        serve_fleet(fleet.peers[:4], cfg, params, "svc", replicas=2,
+                    n_slots=4),
+        until=sim.now + 900)
+    return cfg, params, fleet, servers
+
+
+def test_batched_greedy_matches_engine_no_kv_bleed(served_v2):
+    """Six concurrent sessions through the batched plane decode exactly
+    what the unsharded engine produces per prompt — shared slots must not
+    leak KV state across sessions."""
+    cfg, params, fleet, servers = served_v2
+    sim = fleet.sim
+    client = ShardClient(fleet.peers[-1], cfg, "svc", n_shards=2)
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(i), (1, 8),
+                                             0, cfg.vocab), np.int32)
+               for i in range(6)]
+
+    def run():
+        reqs = [dict(tokens=p, n_tokens=6) for p in prompts]
+        out = yield from client.generate_concurrent(reqs)
+        return out
+
+    outs = sim.run_process(run(), until=sim.now + 900)
+    local = GenerationEngine(cfg, params, max_len=32)
+    for p, o in zip(prompts, outs):
+        want, _ = local.generate({"tokens": jnp.asarray(p)}, 6)
+        assert o is not None
+        np.testing.assert_array_equal(o, want[0])
+    assert client.stats["failed_sessions"] == 0
+    assert any(s.engine.stats["step_sessions"] > s.engine.stats["steps"]
+               for s in servers)                # steps actually batched
+
+
+def test_same_prompt_different_temperatures_diverge(served_v2):
+    """Two sessions over the identical prompt but different temperatures
+    must produce different continuations (and share no sampler state)."""
+    cfg, params, fleet, servers = served_v2
+    sim = fleet.sim
+    client = ShardClient(fleet.peers[-2], cfg, "svc", n_shards=2)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (1, 8),
+                                           0, cfg.vocab), np.int32)
+
+    def run():
+        reqs = [dict(tokens=prompt, n_tokens=8, temperature=0.0),
+                dict(tokens=prompt, n_tokens=8, temperature=1.5, seed=7)]
+        out = yield from client.generate_concurrent(reqs)
+        return out
+
+    greedy, sampled = sim.run_process(run(), until=sim.now + 900)
+    assert greedy is not None and sampled is not None
+    local = GenerationEngine(cfg, params, max_len=32)
+    want, _ = local.generate({"tokens": jnp.asarray(prompt)}, 8)
+    np.testing.assert_array_equal(greedy, want[0])   # greedy row unaffected
+    assert not np.array_equal(greedy, sampled)
+
+
+def test_mid_generation_kill_migrates_sessions(served_v2):
+    """Killing a busy replica mid-decode migrates its sessions (prefill
+    replay on the surviving replica): zero failed sessions, greedy output
+    still exact."""
+    cfg, params, fleet, servers = served_v2
+    sim = fleet.sim
+    client = ShardClient(fleet.peers[-1], cfg, "svc", n_shards=2)
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(20 + i),
+                                             (1, 8), 0, cfg.vocab), np.int32)
+               for i in range(6)]
+
+    def run():
+        evs = [client.submit(p, 48) for p in prompts]
+        yield sim.timeout(0.6)                  # let admissions land
+        busy = [s for s in servers
+                if s.alive and s.shard_idx == 0 and s.engine.slots_used > 0]
+        assert busy, "no busy shard-0 replica to kill"
+        busy[0].stop()
+        res = []
+        for ev in evs:
+            res.append((yield ev))
+        return res
+
+    outs = sim.run_process(run(), until=sim.now + 1800)
+    local = GenerationEngine(cfg, params, max_len=64)
+    for p, o in zip(prompts, outs):
+        want, _ = local.generate({"tokens": jnp.asarray(p)}, 48)
+        assert o is not None
+        np.testing.assert_array_equal(o, want[0])
+    assert client.stats["failed_sessions"] == 0
+    assert client.stats["sessions_migrated"] >= 1
+
+
+def test_pressure_monitor_spawns_replica_on_hot_shard(served_v2):
+    """Sustained saturation of the slot tables must drive an idle peer to
+    fetch the shard's params off the content plane and register as a new
+    DHT provider."""
+    cfg, params, fleet, servers = served_v2
+    sim = fleet.sim
+    client = ShardClient(fleet.peers[-1], cfg, "svc", n_shards=2)
+    idle = fleet.peers[5]
+    mon = PressureMonitor(idle, cfg, "svc", hot_occupancy=0.5, sustain=2,
+                          interval=0.3, max_replicas=4, n_slots=4)
+    sim.process(mon.run())
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(40 + i),
+                                             (1, 8), 0, cfg.vocab), np.int32)
+               for i in range(8)]
+
+    def run():
+        # saturate: far more concurrent sessions than slots, long enough
+        # generations that the queue persists across several monitor ticks
+        reqs = [dict(tokens=prompts[i % len(prompts)], n_tokens=16)
+                for i in range(24)]
+        out = yield from client.generate_concurrent(reqs)
+        return out
+
+    outs = sim.run_process(run(), until=sim.now + 3600)
+    mon.stop()
+    assert all(o is not None for o in outs)
+    assert mon.stats["observations"] > 0
+    assert mon.stats["spawned"] >= 1
+    spawned = getattr(idle, "shard_servers", [])
+    assert spawned and all(s.alive for s in spawned)
