@@ -194,20 +194,23 @@ def run_convergence(n_peers: int, interval: float = 2.0,
 # ---------------------------------------------------------------- reports
 
 
-def main(report: List[str]) -> None:
+def main(report: List[str]) -> Dict[str, object]:
     report.append("# CRDT store convergence (anti-entropy 2 s interval, "
                   "with/without delta push)")
     report.append(f"{'peers':>6} {'push':>5} {'t_converge_s':>12} "
                   f"{'converged':>9}")
+    rows = []
     for n in (4, 8, 16):
         for push in (False, True):
             r = run_convergence(n, push=push)
+            rows.append(r)
             report.append(f"{r['n']:>6} {str(r['push']):>5} "
                           f"{r['t_converge']:>12.2f} "
                           f"{str(r['converged']):>9}")
+    return {"convergence": rows}
 
 
-def main_sync(report: List[str]) -> None:
+def main_sync(report: List[str]) -> Dict[str, object]:
     report.append("# v2 delta sync vs v1 full-state exchange "
                   f"({N_KEYS} keys, {CHURN:.0%} churn/round)")
     eff = run_delta_efficiency()
@@ -224,6 +227,8 @@ def main_sync(report: List[str]) -> None:
                   f"{mixed['v2_initiated_converged']}, v1-initiated = "
                   f"{mixed['v1_initiated_converged']} "
                   f"(v1 fallbacks used: {mixed['fallbacks']})")
+    return {"delta_efficiency": eff, "push_latency": push,
+            "mixed_interop": mixed}
 
 
 def sync_smoke() -> int:

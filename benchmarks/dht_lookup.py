@@ -3,15 +3,16 @@
 from __future__ import annotations
 
 import hashlib
-from typing import Generator, List
+from typing import Dict, Generator, List
 
 from repro.core.fleet import make_fleet
 
 
-def main(report: List[str]) -> None:
+def main(report: List[str]) -> Dict[str, object]:
     report.append("# Kademlia lookup cost vs N (paper: O(log N))")
     report.append(f"{'N':>5} {'avg_rounds':>10} {'avg_queries':>11} "
                   f"{'avg_latency_s':>13}")
+    rows = []
     for n in (8, 16, 32, 64):
         fleet = make_fleet(n, seed=31, same_region="us")
         sim = fleet.sim
@@ -29,9 +30,13 @@ def main(report: List[str]) -> None:
 
             t_total += sim.run_process(lookup(), until=sim.now + 600)
         s = node.dht.stats
+        rows.append({"n": n, "avg_rounds": s["rounds"] / n_lookups,
+                     "avg_queries": s["queries"] / n_lookups,
+                     "avg_latency_s": t_total / n_lookups})
         report.append(f"{n:>5} {s['rounds']/n_lookups:>10.1f} "
                       f"{s['queries']/n_lookups:>11.1f} "
                       f"{t_total/n_lookups:>13.4f}")
+    return {"lookups": rows}
 
 
 if __name__ == "__main__":

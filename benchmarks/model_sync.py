@@ -16,19 +16,27 @@ shifts and essentially no leaf block is reused; under a ``cdc`` ChunkSpec
 boundaries re-synchronize right after the edit and the unchanged tail keeps
 its leaf CIDs.
 
+The ``quant`` scenario stacks block-quantized transfer on top of delta
+reuse: the same churned-checkpoint sequence published fp32 vs
+``int8_block`` (per-block scale+zero-point; the publisher's fp32 master
+stays local) — followers should move ~4× fewer bytes *on the churned
+tensors*, multiplying with the delta savings.
+
     PYTHONPATH=src python benchmarks/model_sync.py                # all
     PYTHONPATH=src python benchmarks/model_sync.py --delta-smoke  # CI gate
     PYTHONPATH=src python benchmarks/model_sync.py --cdc-smoke    # CI gate
+    PYTHONPATH=src python benchmarks/model_sync.py --quant-smoke  # CI gate
 """
 
 from __future__ import annotations
 
 import sys
-from typing import Generator, List
+import time
+from typing import Any, Dict, Generator, List
 
 import numpy as np
 
-from repro.core.cid import CODEC_RAW, ChunkSpec, dag_reachable
+from repro.core.cid import CODEC_RAW, ChunkSpec, cdc_cut_points, dag_reachable
 from repro.core.fleet import make_fleet
 
 ARTIFACT_MB = 8
@@ -183,41 +191,172 @@ def run_shifted(strategy: str, part_mb: int = 2, edit_at: int = 4096,
     }
 
 
-def main(report: List[str]) -> None:
+def run_quant(n_versions: int = 3, mutate_frac: float = 0.1,
+              n_tensors: int = 20, tensor_kb: int = 384,
+              n_fetchers: int = 2) -> Dict[str, Any]:
+    """The delta scenario published twice — raw fp32 parts vs
+    ``int8_block``-quantized parts — with identical churn.  Returns the
+    per-mode mean delta-version fetch bytes and their ratio (the gate:
+    quant sync should move ≤0.3× the fp32 bytes at 10% churn)."""
+    from repro.checkpoint.serial import params_to_parts
+
+    n_elems = tensor_kb * 1024 // 4
+
+    def tensor(i: int, version: int) -> np.ndarray:
+        return np.random.default_rng(2000 * i + version).normal(
+            size=n_elems).astype(np.float32)
+
+    out: Dict[str, Any] = {}
+    for label, mode in (("fp32", None), ("int8_block", "int8_block")):
+        fleet = make_fleet(n_fetchers + 1, seed=93, same_region="us")
+        sim = fleet.sim
+        seed_node = fleet.peers[0]
+        fetchers = fleet.peers[1:]
+        rng = np.random.default_rng(19)      # same churn in both modes
+        versions = {i: 0 for i in range(n_tensors)}
+        n_mutate = max(1, int(round(mutate_frac * n_tensors)))
+        delta_fetched: List[float] = []
+        for v in range(n_versions):
+            if v > 0:
+                for i in rng.choice(n_tensors, size=n_mutate, replace=False):
+                    versions[int(i)] = v
+            tree = {f"t{i:02d}": tensor(i, versions[i])
+                    for i in range(n_tensors)}
+            parts = params_to_parts(tree, quant=mode)
+
+            def publish(parts=parts):
+                root = yield from seed_node.publish_tree_artifact(parts)
+                return root
+
+            root = sim.run_process(publish(), until=sim.now + 3600)
+            before = [f.bitswap.stats["bytes_fetched"] for f in fetchers]
+
+            def fetch(node) -> Generator:
+                yield from node.fetch_artifact(root, reprovide=False,
+                                               assemble=False)
+                node.pin_latest("quant-bench", root)
+
+            procs = [sim.process(fetch(f)) for f in fetchers]
+            sim.run_process(_wait_all(sim, procs), until=sim.now + 86400)
+            fetched = [f.bitswap.stats["bytes_fetched"] - b0
+                       for f, b0 in zip(fetchers, before)]
+            if v > 0:
+                delta_fetched.append(sum(fetched) / len(fetched))
+        out[label] = {
+            "mean_delta_bytes": sum(delta_fetched) / len(delta_fetched),
+            "payload_bytes": sum(len(p[1]) for p in parts),
+        }
+    out["ratio"] = (out["int8_block"]["mean_delta_bytes"]
+                    / out["fp32"]["mean_delta_bytes"])
+    out["churn"] = mutate_frac
+    return out
+
+
+def run_codec() -> Dict[str, Any]:
+    """Hot-path receipts: flat-blob serialize throughput (raw and
+    quantized) and the vectorized gear-scan throughput (plain and
+    normalized masks), plus the chunk-size spread tightening that the
+    normalized masks buy."""
+    from repro.checkpoint.serial import params_to_bytes
+
+    rng = np.random.default_rng(3)
+    tree = {f"w{i:02d}": rng.normal(size=(256, 1024)).astype(np.float32)
+            for i in range(16)}                              # 16 MiB
+    tree_mb = sum(a.nbytes for a in tree.values()) / 2**20
+
+    def timed(fn, *args) -> float:
+        fn(*args)                       # warm caches
+        t0 = time.perf_counter()
+        fn(*args)
+        return time.perf_counter() - t0
+
+    t_raw = timed(params_to_bytes, tree)
+    t_quant = timed(params_to_bytes, tree, "int8_block")
+    data = rng.integers(0, 256, ARTIFACT_MB * 2**20,
+                        dtype=np.uint8).tobytes()
+    mn, avg, mx = 16 * 1024, 64 * 1024, 256 * 1024
+    t_scan = timed(cdc_cut_points, data, mn, avg, mx)
+    t_scan_norm = timed(cdc_cut_points, data, mn, avg, mx, 2)
+
+    def spread(norm: int) -> Dict[str, float]:
+        sizes = np.diff([0] + cdc_cut_points(data, mn, avg, mx, norm))
+        return {"n_chunks": int(len(sizes)),
+                "mean": float(sizes.mean()),
+                "cv": float(sizes.std() / sizes.mean())}
+
+    return {
+        "serialize_MBps": tree_mb / t_raw,
+        "serialize_int8_block_MBps": tree_mb / t_quant,
+        "cdc_scan_MBps": ARTIFACT_MB / t_scan,
+        "cdc_scan_norm2_MBps": ARTIFACT_MB / t_scan_norm,
+        "chunk_sizes_norm0": spread(0),
+        "chunk_sizes_norm2": spread(2),
+    }
+
+
+def main(report: List[str]) -> Dict[str, Any]:
     report.append(f"# Model dissemination ({ARTIFACT_MB} MiB artifact, "
                   "1 seed, swarm re-provides)")
     report.append(f"{'fetchers':>8} {'makespan_s':>10} {'mean_fetch_s':>12} "
                   f"{'seed_served_frac':>16}")
+    rows = []
     for n in (2, 4, 8, 16):
         r = run_fleet(n)
+        rows.append(r)
         report.append(f"{r['n']:>8} {r['makespan']:>10.2f} "
                       f"{r['mean_fetch']:>12.2f} {r['seed_share']:>16.2f}")
+    return {"fleet": rows}
 
 
-def main_delta(report: List[str]) -> None:
+def main_delta(report: List[str]) -> Dict[str, Any]:
     report.append("# Delta sync (per-tensor v2 manifests, 20 tensors, "
                   "10% mutated per version)")
     report.append(f"{'version':>7} {'mutated':>7} {'fetched_MiB':>11} "
                   f"{'full_MiB':>8} {'reuse':>6} {'makespan_s':>10}")
-    for r in run_delta():
+    rows = run_delta()
+    for r in rows:
         report.append(
             f"{r['version']:>7} {r['mutated']:>7} "
             f"{r['mean_bytes_fetched'] / 2**20:>11.2f} "
             f"{r['full_bytes'] / 2**20:>8.2f} {r['reuse_frac']:>6.2f} "
             f"{r['makespan']:>10.2f}")
+    return {"versions": rows}
 
 
-def main_shifted(report: List[str]) -> None:
+def main_shifted(report: List[str]) -> Dict[str, Any]:
     report.append("# Shifted-edit delta (1.5 KiB inserted at 4 KiB of a "
                   "2 MiB part; 64 KiB chunks)")
     report.append(f"{'strategy':>8} {'leaves':>6} {'leaf_reuse':>10} "
                   f"{'fetched_KiB':>11} {'full_KiB':>8}")
+    rows = []
     for strategy in ("fixed", "cdc"):
         r = run_shifted(strategy)
+        rows.append(r)
         report.append(f"{r['strategy']:>8} {r['n_leaves']:>6} "
                       f"{r['leaf_reuse']:>10.2%} "
                       f"{r['fetched_bytes'] / 1024:>11.0f} "
                       f"{r['full_bytes'] / 1024:>8.0f}")
+    return {"strategies": rows}
+
+
+def main_quant(report: List[str]) -> Dict[str, Any]:
+    q = run_quant()
+    codec = run_codec()
+    report.append("# Quantized sync (identical 10% churn, fp32 vs "
+                  "int8_block parts)")
+    report.append(
+        f"delta fetch: fp32={q['fp32']['mean_delta_bytes'] / 2**20:.2f} MiB "
+        f"int8_block={q['int8_block']['mean_delta_bytes'] / 2**20:.2f} MiB "
+        f"ratio={q['ratio']:.2f} (gate <=0.30)")
+    report.append(
+        f"codec: serialize {codec['serialize_MBps']:.0f} MB/s "
+        f"(int8_block {codec['serialize_int8_block_MBps']:.0f} MB/s), "
+        f"cdc scan {codec['cdc_scan_MBps']:.0f} MB/s "
+        f"(norm2 {codec['cdc_scan_norm2_MBps']:.0f} MB/s)")
+    report.append(
+        f"chunk-size CV: norm0={codec['chunk_sizes_norm0']['cv']:.2f} "
+        f"norm2={codec['chunk_sizes_norm2']['cv']:.2f}")
+    return {"quant": q, "codec": codec}
 
 
 def cdc_smoke() -> None:
@@ -251,6 +390,17 @@ def delta_smoke() -> None:
         for r in rows[1:]) + " of full fetch (gate <30%)")
 
 
+def quant_smoke() -> None:
+    """CI gate: int8_block sync must move <= 0.3x the fp32 bytes under
+    identical 10% churn (acceptance criterion)."""
+    q = run_quant()
+    assert q["ratio"] <= 0.30, (
+        f"quant regression: int8_block delta sync moved {q['ratio']:.2f}x "
+        "the fp32 bytes at 10% churn (gate: <=0.30)")
+    print(f"quant smoke ok: int8_block delta sync moved {q['ratio']:.2f}x "
+          "the fp32 bytes at 10% churn (gate <=0.30)")
+
+
 if __name__ == "__main__":
     if "--delta-smoke" in sys.argv:
         delta_smoke()
@@ -258,8 +408,12 @@ if __name__ == "__main__":
     if "--cdc-smoke" in sys.argv:
         cdc_smoke()
         sys.exit(0)
+    if "--quant-smoke" in sys.argv:
+        quant_smoke()
+        sys.exit(0)
     out: List[str] = []
     main(out)
     main_delta(out)
     main_shifted(out)
+    main_quant(out)
     print("\n".join(out))

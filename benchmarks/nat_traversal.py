@@ -98,7 +98,7 @@ def _punch_totals(fleet: Fleet) -> Tuple[int, int, int]:
     return ok, fail, predicted
 
 
-def main(report: List[str]) -> None:
+def main(report: List[str]) -> Dict[str, object]:
     fleet = make_fleet(N_PEERS, seed=123, maintenance=True)
     counts = run_pairs(fleet, N_ATTEMPTS)
     total = counts["total"]
@@ -122,6 +122,13 @@ def main(report: List[str]) -> None:
         report.append(f"  {kind:24s} boxes={row['boxes']:2d} "
                       f"map={row['mappings']:5d} ok={row['inbound_ok']:5d} "
                       f"filt={row['inbound_filtered']:5d}")
+    return {"attempts": total, "direct": direct, "relayed": relayed,
+            "failed": failed, "direct_rate": direct / max(total, 1),
+            "punch_ok": punch_ok, "punch_fail": punch_fail,
+            "predicted_punch_ok": predicted,
+            "symmetric_pairs": [
+                {"pair": list(pair), "direct": d, "attempts": t}
+                for pair, d, t in hard]}
 
 
 def run_matrix(seed: int = 31) -> Dict[Tuple[str, str], Optional[bool]]:
@@ -144,7 +151,7 @@ def run_matrix(seed: int = 31) -> Dict[Tuple[str, str], Optional[bool]]:
     return grid
 
 
-def main_matrix(report: List[str]) -> None:
+def main_matrix(report: List[str]) -> Dict[str, object]:
     grid = run_matrix()
     labels = [lbl for lbl, _ in MATRIX_SPECS]
     report.append("# NAT-kind punch matrix (D=direct, r=relayed, X=failed)")
@@ -160,6 +167,13 @@ def main_matrix(report: List[str]) -> None:
     n_direct = sum(1 for v in grid.values() if v is True)
     n_fail = sum(1 for v in grid.values() if v is None)
     report.append(f"direct cells: {n_direct}/{len(grid)}, failed: {n_fail}")
+    outcome = {True: "direct", False: "relayed", None: "failed"}
+    return {"labels": labels,
+            "cells": [{"initiator": la, "responder": lb,
+                       "outcome": outcome[grid[(la, lb)]]}
+                      for la in labels for lb in labels],
+            "direct_cells": n_direct, "failed_cells": n_fail,
+            "total_cells": len(grid)}
 
 
 def punch_smoke() -> int:

@@ -1,21 +1,39 @@
-"""Roofline terms per (arch × shape) from the dry-run artifacts.
+"""Roofline receipts: execute the Pallas kernels + analyze dry-run artifacts.
+
+Two halves, both emitted into ``BENCH_roofline.json``:
+
+* ``kernels`` — actually *runs* the seed kernels (flash_attention,
+  moe_gating, mlstm_scan) plus the paged-decode attention path at small
+  shapes on whatever backend is present (CPU CI executes the interpret /
+  jnp fallbacks; a TPU runs compiled Mosaic), and records wall time next
+  to the analytic FLOP/byte roofline terms.  Interpret-mode wall times
+  are *not* device performance — they are regression receipts: the
+  analytic ``compute_s``/``memory_s`` columns carry the roofline story,
+  the measured times catch "the kernel got 10x slower" drift.
+
+* ``dryrun`` — the (arch × shape) analysis of ``dryrun_single_pod.json``
+  when that artifact exists:
 
     compute    = HLO_FLOPs_per_dev / peak_FLOP/s      (197 TF/s bf16, v5e)
     memory     = HLO_bytes_per_dev / HBM_bw           (819 GB/s)
     collective = collective_bytes_per_dev / link_bw   (50 GB/s/link)
 
-Caveat recorded per row: XLA's cost_analysis counts while-loop bodies ONCE
-(scan over layers / microbatches / chunks), so HLO_FLOPs is a lower bound;
-MODEL_FLOPS (6·N·D train, 2·N·D inference, N=active params) is the analytic
-cross-check and the ratio column flags the undercount (ratio >> 1 ==> deep
-scan nesting; ratio << 1 ==> remat/redundant compute).
+  Caveat recorded per row: XLA's cost_analysis counts while-loop bodies
+  ONCE (scan over layers / microbatches / chunks), so HLO_FLOPs is a lower
+  bound; MODEL_FLOPS (6·N·D train, 2·N·D inference) is the analytic
+  cross-check and the ratio column flags the undercount.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -28,6 +46,102 @@ SHAPE_TOKENS = {
     "long_500k": 1,
 }
 
+
+# ======================================================================
+# kernel execution
+# ======================================================================
+
+def _time_call(fn, *args, reps: int = 3) -> float:
+    """Median wall seconds per call after a compile/warmup invocation."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _kernel_cases(smoke: bool) -> List[Dict[str, Any]]:
+    from repro.kernels import (flash_attention, mlstm_scan, moe_gating,
+                               paged_decode_attention)
+    rng = np.random.default_rng(7)
+    cases: List[Dict[str, Any]] = []
+
+    B, S, H, hd = 1, 128 if smoke else 256, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    # causal: ~half the S*S score matrix does useful work
+    flops = 2 * 2 * B * H * S * S * hd / 2
+    bytes_ = 4 * (3 + 1) * B * S * H * hd
+    cases.append({"name": "flash_attention",
+                  "shape": f"B{B} S{S} H{H} hd{hd}",
+                  "fn": flash_attention, "args": (q, k, v),
+                  "flops": flops, "bytes": bytes_})
+
+    T, E, topk = 512, 8, 2
+    logits = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)
+    cases.append({"name": "moe_gating", "shape": f"T{T} E{E} k{topk}",
+                  "fn": lambda l: moe_gating(l, topk), "args": (logits,),
+                  "flops": 5 * T * E, "bytes": 4 * (T * E * 2 + T * topk * 2)})
+
+    B, H, S, hd, chunk = 1, 2, 128, 32, 64
+    qs = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    ks = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32) / np.sqrt(hd)
+    vs = jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+    li = jnp.asarray(rng.normal(size=(B, H, S)), jnp.float32)
+    lf = jnp.zeros((B, H, S), jnp.float32)
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    cases.append({"name": "mlstm_scan",
+                  "shape": f"B{B} H{H} S{S} hd{hd} chunk{chunk}",
+                  "fn": lambda *a: mlstm_scan(*a, chunk=chunk),
+                  "args": (qs, ks, vs, li, lf, C0, n0, m0),
+                  "flops": 2 * 2 * B * H * S * chunk * hd + 2 * B * H * S * hd * hd,
+                  "bytes": 4 * B * H * S * hd * 3})
+
+    M, page, NP, Hk, rep = 4, 16, 4, 2, 2
+    Hq = Hk * rep
+    kp = jnp.asarray(rng.normal(size=(NP * M, page, Hk, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(NP * M, page, Hk, hd)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(NP * M).reshape(M, NP), jnp.int32)
+    lengths = jnp.asarray([page * NP - 1, 17, 40, 9], jnp.int32)
+    pq = jnp.asarray(rng.normal(size=(M, Hq, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(M, Hk, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(M, Hk, hd)), jnp.float32)
+    T = NP * page
+    cases.append({"name": "paged_decode_attention",
+                  "shape": f"M{M} pages{NP}x{page} H{Hq} hd{hd}",
+                  "fn": paged_decode_attention,
+                  "args": (pq, kp, vp, bt, lengths, kn, vn),
+                  "flops": 2 * 2 * M * Hq * T * hd,
+                  "bytes": 4 * 2 * M * T * Hk * hd})
+    return cases
+
+
+def run_kernels(smoke: bool = False) -> List[Dict[str, Any]]:
+    rows = []
+    for case in _kernel_cases(smoke):
+        wall = _time_call(case["fn"], *case["args"])
+        compute = case["flops"] / PEAK_FLOPS
+        memory = case["bytes"] / HBM_BW
+        rows.append({
+            "kernel": case["name"], "shape": case["shape"],
+            "wall_ms": wall * 1e3,
+            "flops": case["flops"], "bytes": case["bytes"],
+            "compute_s": compute, "memory_s": memory,
+            "dominant": "compute" if compute >= memory else "memory",
+            "arith_intensity": case["flops"] / max(case["bytes"], 1),
+        })
+    return rows
+
+
+# ======================================================================
+# dry-run artifact analysis
+# ======================================================================
 
 def analyze_record(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
     if "error" in rec or "skipped" in rec:
@@ -77,28 +191,46 @@ def load(path: str) -> List[Dict[str, Any]]:
         return json.load(f)
 
 
-def main(report: List[str],
-         path: str = "dryrun_single_pod.json") -> List[Dict[str, Any]]:
-    if not os.path.exists(path):
-        report.append(f"# Roofline: {path} missing — run "
-                      "`python -m repro.launch.dryrun --all --out {path}`")
-        return []
-    rows = [r for r in (analyze_record(x) for x in load(path)) if r]
-    report.append("# Roofline terms per (arch × shape), single-pod 16×16 "
-                  "(seconds/step/device)")
-    report.append(
-        f"{'arch':<17}{'shape':<13}{'compute':>10}{'memory':>10}"
-        f"{'collect':>10} {'dominant':<11}{'mem_GiB':>8}{'MF/HF':>7}")
-    for r in rows:
+def main(report: List[str], path: str = "dryrun_single_pod.json",
+         smoke: bool = False) -> Dict[str, Any]:
+    backend = jax.default_backend()
+    krows = run_kernels(smoke=smoke)
+    report.append(f"# Roofline: kernels executed on backend={backend} "
+                  "(CPU = interpret/jnp fallbacks; wall times are "
+                  "regression receipts, analytic terms are the roofline)")
+    report.append(f"{'kernel':<24}{'shape':<26}{'wall_ms':>9}"
+                  f"{'compute':>10}{'memory':>10} {'dominant':<8}{'AI':>7}")
+    for r in krows:
         report.append(
-            f"{r['arch']:<17}{r['shape']:<13}{r['compute_s']:>10.2e}"
-            f"{r['memory_s']:>10.2e}{r['collective_s']:>10.2e} "
-            f"{r['dominant']:<11}{r['mem_gib_per_dev']:>8.1f}"
-            f"{r['flops_ratio']:>7.1f}")
-    return rows
+            f"{r['kernel']:<24}{r['shape']:<26}{r['wall_ms']:>9.2f}"
+            f"{r['compute_s']:>10.2e}{r['memory_s']:>10.2e} "
+            f"{r['dominant']:<8}{r['arith_intensity']:>7.1f}")
+
+    rows: List[Dict[str, Any]] = []
+    if os.path.exists(path):
+        rows = [r for r in (analyze_record(x) for x in load(path)) if r]
+        report.append("# Roofline terms per (arch × shape), single-pod "
+                      "16×16 (seconds/step/device)")
+        report.append(
+            f"{'arch':<17}{'shape':<13}{'compute':>10}{'memory':>10}"
+            f"{'collect':>10} {'dominant':<11}{'mem_GiB':>8}{'MF/HF':>7}")
+        for r in rows:
+            report.append(
+                f"{r['arch']:<17}{r['shape']:<13}{r['compute_s']:>10.2e}"
+                f"{r['memory_s']:>10.2e}{r['collective_s']:>10.2e} "
+                f"{r['dominant']:<11}{r['mem_gib_per_dev']:>8.1f}"
+                f"{r['flops_ratio']:>7.1f}")
+    else:
+        report.append(f"# dry-run artifact {path} missing — run "
+                      f"`python -m repro.launch.dryrun --all --out {path}` "
+                      "for the (arch × shape) table")
+    return {"backend": backend, "kernels": krows, "dryrun": rows,
+            "peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "link_bw": LINK_BW}
 
 
 if __name__ == "__main__":
     out: List[str] = []
-    main(out)
+    metrics = main(out)
     print("\n".join(out))
+    from benchmarks import _bench
+    print(f"(wrote {_bench.emit('roofline', metrics)})")

@@ -86,21 +86,26 @@ def measure(scenario: str, payload: int, seed: int = 0,
     return sim.run_process(run(), until=sim.now + 36000)
 
 
-def main(report: List[str], smoke: bool = False) -> None:
+def main(report: List[str], smoke: bool = False) -> Dict[str, object]:
     scenarios = ["local_same_host"] if smoke else list(SCENARIOS)
     concurrency = 100 if smoke else CONCURRENCY
     report.append("# Table 1 — RPC throughput, "
                   f"{concurrency} concurrent calls (QPS)")
     report.append(f"{'scenario':<18} {'payload':>8} {'sim_qps':>9} "
                   f"{'paper_qps':>9} {'ratio':>6}")
+    rows = []
     for scenario in scenarios:
         for payload, col in ((128, 0), (256 * 1024, 1)):
             qps = measure(scenario, payload, concurrency=concurrency)
             paper = PAPER_TABLE1[scenario][col]
+            rows.append({"scenario": scenario, "payload": payload,
+                         "sim_qps": qps, "paper_qps": paper,
+                         "ratio": qps / paper})
             report.append(f"{scenario:<18} {payload:>8} {qps:>9.0f} "
                           f"{paper:>9} {qps / paper:>6.2f}")
     if smoke:
         report.append("smoke: OK")
+    return {"concurrency": concurrency, "rows": rows}
 
 
 if __name__ == "__main__":

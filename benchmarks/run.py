@@ -1,6 +1,8 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--skip roofline,...]
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python -m benchmarks.run --require-bench
 
 Sections:
     table1      RPC throughput (paper Table 1)
@@ -10,63 +12,107 @@ Sections:
     cdn         model dissemination via Bitswap (Fig. 1-2/3)
     delta       per-tensor delta sync (v2 manifests, bytes ∝ churn)
     shifted     shifted-edit delta (CDC vs fixed chunk boundary stability)
+    quant       int8_block wire quantization: sync bytes + codec throughput
     crdt        replicated-store convergence (anti-entropy vs delta push)
     crdtsync    v2 delta sync bytes vs full-state, push latency, v1 interop
     shards      sharded inference + failover (Fig. 1-4)
     serving     continuous batching: N concurrent clients, kill, pressure
-    roofline    arch × shape roofline terms from the dry-run artifacts
+    roofline    kernels executed + arch × shape roofline terms
+    decodestep  fused paged-decode vs per-slot loop, int8 vs fp32 KV cache
 
-Also emits a machine-readable ``name,us_per_call,derived`` CSV per section,
-and — for any section that returns a metrics dict — ``BENCH_<name>.json``
-at the repo root.
+Every section returns a metrics dict.  Sections are grouped into BENCH
+artifacts (several sections can share one file, keyed by section name);
+the orchestrator writes ``BENCH_<group>.json`` at the repo root for each
+group that ran.  ``--smoke`` forwards ``smoke=True`` to sections that
+accept it; ``--require-bench`` skips running anything and just verifies
+that every expected ``BENCH_*.json`` artifact exists (exit 1 listing the
+missing ones) — the CI receipts gate.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import os
 import sys
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
-from . import (_bench, crdt_sync, dht_lookup, model_sync, nat_traversal,
-               roofline, rpc_throughput, sharded_inference)
+from . import (_bench, crdt_sync, decode_step, dht_lookup, model_sync,
+               nat_traversal, roofline, rpc_throughput, sharded_inference)
 
-SECTIONS: List[Tuple[str, Callable[[List[str]], None]]] = [
-    ("table1", rpc_throughput.main),
-    ("nat", nat_traversal.main),
-    ("natmatrix", nat_traversal.main_matrix),
-    ("dht", dht_lookup.main),
-    ("cdn", model_sync.main),
-    ("delta", model_sync.main_delta),
-    ("shifted", model_sync.main_shifted),
-    ("crdt", crdt_sync.main),
-    ("crdtsync", crdt_sync.main_sync),
-    ("shards", sharded_inference.main),
-    ("serving", sharded_inference.main_serving),
-    ("roofline", roofline.main),
+#: section -> (BENCH group, runner).  Groups with ONE section emit the
+#: section's dict directly (standalone scripts write the same shape);
+#: multi-section groups emit {section_name: dict, ...}.
+SECTIONS: List[Tuple[str, str, Callable[..., dict]]] = [
+    ("table1", "rpc_throughput", rpc_throughput.main),
+    ("nat", "nat_traversal", nat_traversal.main),
+    ("natmatrix", "nat_traversal", nat_traversal.main_matrix),
+    ("dht", "dht_lookup", dht_lookup.main),
+    ("cdn", "model_sync", model_sync.main),
+    ("delta", "model_sync", model_sync.main_delta),
+    ("shifted", "model_sync", model_sync.main_shifted),
+    ("quant", "model_sync", model_sync.main_quant),
+    ("crdt", "crdt_sync", crdt_sync.main),
+    ("crdtsync", "crdt_sync", crdt_sync.main_sync),
+    ("shards", "sharded", sharded_inference.main),
+    ("serving", "serving", sharded_inference.main_serving),
+    ("roofline", "roofline", roofline.main),
+    ("decodestep", "decode_step", decode_step.main),
 ]
+
+#: artifacts the --require-bench receipts gate demands at the repo root
+REQUIRED_BENCH = sorted({group for _, group, _ in SECTIONS})
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def require_bench() -> int:
+    """Verify every expected BENCH artifact exists; list what's missing."""
+    missing = [g for g in REQUIRED_BENCH
+               if not os.path.exists(os.path.join(_ROOT, f"BENCH_{g}.json"))]
+    if missing:
+        print("missing benchmark receipts: "
+              + ", ".join(f"BENCH_{g}.json" for g in missing))
+        print("run `PYTHONPATH=src python -m benchmarks.run` to regenerate")
+        return 1
+    print(f"all {len(REQUIRED_BENCH)} BENCH_*.json receipts present")
+    return 0
+
+
+def _call(fn: Callable[..., dict], report: List[str], smoke: bool) -> dict:
+    if smoke and "smoke" in inspect.signature(fn).parameters:
+        return fn(report, smoke=True)
+    return fn(report)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", default="", help="comma-separated sections")
     ap.add_argument("--only", default="", help="comma-separated sections")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scales where sections support it")
+    ap.add_argument("--require-bench", action="store_true",
+                    help="don't run anything; fail if any BENCH_*.json "
+                         "receipt is missing")
     args = ap.parse_args()
+    if args.require_bench:
+        sys.exit(require_bench())
     skip = set(filter(None, args.skip.split(",")))
     only = set(filter(None, args.only.split(",")))
 
     csv_lines = ["name,us_per_call,derived"]
-    for name, fn in SECTIONS:
+    groups: Dict[str, Dict[str, dict]] = {}
+    for name, group, fn in SECTIONS:
         if name in skip or (only and name not in only):
             continue
         report: List[str] = []
         t0 = time.time()
         try:
-            metrics = fn(report)
+            metrics = _call(fn, report, args.smoke)
             status = "ok"
             if isinstance(metrics, dict):
-                path = _bench.emit(name, metrics)
-                report.append(f"(wrote {path})")
+                groups.setdefault(group, {})[name] = metrics
         except Exception as e:  # noqa: BLE001 — keep the harness going
             report.append(f"!! section {name} failed: {e!r}")
             status = "fail"
@@ -74,6 +120,13 @@ def main() -> None:
         print(f"\n===== [{name}] ({dt:.1f}s wall) =====")
         print("\n".join(report))
         csv_lines.append(f"{name},{dt * 1e6:.0f},{status}")
+
+    n_group_sections = {g: sum(1 for _, grp, _ in SECTIONS if grp == g)
+                        for g in groups}
+    for group, sections in groups.items():
+        payload = (next(iter(sections.values()))
+                   if n_group_sections[group] == 1 else sections)
+        print(f"(wrote {_bench.emit(group, payload)})")
     print("\n===== CSV =====")
     print("\n".join(csv_lines))
 

@@ -28,7 +28,7 @@ except ImportError:         # standalone: benchmarks/ itself is on sys.path
     import _bench
 
 
-def main(report: List[str]) -> None:
+def main(report: List[str]) -> Dict[str, Any]:
     cfg = get_config("granite-8b").reduced(n_layers=4, d_model=128, vocab=512)
     ops = ops_for(cfg)
     params = ops.init(cfg, jax.random.PRNGKey(0))
@@ -68,9 +68,13 @@ def main(report: List[str]) -> None:
         return out
 
     sim.run_process(one_more(), until=sim.now + 3600)
+    failover_ms = (sim.now - t0) * 1000
     report.append(f"failover token (shard replica killed): "
-                  f"{(sim.now - t0)*1000:.1f} ms "
+                  f"{failover_ms:.1f} ms "
                   f"(failovers={client.stats['failovers']})")
+    return {"gen_time_s": t_gen, "ms_per_token": per_tok * 1000,
+            "failover_ms": failover_ms,
+            "failovers": client.stats["failovers"]}
 
 
 def main_serving(report: List[str], smoke: bool = False) -> Dict[str, Any]:

@@ -10,6 +10,9 @@ Walks through the paper's four scenarios at toy scale:
   4. CRDT replicated store convergence
   5. concurrent serving: continuous batching over a 2-shard × 2-replica
      fleet, with pressure-driven replica spawn on the hot shard
+  5b. the decode hot path: fused paged-attention decode (one weight pass
+     per batch) vs the per-slot loop, int8 KV cache, and int8_block wire
+     quantization for checkpoint sync
   6. a typed RPC service (MethodSpec-declared unary + streaming methods,
      called through a generated stub)
 """
@@ -226,6 +229,61 @@ def main():
           f"{sess / max(1, steps):.1f} sessions/batched step; "
           f"pressure spawned {mon.stats['spawned']} replica(s) on "
           f"{sv_fleet.peers[5].host.name} ==")
+
+    # -- 5b. fast decode + quantized hot paths --------------------------------
+    # Each decode step above is ONE fused paged-attention pass over every
+    # live session: the weights are read once per batch, and each slot's
+    # KV pages are gathered from a shared pool (the Pallas kernel in
+    # kernels/paged_attention.py; CPU runs the jnp formulation).  The
+    # per-slot fallback pays a full weight read per session per token —
+    # at decode, which is bandwidth-bound, that is the whole difference
+    # (measured 6.4x tokens/s at 8 sessions: BENCH_decode_step.json).
+    # `kv_dtype="int8"` stores pool pages quantized with per-page
+    # per-kv-head scales: 0.38x the fp32 cache bytes, greedy tokens
+    # identical at this scale.
+    from repro.core.simnet import Sim as _Sim
+    from repro.serving.batch import BatchEngine
+    from repro.serving.sharded import ShardModule
+
+    perf = {}
+    for label, kw in (("fused", {}), ("unfused", {"fused": False}),
+                      ("int8", {"kv_dtype": "int8"})):
+        dsim = _Sim(seed=5)
+        eng = BatchEngine(
+            ShardModule(scfg, sparams, (0, scfg.n_layers), is_first=True,
+                        is_last=True), dsim, n_slots=4, page_size=8, **kw)
+        toks = {}
+        for i in range(4):
+            out, _ = dsim.run_process(eng.open(f"s{i}", prompts[i], 64))
+            toks[f"s{i}"] = int(np.argmax(out[0]))
+        cost, n_tok = 0.0, 0
+        for _ in range(16):
+            out, served, c = eng.step(
+                list(toks), np.asarray([toks[s] for s in toks], np.int32))
+            for sid, row in zip(served, out):
+                toks[sid] = int(np.argmax(row))
+            cost += c
+            n_tok += len(served)
+        perf[label] = (n_tok / cost, eng.kv_bytes())
+    print(f"== 5b. decode: fused {perf['fused'][0]:.0f} tok/s vs per-slot "
+          f"{perf['unfused'][0]:.0f} "
+          f"({perf['fused'][0] / perf['unfused'][0]:.1f}x); int8 KV pool "
+          f"{perf['int8'][1] / perf['fused'][1]:.2f}x fp32 cache bytes ==")
+
+    # Checkpoint sync can quantize the *wire* the same way: int8 per
+    # 4096-element block with f32 scale+zero-point, per-tensor parts, the
+    # fp32 master staying lossless on the publisher.  Composed with the
+    # delta plane (only churned tensors move at all), a 10%-churn sync
+    # round moves ~0.25x the fp32 bytes (BENCH_model_sync.json).
+    from repro.checkpoint import params_to_parts
+
+    fp_bytes = sum(len(r) for _, r, _ in params_to_parts(sparams))
+    q_bytes = sum(len(r) for _, r, _ in
+                  params_to_parts(sparams, quant="int8_block"))
+    print(f"== 5c. wire quantization: int8_block parts are "
+          f"{q_bytes / fp_bytes:.2f}x the fp32 encoding "
+          f"({fp_bytes // 1024} KiB -> {q_bytes // 1024} KiB), "
+          f"error <= block_range/508 per element ==")
 
     # -- 6. typed RPC service -------------------------------------------------
     # Declare methods with MethodSpecs: wire name, codecs (which compute the

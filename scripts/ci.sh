@@ -2,12 +2,32 @@
 # Reproducible test entrypoint: RPC throughput smoke + content-plane delta
 # smoke + tier-1 suite (kernel tests run as their own gating step so a
 # kernel failure still shows the rest of the suite's results).
-#   ./scripts/ci.sh                 run everything
-#   SKIP_BENCH=1 ./scripts/ci.sh    tests only
+#   ./scripts/ci.sh                  run everything
+#   ./scripts/ci.sh --kernel-smoke   fast-decode + quantization gates only
+#   SKIP_BENCH=1 ./scripts/ci.sh     tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+kernel_smoke() {
+    # fused paged-decode must beat the per-slot loop >=2x in tokens/s,
+    # the int8 KV pool must hold <=0.55x the fp32 cache bytes with the
+    # max logit deviation inside the stated bound (greedy path identical)
+    python benchmarks/decode_step.py --kernel-smoke
+    # int8_block wire quantization: a delta-sync round at 10% churn must
+    # move <=0.3x the bytes the fp32 encoding moves (scales+zero-points
+    # included), with the fp32 master staying lossless locally
+    python benchmarks/model_sync.py --quant-smoke
+    # receipts gate: every benchmark section must have emitted its
+    # machine-readable BENCH_<group>.json artifact at the repo root
+    python -m benchmarks.run --require-bench
+}
+
+if [ "${1:-}" = "--kernel-smoke" ]; then
+    kernel_smoke
+    exit 0
+fi
 
 if [ -z "${SKIP_BENCH:-}" ]; then
     python benchmarks/rpc_throughput.py --smoke
@@ -32,6 +52,9 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # when a busy provider is killed mid-run (migration replays prefill on
     # a surviving replica), and pressure must spawn a hot-shard replica
     python benchmarks/sharded_inference.py --serve-smoke
+    # fast-decode + quantized-sync gates (also runnable standalone via
+    # ./scripts/ci.sh --kernel-smoke)
+    kernel_smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

@@ -179,7 +179,8 @@ def chunk_spec_of(node: LatticaNode, root: CID) -> Optional[ChunkSpec]:
 
 def publish_checkpoint(node: LatticaNode, params: Any, step: int,
                        fleet: str, base: Optional[CID] = None,
-                       spec: Optional[ChunkSpec] = None) -> Generator:
+                       spec: Optional[ChunkSpec] = None,
+                       quant: Optional[str] = None) -> Generator:
     """Per-tensor chunk → provide on the DHT → announce → record in CRDT.
 
     Each pytree leaf becomes its own sub-DAG under a hierarchical (v2) root
@@ -190,14 +191,17 @@ def publish_checkpoint(node: LatticaNode, params: Any, step: int,
     manifest meta is reused so boundaries — and therefore unchanged-content
     CIDs — reproduce exactly.  With ``base`` (the previous version's root),
     delta stats (new vs reused blocks/bytes) are embedded in the
-    announcement meta.  Returns the root CID.
+    announcement meta.  ``quant="int8_block"`` publishes large float
+    tensors block-quantized (~4x fewer bytes on top of delta reuse; the
+    local fp32 master is untouched) — fetchers dequantize transparently
+    from the part meta.  Returns the root CID.
     """
     reg = CheckpointRegistry(node, fleet)
     if spec is None and base is not None:
         spec = chunk_spec_of(node, base)
     if spec is None:
         spec = ChunkSpec()
-    parts = params_to_parts(params)
+    parts = params_to_parts(params, quant=quant)
     dag = build_tree_dag(parts, spec=spec)
     delta = None
     if base is not None:

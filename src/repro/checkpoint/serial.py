@@ -13,6 +13,17 @@ Two granularities:
   path: each tensor becomes its own sub-DAG, so a new version's root
   manifest reuses the sub-root CIDs of unchanged tensors verbatim.
 
+Both granularities accept ``quant="int8_block"``: large float leaves ship
+as per-block scale+zero-point int8 (``_QUANT_BLOCK`` elements per block,
+asymmetric: ``x̂ = q*scale + zp``, elementwise error ≤ block_range/508) —
+~4x fewer bytes on the wire for bounded error.  Quantization happens at
+*encode* time only; the caller's fp32 tree is untouched, so the lossless
+master stays local and re-publishing at full precision needs no state.
+Quantized flat blobs carry the ``LCK3`` magic (5-field index entries);
+``LCK2``/``LCK1`` blobs and unquantized parts decode exactly as before,
+and ``quant=None`` output is byte-identical to pre-LCK3 releases, so
+existing CIDs are stable.
+
 Everything decoded here can arrive off the swarm, i.e. from untrusted
 peers, so the wire formats are deliberately dumb: JSON for the index and
 per-leaf dtype/shape meta, raw C-order bytes for tensor data.  Earlier
@@ -26,7 +37,7 @@ from __future__ import annotations
 
 import json
 import struct
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -35,6 +46,12 @@ from repro.core.safepickle import restricted_loads
 
 _MAGIC = b"LCK1"    # legacy: pickled index (decoded via the safe shim only)
 _MAGIC2 = b"LCK2"   # current: JSON index
+_MAGIC3 = b"LCK3"   # JSON index with per-entry codec field (quantized blobs)
+
+_QUANT_BLOCK = 4096       # elements per int8_block quantization group
+_QUANT_MIN_SIZE = 1024    # leaves smaller than this ship unquantized
+
+_QUANT_MODES = (None, "int8_block")
 
 
 def _safe_pickle_loads(raw: bytes) -> Any:
@@ -77,66 +94,189 @@ def _path_str(path: Tuple) -> str:
     return "/".join(parts)
 
 
-def params_to_bytes(params: Any) -> bytes:
+def _quant_blocks(n: int, block: int) -> int:
+    return -(-n // block)
+
+
+def _quantizable(arr: np.ndarray) -> bool:
+    return arr.dtype.kind == "f" and arr.size >= _QUANT_MIN_SIZE
+
+
+def _quant_int8_block(arr: np.ndarray, block: int = _QUANT_BLOCK) -> bytes:
+    """Asymmetric per-block int8: payload = int8 values ‖ f32 scales ‖ f32
+    zero-points.  ``x̂ = q*scale + zp`` with |x̂-x| ≤ scale/2 =
+    block_range/508 elementwise."""
+    flat = np.ascontiguousarray(arr, dtype=np.float32).reshape(-1)
+    n = flat.size
+    nb = _quant_blocks(n, block)
+    padded = np.zeros(nb * block, np.float32)
+    padded[:n] = flat
+    blocks = padded.reshape(nb, block)
+    mx = blocks.max(axis=1)
+    mn = blocks.min(axis=1)
+    zp = ((mx + mn) * 0.5).astype(np.float32)
+    scale = np.where(mx > mn, (mx - mn) / 254.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint((blocks - zp[:, None]) / scale[:, None]),
+                -127, 127).astype(np.int8)
+    return q.reshape(-1)[:n].tobytes() + scale.tobytes() + zp.tobytes()
+
+
+def _dequant_int8_block(raw: bytes, shape: Tuple[int, ...],
+                        block: int) -> np.ndarray:
+    """Inverse of :func:`_quant_int8_block` (raw is peer-supplied)."""
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    if not isinstance(block, int) or block <= 0:
+        raise ValueError(f"bad quant block {block!r}")
+    nb = _quant_blocks(n, block)
+    if len(raw) != n + 8 * nb:
+        raise ValueError(f"bad int8_block payload: {len(raw)} bytes for "
+                         f"{n} values in {nb} blocks")
+    q = np.frombuffer(raw, np.int8, count=n)
+    scale = np.frombuffer(raw, np.float32, count=nb, offset=n)
+    zp = np.frombuffer(raw, np.float32, count=nb, offset=n + 4 * nb)
+    padded = np.zeros(nb * block, np.float32)
+    padded[:n] = q
+    out = padded.reshape(nb, block) * scale[:, None] + zp[:, None]
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def _encode_leaf(arr: np.ndarray, quant: Optional[str],
+                 ) -> Tuple[bytes, Optional[Dict[str, Any]]]:
+    """One leaf's wire payload and its codec descriptor (None = raw)."""
+    if quant == "int8_block" and _quantizable(arr):
+        return (_quant_int8_block(arr),
+                {"codec": "int8_block", "block": _QUANT_BLOCK})
+    return np.ascontiguousarray(arr).tobytes(), None
+
+
+def _decode_leaf(raw: bytes, dt: np.dtype, shape: Tuple[int, ...],
+                 enc: Optional[Dict[str, Any]]) -> np.ndarray:
+    if enc is None:
+        count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        return np.frombuffer(raw, dtype=dt, count=count).reshape(shape)
+    if not isinstance(enc, dict) or enc.get("codec") != "int8_block":
+        raise ValueError(f"unknown leaf codec {enc!r}")
+    return _dequant_int8_block(raw, shape, enc.get("block")).astype(dt)
+
+
+def _sorted_leaves(params: Any) -> List[Tuple[str, np.ndarray]]:
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
-    entries = sorted(
-        ((_path_str(path), np.asarray(leaf)) for path, leaf in leaves_with_paths),
-        key=lambda kv: kv[0])
-    index: List[Tuple[str, str, List[int], int]] = []
-    blobs: List[bytes] = []
+    return sorted(((_path_str(path), np.asarray(leaf))
+                   for path, leaf in leaves_with_paths),
+                  key=lambda kv: kv[0])
+
+
+def params_to_bytes(params: Any, quant: Optional[str] = None) -> bytes:
+    if quant not in _QUANT_MODES:
+        raise ValueError(f"unknown quant mode {quant!r}")
+    entries = _sorted_leaves(params)
+    # Raw leaves are copied straight into the output buffer via frombuffer
+    # views (one copy, no intermediate tobytes); this loop is the flat-blob
+    # encode hot path for multi-GB checkpoints.
+    index: List[Any] = []
+    sizes: List[int] = []
+    encs: List[Optional[Dict[str, Any]]] = []
+    payloads: List[Optional[bytes]] = []
     off = 0
     for name, arr in entries:
-        raw = np.ascontiguousarray(arr).tobytes()
-        index.append((name, str(arr.dtype), list(arr.shape), off))
-        blobs.append(raw)
-        off += len(raw)
+        if quant == "int8_block" and _quantizable(arr):
+            raw = _quant_int8_block(arr)
+            enc: Optional[Dict[str, Any]] = {"codec": "int8_block",
+                                             "block": _QUANT_BLOCK}
+        else:
+            raw, enc = None, None
+        size = arr.nbytes if raw is None else len(raw)
+        if quant is None:
+            index.append((name, str(arr.dtype), list(arr.shape), off))
+        else:
+            index.append((name, str(arr.dtype), list(arr.shape), off, enc))
+        sizes.append(size)
+        encs.append(enc)
+        payloads.append(raw)
+        off += size
     head = json.dumps(index, separators=(",", ":")).encode("utf-8")
-    return b"".join([_MAGIC2, struct.pack(">I", len(head)), head] + blobs)
+    magic = _MAGIC2 if quant is None else _MAGIC3
+    prefix = magic + struct.pack(">I", len(head)) + head
+    buf = bytearray(len(prefix) + off)
+    buf[:len(prefix)] = prefix
+    pos = len(prefix)
+    for (name, arr), size, raw in zip(entries, sizes, payloads):
+        if raw is None:
+            view = np.frombuffer(buf, dtype=arr.dtype, count=arr.size,
+                                 offset=pos).reshape(arr.shape)
+            np.copyto(view, arr)
+        else:
+            buf[pos:pos + size] = raw
+        pos += size
+    return bytes(buf)
 
 
-def encode_leaf_meta(dtype: str, shape: Sequence[int]) -> bytes:
-    """Safe fixed encoding of a tensor's ``(dtype, shape)`` for v2 manifest
-    entry meta: compact JSON, deterministic, and decodable without pickle."""
-    return json.dumps({"dtype": dtype, "shape": list(shape)},
-                      separators=(",", ":"), sort_keys=True).encode("utf-8")
+def encode_leaf_meta(dtype: str, shape: Sequence[int],
+                     enc: Optional[Dict[str, Any]] = None) -> bytes:
+    """Safe fixed encoding of a tensor's ``(dtype, shape[, codec])`` for v2
+    manifest entry meta: compact JSON, deterministic, decodable without
+    pickle.  ``enc=None`` output is byte-identical to pre-quant releases."""
+    obj: Dict[str, Any] = {"dtype": dtype, "shape": list(shape)}
+    if enc is not None:
+        obj["enc"] = enc
+    return json.dumps(obj, separators=(",", ":"),
+                      sort_keys=True).encode("utf-8")
 
 
-def decode_leaf_meta(meta: bytes) -> Tuple[np.dtype, Tuple[int, ...]]:
-    """Decode entry meta from either the JSON encoding or (shim) a legacy
-    primitive-only pickle; raises ``ValueError`` on anything else."""
+def _decode_leaf_meta_full(meta: bytes,
+                           ) -> Tuple[np.dtype, Tuple[int, ...],
+                                      Optional[Dict[str, Any]]]:
     if meta[:1] == b"{":
         try:
             obj = json.loads(meta.decode("utf-8"))
             dtype, shape = obj["dtype"], obj["shape"]
+            enc = obj.get("enc")
         except (UnicodeDecodeError, ValueError, KeyError, TypeError) as e:
             raise ValueError(f"bad leaf meta {meta!r}") from e
     else:
         decoded = _safe_pickle_loads(meta)
         if not (isinstance(decoded, (tuple, list)) and len(decoded) == 2):
             raise ValueError(f"bad legacy leaf meta {meta!r}")
-        dtype, shape = decoded[0], list(decoded[1])
-    return _checked_dtype(dtype), _checked_shape(shape)
+        dtype, shape, enc = decoded[0], list(decoded[1]), None
+    if enc is not None and (not isinstance(enc, dict)
+                            or enc.get("codec") != "int8_block"):
+        raise ValueError(f"unknown leaf codec in meta {meta!r}")
+    return _checked_dtype(dtype), _checked_shape(shape), enc
 
 
-def params_to_parts(params: Any) -> List[Tuple[str, bytes, bytes]]:
-    """Per-leaf parts ``(path, raw bytes, encoded (dtype, shape))``, sorted
-    by path — the unit of structural sharing for delta-friendly DAGs."""
-    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
-    entries = sorted(
-        ((_path_str(path), np.asarray(leaf)) for path, leaf in leaves_with_paths),
-        key=lambda kv: kv[0])
-    return [(name, np.ascontiguousarray(arr).tobytes(),
-             encode_leaf_meta(str(arr.dtype), arr.shape))
-            for name, arr in entries]
+def decode_leaf_meta(meta: bytes) -> Tuple[np.dtype, Tuple[int, ...]]:
+    """Decode entry meta from the JSON encoding (with or without a codec
+    field) or (shim) a legacy primitive-only pickle; raises ``ValueError``
+    on anything else."""
+    dt, shape, _ = _decode_leaf_meta_full(meta)
+    return dt, shape
+
+
+def params_to_parts(params: Any,
+                    quant: Optional[str] = None) -> List[Tuple[str, bytes, bytes]]:
+    """Per-leaf parts ``(path, payload bytes, encoded meta)``, sorted by
+    path — the unit of structural sharing for delta-friendly DAGs.
+
+    ``quant="int8_block"`` ships large float leaves block-quantized (meta
+    carries the codec); small/integer leaves and ``quant=None`` parts are
+    raw bytes with meta identical to previous releases, so unchanged
+    tensors keep their sub-DAG CIDs."""
+    if quant not in _QUANT_MODES:
+        raise ValueError(f"unknown quant mode {quant!r}")
+    parts = []
+    for name, arr in _sorted_leaves(params):
+        raw, enc = _encode_leaf(arr, quant)
+        parts.append((name, raw,
+                      encode_leaf_meta(str(arr.dtype), arr.shape, enc)))
+    return parts
 
 
 def leaf_from_part(raw: bytes, meta: bytes) -> np.ndarray:
     """Decode one part's bytes back into an ndarray using its dtype/shape
-    meta (the v2 manifest entry's ``meta`` field).  ``meta`` and ``raw`` are
-    both peer-supplied; malformed input raises ``ValueError``."""
-    dt, shape = decode_leaf_meta(meta)
-    count = int(np.prod(shape, dtype=np.int64)) if shape else 1
-    return np.frombuffer(raw, dtype=dt, count=count).reshape(shape)
+    (+ optional codec) meta.  ``meta`` and ``raw`` are both peer-supplied;
+    malformed input raises ``ValueError``."""
+    dt, shape, enc = _decode_leaf_meta_full(meta)
+    return _decode_leaf(raw, dt, shape, enc)
 
 
 def params_from_parts(flat: Dict[str, np.ndarray], like: Any = None) -> Any:
@@ -163,7 +303,7 @@ def _decode_index(data: bytes) -> Tuple[List, int]:
     if 8 + hlen > len(data):
         raise ValueError("truncated checkpoint index")
     head = data[8:8 + hlen]
-    if magic == _MAGIC2:
+    if magic in (_MAGIC2, _MAGIC3):
         try:
             index = json.loads(head.decode("utf-8"))
         except (UnicodeDecodeError, ValueError) as e:
@@ -180,17 +320,26 @@ def _decode_index(data: bytes) -> Tuple[List, int]:
 def params_from_bytes(data: bytes, like: Any = None) -> Any:
     index, base = _decode_index(data)
     flat: Dict[str, np.ndarray] = {}
-    for entry in index:
-        if not (isinstance(entry, (list, tuple)) and len(entry) == 4):
+    for i, entry in enumerate(index):
+        if not (isinstance(entry, (list, tuple)) and len(entry) in (4, 5)):
             raise ValueError(f"bad checkpoint index entry {entry!r}")
-        name, dtype, shape, off = entry
+        name, dtype, shape, off = entry[:4]
+        enc = entry[4] if len(entry) == 5 else None
         if not isinstance(name, str) or not isinstance(off, int) or off < 0:
             raise ValueError(f"bad checkpoint index entry {entry!r}")
         dt = _checked_dtype(dtype)
         shp = _checked_shape(shape)
-        arr = np.frombuffer(
-            data, dtype=dt, offset=base + off,
-            count=int(np.prod(shp, dtype=np.int64)) if shp else 1,
-        ).reshape(shp)
+        if enc is None:
+            count = int(np.prod(shp, dtype=np.int64)) if shp else 1
+            arr = np.frombuffer(data, dtype=dt, offset=base + off,
+                                count=count).reshape(shp)
+        else:
+            # quantized entry: payload runs to the next entry's offset (the
+            # index is offset-ordered) or the end of the blob
+            end = (index[i + 1][3] if i + 1 < len(index) else
+                   len(data) - base)
+            if not isinstance(end, int) or end < off:
+                raise ValueError(f"bad checkpoint index entry {entry!r}")
+            arr = _decode_leaf(data[base + off:base + end], dt, shp, enc)
         flat[name] = arr
     return params_from_parts(flat, like)

@@ -112,47 +112,105 @@ def _gear_table() -> np.ndarray:
     return _GEAR_TABLE
 
 
-def _cdc_candidates(data: bytes, bits: int) -> np.ndarray:
-    """Positions ``i`` whose gear hash over the preceding ``bits`` bytes
-    satisfies the boundary condition — each fires with probability
-    ~``2**-bits``, giving candidate spacing ~``2**bits`` bytes.
+def _windowed_hash(g: np.ndarray, width: int) -> np.ndarray:
+    """``h[i] = Σ_{k < width} g[i-k] << k`` (mod 2**32, truncated at the
+    array start) for every position at once.
 
-    The gear recurrence ``h = (h << 1) + G[b]`` means bit ``k`` of ``h`` only
-    sees the last ``k+1`` bytes; since the mask checks the low ``bits`` bits,
-    the sum can be truncated to ``bits`` shifted adds (mod 2**32 — carries
-    into discarded high bits never flow back down) and vectorized.  The scan
-    runs in overlapping slabs: a position only needs the ``bits-1`` bytes
-    before it, so each slab recomputes that overlap and peak temporaries
-    stay ~10x the slab size instead of scaling with the whole part.
+    Built by window doubling instead of ``width`` shifted adds: a window
+    sum of size ``w+v`` is ``W_w[i] + (W_v[i-w] << w)``, so power-of-two
+    window sums compose along the binary decomposition of ``width`` —
+    ~``2*log2(width)`` vectorized passes over the slab instead of
+    ``width``.  Bitwise identical to the naive accumulation (uint32
+    wraparound is associative/commutative), so boundaries never move.
     """
+    n = len(g)
+    h = np.zeros(n, dtype=np.uint32)
+    if n == 0:
+        return h
+    width = min(width, n)       # terms past the array start don't exist
+    p = g.astype(np.uint32)     # power-of-two window sums, starting at 1
+    pw = 1
+    done = 0                    # terms k < done are accumulated into h
+    rem = width
+    while rem:
+        if rem & 1:
+            h[done:] += p[:n - done] << np.uint32(done)
+            done += pw
+        rem >>= 1
+        if rem:
+            p2 = p.copy()
+            if n > pw:
+                p2[pw:] += p[:n - pw] << np.uint32(pw)
+            p = p2
+            pw *= 2
+    return h
+
+
+def _cdc_candidates(data: bytes, bits: int, norm: int = 0,
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Boundary-candidate positions as ``(strict, loose)`` arrays: the
+    strict mask tests the low ``bits+norm`` bits (fires ~every
+    ``2**(bits+norm)`` bytes), the loose mask ``bits-norm``.  ``norm=0``
+    returns the same array twice — the legacy single-mask behavior.
+
+    The gear recurrence ``h = (h << 1) + G[b]`` means bit ``k`` of ``h``
+    only sees the last ``k+1`` bytes, so a mask of ``m`` low bits only
+    needs the window sum of the last ``m`` bytes (carries flow strictly
+    upward, mod-2**m truncation is exact).  The same property makes one
+    scan serve both masks: the low ``bits-norm`` bits of the wide-window
+    hash equal the narrow-window hash's, so the loose candidates fall out
+    of the strict scan for free — and a ``norm>0`` scan stays
+    gear-table-compatible with legacy ``norm=0`` boundaries.  The scan
+    runs in overlapping slabs: a position only needs the window before
+    it, so each slab recomputes that overlap and peak temporaries stay
+    ~10x the slab size instead of scaling with the whole part.
+    """
+    bits_s = min(bits + norm, 31)
+    bits_l = max(bits - norm, 1)
     buf = np.frombuffer(data, dtype=np.uint8)
     table = _gear_table()
-    mask = np.uint32((1 << bits) - 1)
-    out: List[np.ndarray] = []
+    mask_s = np.uint32((1 << bits_s) - 1)
+    mask_l = np.uint32((1 << bits_l) - 1)
+    outs: List[np.ndarray] = []
+    outl: List[np.ndarray] = []
     for start in range(0, len(data), _CDC_SLAB):
-        lo = max(start - (bits - 1), 0)
+        lo = max(start - (bits_s - 1), 0)
         g = table[buf[lo:start + _CDC_SLAB]]
-        h = np.zeros(len(g), dtype=np.uint32)
-        for k in range(min(bits, len(g))):
-            h[k:] += g[:len(g) - k] << np.uint32(k)
-        cand = np.nonzero((h & mask) == mask)[0] + lo
-        out.append(cand[cand >= start])    # overlap belongs to the prior slab
-    return np.concatenate(out) if out else np.zeros(0, dtype=np.int64)
+        h = _windowed_hash(g, bits_s)
+        for mask, out in (((mask_s, outs),) if norm == 0 else
+                          ((mask_s, outs), (mask_l, outl))):
+            cand = np.nonzero((h & mask) == mask)[0] + lo
+            out.append(cand[cand >= start])   # overlap → the prior slab
+    strict = (np.concatenate(outs) if outs else np.zeros(0, dtype=np.int64))
+    if norm == 0:
+        return strict, strict
+    loose = (np.concatenate(outl) if outl else np.zeros(0, dtype=np.int64))
+    return strict, loose
 
 
 def cdc_cut_points(data: bytes, min_size: int, avg_size: int,
-                   max_size: int) -> List[int]:
+                   max_size: int, norm: int = 0) -> List[int]:
     """Boundary offsets (exclusive chunk ends, last == ``len(data)``) for
     content-defined chunking.  Every chunk is in ``[min_size, max_size]``
     except possibly the final tail.  Boundaries depend only on nearby
     content, so an insertion re-synchronizes at the next surviving candidate
-    instead of cascading through the rest of the buffer."""
+    instead of cascading through the rest of the buffer.
+
+    ``norm`` enables FastCDC-style normalized chunking: below ``avg_size``
+    only a *stricter* mask (``norm`` extra bits) may cut, past it a
+    *looser* one — chunk sizes concentrate around the average instead of
+    following the bare geometric distribution, which shrinks both the
+    tiny-chunk overhead tail and the max-size forced cuts.  ``norm=0``
+    reproduces the single-mask boundaries of earlier releases exactly.
+    """
     n = len(data)
     if n <= min_size:
         return [n]
     bits = min(max(avg_size.bit_length() - 1, 6), _CDC_MAX_BITS)
+    strict, loose = _cdc_candidates(data, bits, norm)
     # boundary *offsets*: a candidate at byte i ends a chunk after i
-    cand = _cdc_candidates(data, bits) + 1
+    strict = strict + 1
+    loose = loose + 1 if norm else strict
     cuts: List[int] = []
     last = 0
     while last < n:
@@ -160,9 +218,17 @@ def cdc_cut_points(data: bytes, min_size: int, avg_size: int,
             cuts.append(n)
             break
         hi_limit = min(last + max_size, n)
-        lo = int(np.searchsorted(cand, last + min_size, side="left"))
-        hi = int(np.searchsorted(cand, hi_limit, side="right"))
-        cut = int(cand[lo]) if lo < hi else hi_limit
+        mid = min(last + avg_size, hi_limit)
+        cut = hi_limit
+        i0 = int(np.searchsorted(strict, last + min_size, side="left"))
+        i1 = int(np.searchsorted(strict, mid, side="left"))
+        if i0 < i1:                       # strict mask cut in [min, avg)
+            cut = int(strict[i0])
+        else:
+            j0 = int(np.searchsorted(loose, mid, side="left"))
+            j1 = int(np.searchsorted(loose, hi_limit, side="right"))
+            if j0 < j1:                   # loose mask cut in [avg, max]
+                cut = int(loose[j0])
         cuts.append(cut)
         last = cut
     return cuts
@@ -174,12 +240,15 @@ class ChunkSpec:
 
     ``strategy="fixed"`` slices every ``chunk_size`` bytes; ``strategy="cdc"``
     places boundaries where a rolling gear hash fires, bounded by
-    ``min_size``/``max_size`` around an expected ``avg_size``.  Specs encode
-    to a compact ASCII form (``fixed:262144`` / ``cdc:65536:262144:1048576``)
-    so publishers can record them in manifest meta and a re-publish — or a
-    delta re-publish against a ``base`` version — reproduces identical
-    boundaries, which is the whole point: boundary determinism is what makes
-    unchanged content keep its CIDs.
+    ``min_size``/``max_size`` around an expected ``avg_size``, with
+    ``norm`` extra mask bits of FastCDC-style normalization (0 = the
+    legacy single-mask behavior).  Specs encode to a compact ASCII form
+    (``fixed:262144`` / ``cdc:65536:262144:1048576`` /
+    ``cdc:65536:262144:1048576:2`` when normalized) so publishers can
+    record them in manifest meta and a re-publish — or a delta re-publish
+    against a ``base`` version — reproduces identical boundaries, which is
+    the whole point: boundary determinism is what makes unchanged content
+    keep its CIDs.
     """
 
     strategy: str = "fixed"
@@ -187,13 +256,19 @@ class ChunkSpec:
     min_size: int = CHUNK_SIZE // 4
     avg_size: int = CHUNK_SIZE
     max_size: int = CHUNK_SIZE * 4
+    norm: int = 0
 
     def __post_init__(self) -> None:
         if self.strategy not in ("fixed", "cdc"):
             raise ValueError(f"unknown chunking strategy {self.strategy!r}")
+        if not isinstance(self.norm, int) or self.norm < 0:
+            raise ValueError(f"norm must be a non-negative int, got "
+                             f"{self.norm!r}")
         if self.strategy == "fixed":
             if self.chunk_size <= 0:
                 raise ValueError("chunk_size must be positive")
+            if self.norm:
+                raise ValueError("norm only applies to cdc chunking")
         else:
             if not 0 < self.min_size <= self.avg_size <= self.max_size:
                 raise ValueError(
@@ -206,11 +281,12 @@ class ChunkSpec:
 
     @classmethod
     def cdc(cls, avg_size: int = 64 * 1024, min_size: Optional[int] = None,
-            max_size: Optional[int] = None) -> "ChunkSpec":
+            max_size: Optional[int] = None, norm: int = 0) -> "ChunkSpec":
         return cls(strategy="cdc", chunk_size=avg_size,
                    min_size=min_size if min_size is not None else avg_size // 4,
                    avg_size=avg_size,
-                   max_size=max_size if max_size is not None else avg_size * 4)
+                   max_size=max_size if max_size is not None else avg_size * 4,
+                   norm=norm)
 
     def split(self, data: bytes) -> List[bytes]:
         if not data:
@@ -218,7 +294,7 @@ class ChunkSpec:
         if self.strategy == "fixed":
             return chunk(data, self.chunk_size)
         cuts = cdc_cut_points(data, self.min_size, self.avg_size,
-                              self.max_size)
+                              self.max_size, norm=self.norm)
         out = []
         last = 0
         for cut in cuts:
@@ -229,6 +305,10 @@ class ChunkSpec:
     def encode(self) -> bytes:
         if self.strategy == "fixed":
             return b"fixed:%d" % self.chunk_size
+        if self.norm:
+            return b"cdc:%d:%d:%d:%d" % (self.min_size, self.avg_size,
+                                         self.max_size, self.norm)
+        # norm=0 keeps the 4-field form older releases wrote and read
         return b"cdc:%d:%d:%d" % (self.min_size, self.avg_size, self.max_size)
 
     @classmethod
@@ -237,10 +317,11 @@ class ChunkSpec:
             fields = raw.decode("ascii").split(":")
             if fields[0] == "fixed" and len(fields) == 2:
                 return cls(strategy="fixed", chunk_size=int(fields[1]))
-            if fields[0] == "cdc" and len(fields) == 4:
-                mn, avg, mx = (int(f) for f in fields[1:])
+            if fields[0] == "cdc" and len(fields) in (4, 5):
+                mn, avg, mx = (int(f) for f in fields[1:4])
+                norm = int(fields[4]) if len(fields) == 5 else 0
                 return cls(strategy="cdc", chunk_size=avg, min_size=mn,
-                           avg_size=avg, max_size=mx)
+                           avg_size=avg, max_size=mx, norm=norm)
         except (UnicodeDecodeError, ValueError) as e:
             raise ValueError(f"bad ChunkSpec encoding {raw!r}") from e
         raise ValueError(f"bad ChunkSpec encoding {raw!r}")

@@ -3,11 +3,16 @@
 * flash_attention — streaming-softmax attention, VMEM (bq,bk) tiles
 * moe_gating      — fused router softmax/top-k/renormalize
 * mlstm_scan      — chunkwise xLSTM matrix-memory recurrence
+* paged_decode_attention — single-query attention over paged KV pools
+  (block-table scalar prefetch, fp32 or int8-per-page storage)
 
-Validated in interpret mode on CPU (tests/test_kernels.py sweeps shapes &
-dtypes against ref.py); on TPU the same pallas_call lowers via Mosaic.
+Validated in interpret mode on CPU (tests/test_kernels.py and
+tests/test_paged_attention.py sweep shapes & dtypes against ref.py); on
+TPU the same pallas_call lowers via Mosaic.
 """
 
-from .ops import flash_attention, mlstm_scan, moe_gating
+from .ops import (flash_attention, mlstm_scan, moe_gating,
+                  paged_decode_attention)
 
-__all__ = ["flash_attention", "moe_gating", "mlstm_scan"]
+__all__ = ["flash_attention", "moe_gating", "mlstm_scan",
+           "paged_decode_attention"]

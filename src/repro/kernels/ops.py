@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention_bhsd
 from .mlstm_scan import mlstm_scan_bhsd
 from .moe_gating import moe_gating_tokens
+from .paged_attention import paged_attention_jnp, paged_attention_pallas
 
 
 def _interpret() -> bool:
@@ -40,6 +41,37 @@ def moe_gating(logits: jax.Array, k: int,
     """logits: (T, E) → (weights (T,k), experts (T,k) int32, probs (T,E))."""
     return moe_gating_tokens(logits.astype(jnp.float32), k,
                              interpret=_interpret())
+
+
+@jax.jit
+def _paged_pallas(q, k_pool, v_pool, block_tables, lengths, k_new, v_new,
+                  k_scales=None, v_scales=None):
+    return paged_attention_pallas(q, k_pool, v_pool, block_tables, lengths,
+                                  k_new, v_new, k_scales, v_scales,
+                                  interpret=_interpret())
+
+
+@jax.jit
+def _paged_jnp(q, k_pool, v_pool, block_tables, lengths, k_new, v_new,
+               k_scales=None, v_scales=None):
+    return paged_attention_jnp(q, k_pool, v_pool, block_tables, lengths,
+                               k_new, v_new, k_scales, v_scales)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                           k_new, v_new, k_scales=None, v_scales=None):
+    """Single-query decode attention over a paged KV pool.
+
+    q (M,H,hd); pools (P,page,Hk,hd) fp32 or int8 (+ (P,Hk) scales);
+    block_tables (M,NP) int32; lengths (M,) cached tokens; k/v_new
+    (M,Hk,hd) the current token (attended at position ``lengths``).
+    On TPU this runs the Pallas kernel (block-table scalar prefetch);
+    on CPU the vectorized gather formulation — interpret-mode pallas is
+    orders of magnitude too slow for a serving hot loop.
+    """
+    fn = _paged_pallas if jax.default_backend() == "tpu" else _paged_jnp
+    return fn(q, k_pool, v_pool, block_tables, lengths, k_new, v_new,
+              k_scales, v_scales)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

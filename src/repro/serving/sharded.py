@@ -51,11 +51,8 @@ from repro.models import decoder
 from repro.models.common import rms_norm
 from repro.models.config import ModelConfig
 
-from .batch import BatchEngine
+from .batch import PEER_FLOPS, BatchEngine
 from .router import LoadAwareRouter, hedged_call
-
-#: assumed accelerator throughput per serving peer, for simulated latency
-PEER_FLOPS = 2.0e11
 
 _session_seq = itertools.count(1)
 
@@ -168,6 +165,12 @@ class ShardModule:
         per_layer = 12 * self.cfg.d_model ** 2
         return 2.0 * tokens * per_layer * self.n_layers
 
+    def weight_bytes(self) -> int:
+        """Bytes the accelerator streams to apply this shard once — what
+        the bandwidth term of the decode cost model charges per pass."""
+        return sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.params))
+
 
 class InferenceService(Service):
     """One pipeline shard's v1 RPC surface.  ``scope`` carries the fleet
@@ -212,10 +215,10 @@ class InferenceV2Service(Service):
     def open(self, payload: Any, ctx: RpcContext) -> Generator:
         self._check_alive()
         eng = self.server.engine
-        out, flops = yield from eng.open(
+        out, cost = yield from eng.open(
             tuple(payload["session"]), payload["x"], payload["max_len"])
         self._check_alive()     # died while we waited for a slot / computed
-        yield ctx.cpu(flops / PEER_FLOPS)
+        yield ctx.cpu(cost)
         return {"x": out}
 
     @unary("infer.v2.step", request=TensorDictCodec(),
@@ -225,8 +228,8 @@ class InferenceV2Service(Service):
         eng = self.server.engine
         sessions = [tuple(s) for s in payload["sessions"]]
         evict = [tuple(s) for s in payload.get("evict", [])]
-        out, served, flops = eng.step(sessions, payload["x"], evict=evict)
-        yield ctx.cpu(flops / PEER_FLOPS)
+        out, served, cost = eng.step(sessions, payload["x"], evict=evict)
+        yield ctx.cpu(cost)
         return {"x": out, "served": served}
 
     @unary("infer.v2.close", request=pickled(floor=96),
@@ -248,7 +251,8 @@ class InferenceV2Service(Service):
 class ShardServer:
     def __init__(self, node: LatticaNode, cfg: ModelConfig, fleet: str,
                  shard_idx: int, module: ShardModule, n_slots: int = 8,
-                 page_size: int = 32, idle_ttl: float = 60.0):
+                 page_size: int = 32, idle_ttl: float = 60.0,
+                 kv_dtype: str = "fp32"):
         self.node = node
         self.cfg = cfg
         self.fleet = fleet
@@ -259,7 +263,7 @@ class ShardServer:
         self.idle_ttl = idle_ttl
         self.stats = {"prefill": 0, "decode": 0, "score": 0}
         self.engine = BatchEngine(module, node.sim, n_slots=n_slots,
-                                  page_size=page_size)
+                                  page_size=page_size, kv_dtype=kv_dtype)
         node.serve(InferenceService(self))
         node.serve(InferenceV2Service(self))
         if not hasattr(node, "shard_servers"):
@@ -785,7 +789,8 @@ class ShardClient:
 
 def deploy_sharded(nodes: List[LatticaNode], cfg: ModelConfig, params: Any,
                    fleet: str, replicas: int = 1, n_slots: int = 8,
-                   page_size: int = 32) -> List[ShardServer]:
+                   page_size: int = 32,
+                   kv_dtype: str = "fp32") -> List[ShardServer]:
     """Place ``n_shards = len(nodes) // replicas`` pipeline shards, each
     replicated ``replicas`` times across the given nodes."""
     n_shards = len(nodes) // replicas
@@ -798,13 +803,14 @@ def deploy_sharded(nodes: List[LatticaNode], cfg: ModelConfig, params: Any,
             module = ShardModule(cfg, parts[i], (lo, hi),
                                  is_first=(i == 0), is_last=(i == n_shards - 1))
             servers.append(ShardServer(node, cfg, fleet, i, module,
-                                       n_slots=n_slots, page_size=page_size))
+                                       n_slots=n_slots, page_size=page_size,
+                                       kv_dtype=kv_dtype))
     return servers
 
 
 def serve_fleet(nodes: List[LatticaNode], cfg: ModelConfig, params: Any,
                 fleet: str, replicas: int = 1, n_slots: int = 8,
-                page_size: int = 32,
+                page_size: int = 32, kv_dtype: str = "fp32",
                 publisher: Optional[LatticaNode] = None) -> Generator:
     """Full serving bring-up: deploy shards, announce DHT providers,
     publish every shard's param sub-DAG + the serving plan into the CRDT
@@ -813,7 +819,8 @@ def serve_fleet(nodes: List[LatticaNode], cfg: ModelConfig, params: Any,
     from .pressure import load_publisher, publish_serving_plan
 
     servers = deploy_sharded(nodes, cfg, params, fleet, replicas=replicas,
-                             n_slots=n_slots, page_size=page_size)
+                             n_slots=n_slots, page_size=page_size,
+                             kv_dtype=kv_dtype)
     for s in servers:
         yield from s.announce()
     n_shards = len(servers) // replicas

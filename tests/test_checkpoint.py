@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint import (load_local, params_from_bytes, params_to_bytes,
-                              save_local)
+from repro.checkpoint import (leaf_from_part, load_local, params_from_bytes,
+                              params_to_bytes, params_to_parts, save_local)
 from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
                                            fetch_latest, publish_checkpoint)
 from repro.configs import get_config
@@ -51,6 +51,121 @@ def test_roundtrip_arbitrary_trees(spec):
     back = params_from_bytes(blob, like=tree)
     for k in tree:
         np.testing.assert_array_equal(tree[k], back[k])
+
+
+def _block_bound(arr, block=4096):
+    """Elementwise error bound of int8_block: per-block range / 508
+    (zero-padding participates in the final block's min/max)."""
+    flat = np.asarray(arr, np.float32).ravel()
+    nb = -(-flat.size // block)
+    padded = np.zeros(nb * block, np.float32)
+    padded[:flat.size] = flat
+    blocks = padded.reshape(nb, block)
+    per_block = (blocks.max(axis=1) - blocks.min(axis=1)) / 508.0
+    return (np.repeat(per_block, block)[:flat.size].reshape(arr.shape)
+            + 1e-7)
+
+
+def _mixed_tree():
+    rng = np.random.default_rng(5)
+    return {
+        "big": (rng.normal(size=(3, 4096 + 123)) * 4.0).astype(np.float32),
+        "odd": rng.normal(size=(4097,)).astype(np.float32),
+        "small": rng.normal(size=(10,)).astype(np.float32),   # < min size
+        "ints": np.arange(2048, dtype=np.int32),              # non-float
+    }
+
+
+def test_int8_block_roundtrip_within_bound():
+    tree = _mixed_tree()
+    blob = params_to_bytes(tree, quant="int8_block")
+    assert blob[:4] == b"LCK3"
+    back = params_from_bytes(blob, like=tree)
+    for key in ("big", "odd"):
+        err = np.abs(back[key] - tree[key])
+        assert (err <= _block_bound(tree[key])).all(), key
+        assert err.max() > 0                       # actually lossy
+    # sub-threshold float and integer leaves ship raw: exact
+    np.testing.assert_array_equal(back["small"], tree["small"])
+    np.testing.assert_array_equal(back["ints"], tree["ints"])
+    # float leaves drop to ~1/4; the raw int leaf keeps its full bytes
+    assert len(blob) < 0.45 * len(params_to_bytes(tree))
+
+
+def test_quant_blob_is_deterministic():
+    tree = _mixed_tree()
+    assert (params_to_bytes(tree, quant="int8_block")
+            == params_to_bytes(tree, quant="int8_block"))
+
+
+def test_unquantized_encoding_is_legacy_lck2():
+    """quant=None must keep writing the exact LCK2 format older releases
+    read (and published CIDs depend on), and old blobs must keep
+    decoding."""
+    tree = _mixed_tree()
+    blob = params_to_bytes(tree)
+    assert blob[:4] == b"LCK2"
+    back = params_from_bytes(blob, like=tree)
+    for k in tree:
+        np.testing.assert_array_equal(back[k], tree[k])
+
+
+def test_rejects_unknown_quant_mode():
+    with pytest.raises(ValueError):
+        params_to_bytes(_mixed_tree(), quant="int4_magic")
+
+
+def test_quantized_parts_decode_per_leaf():
+    """The per-tensor publish path: each part's meta carries the codec, so
+    a fetcher dequantizes leaf-by-leaf without the whole blob."""
+    tree = _mixed_tree()
+    parts = {name: (raw, meta)
+             for name, raw, meta in params_to_parts(tree, quant="int8_block")}
+    assert set(parts) == {"big", "odd", "small", "ints"}
+    for key in ("big", "odd"):
+        got = leaf_from_part(*parts[key])
+        assert (np.abs(got - tree[key]) <= _block_bound(tree[key])).all()
+        assert len(parts[key][0]) < 0.30 * tree[key].nbytes
+    np.testing.assert_array_equal(leaf_from_part(*parts["small"]),
+                                  tree["small"])
+    np.testing.assert_array_equal(leaf_from_part(*parts["ints"]), tree["ints"])
+    # quant=None parts are byte-identical to the historical encoding
+    raw_parts = params_to_parts(tree)
+    for name, raw, meta in raw_parts:
+        assert raw == np.ascontiguousarray(tree[name]).tobytes()
+        assert b"int8_block" not in meta
+
+
+def test_publish_fetch_quantized_over_mesh():
+    """End-to-end RL push with wire quantization: the trainer's fp32
+    master stays local, the edge fetches int8_block parts and dequantizes
+    transparently via part meta."""
+    fleet = make_fleet(6, seed=17)
+    sim = fleet.sim
+    trainer, edge = fleet.peers[0], fleet.peers[-1]
+    _, params = _params()
+
+    def publish():
+        root = yield from publish_checkpoint(trainer, params, 7, "qfleet",
+                                             quant="int8_block")
+        return root
+
+    sim.run_process(publish(), until=sim.now + 600)
+
+    def fetch():
+        yield from edge.sync_crdt_with(trainer.info())
+        step, got = yield from fetch_latest(edge, "qfleet", like=params)
+        return step, got
+
+    step, got = sim.run_process(fetch(), until=sim.now + 900)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape
+        if a.dtype.kind == "f" and a.size >= 1024:
+            assert (np.abs(b - a) <= _block_bound(a)).all()
+        else:
+            np.testing.assert_array_equal(a, b)
 
 
 def test_local_save_load(tmp_path):

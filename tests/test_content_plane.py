@@ -154,6 +154,124 @@ def test_cdc_boundaries_shift_stable_where_fixed_cascades():
     assert reuse(fixed) < 0.10      # every downstream boundary shifted
 
 
+def _naive_gear_candidates(data: bytes, bits: int) -> list:
+    """Byte-at-a-time gear rolling hash — the trusted oracle for the
+    vectorized window-doubling scan."""
+    from repro.core.cid import _gear_table
+    table = _gear_table()
+    mask = (1 << bits) - 1
+    h = 0
+    out = []
+    for i, b in enumerate(data):
+        h = ((h << 1) + int(table[b])) & 0xFFFFFFFF
+        if (h & mask) == mask:
+            out.append(i)
+    return out
+
+
+def test_windowed_hash_doubling_matches_naive():
+    """The log-passes window-doubling construction must be bitwise
+    identical to the naive width-term accumulation, truncation at the
+    array start included."""
+    from repro.core.cid import _gear_table, _windowed_hash
+    rng = np.random.default_rng(60)
+    g = _gear_table()[rng.integers(0, 256, 300)].astype(np.uint32)
+    for width in (1, 2, 3, 7, 8, 13, 30, 64, 299, 300, 512):
+        naive = np.zeros(len(g), dtype=np.uint32)
+        for k in range(min(width, len(g))):
+            naive[k:] += g[:len(g) - k] << np.uint32(k)
+        np.testing.assert_array_equal(_windowed_hash(g, width), naive)
+
+
+def test_cdc_candidates_match_naive_rolling_hash():
+    """Strict and loose candidate sets both fall out of one wide scan;
+    each must equal an independent byte-at-a-time scan at its own mask
+    width (the gear-table-compatibility property)."""
+    from repro.core.cid import _cdc_candidates
+    data = _blob(64 * 1024, 61)
+    bits, norm = 10, 2
+    strict, loose = _cdc_candidates(data, bits, norm)
+    assert strict.tolist() == _naive_gear_candidates(data, bits + norm)
+    assert loose.tolist() == _naive_gear_candidates(data, bits - norm)
+    s0, l0 = _cdc_candidates(data, bits, 0)
+    assert s0.tolist() == l0.tolist() == _naive_gear_candidates(data, bits)
+
+
+def test_norm_zero_is_exactly_the_legacy_chunking():
+    """norm=0 must reproduce the single-mask boundaries byte-for-byte
+    (published CIDs depend on it), for both the default spec field and an
+    explicit norm=0."""
+    data = _blob(512 * 1024, 62)
+    legacy = ChunkSpec.cdc(avg_size=16 * 1024).split(data)
+    assert ChunkSpec.cdc(avg_size=16 * 1024, norm=0).split(data) == legacy
+    # and the greedy cut loop over naive candidates agrees end to end
+    spec = ChunkSpec.cdc(avg_size=16 * 1024)
+    bits = spec.avg_size.bit_length() - 1
+    cands = [c + 1 for c in _naive_gear_candidates(data, bits)]
+    cuts, last = [], 0
+    while last < len(data):
+        if len(data) - last <= spec.min_size:
+            cuts.append(len(data))
+            break
+        hi = min(last + spec.max_size, len(data))
+        nxt = [c for c in cands if last + spec.min_size <= c <= hi]
+        cuts.append(nxt[0] if nxt else hi)
+        last = cuts[-1]
+    assert cdc_cut_points(data, spec.min_size, spec.avg_size,
+                          spec.max_size) == cuts
+
+
+def test_normalized_chunking_tightens_size_spread():
+    """FastCDC normalization: chunk sizes concentrate around avg_size —
+    lower coefficient of variation, fewer min-size runts — while staying
+    deterministic and respecting the same [min, max] bounds."""
+    data = _blob(2 * 2**20, 63)
+    sizes = {}
+    for norm in (0, 2):
+        spec = ChunkSpec.cdc(avg_size=16 * 1024, norm=norm)
+        chunks = spec.split(data)
+        assert b"".join(chunks) == data
+        for piece in chunks[:-1]:
+            assert spec.min_size <= len(piece) <= spec.max_size
+        assert spec.split(data) == chunks          # deterministic
+        sizes[norm] = np.asarray([len(c) for c in chunks[:-1]], np.float64)
+    cv = {n: s.std() / s.mean() for n, s in sizes.items()}
+    assert cv[2] < 0.75 * cv[0]
+    # the tiny-chunk overhead tail shrinks too
+    small = {n: np.mean(s < 8 * 1024) for n, s in sizes.items()}
+    assert small[2] <= small[0]
+
+
+def test_normalized_chunking_still_shift_stable():
+    data = _blob(512 * 1024, 64)
+    edited = data[:9000] + b"\x7f" * 200 + data[9000:]
+    spec = ChunkSpec.cdc(avg_size=16 * 1024, norm=2)
+    before, after = set(spec.split(data)), spec.split(edited)
+    reuse = sum(len(c) for c in after if c in before) / len(edited)
+    assert reuse > 0.60
+
+
+def test_chunkspec_norm_codec_and_validation():
+    spec = ChunkSpec.cdc(avg_size=32 * 1024, norm=2)
+    assert spec.encode() == b"cdc:8192:32768:131072:2"
+    assert ChunkSpec.decode(spec.encode()) == spec
+    # norm=0 keeps the legacy 4-field form (old readers must keep working)
+    assert ChunkSpec.cdc(avg_size=32 * 1024, norm=0).encode() == \
+        b"cdc:8192:32768:131072"
+    assert ChunkSpec.decode(b"cdc:8192:32768:131072") == \
+        ChunkSpec.cdc(avg_size=32 * 1024)
+    with pytest.raises(ValueError):
+        ChunkSpec(strategy="fixed", norm=1)        # norm is cdc-only
+    with pytest.raises(ValueError):
+        ChunkSpec.cdc(norm=-1)
+    with pytest.raises(ValueError):
+        ChunkSpec.cdc(norm=1.5)
+    with pytest.raises(ValueError):
+        ChunkSpec.decode(b"cdc:1:2:4:x")
+    with pytest.raises(ValueError):
+        ChunkSpec.decode(b"cdc:1:2:4:1:9")
+
+
 def test_build_dag_default_keeps_fixed_layout():
     """No-spec builds must keep the historical fixed-chunk layout, so roots
     published before ChunkSpec existed stay reproducible."""

@@ -110,6 +110,84 @@ def test_paged_cache_grows_without_perturbing_decode(model):
     np.testing.assert_array_equal(np.asarray(toks, np.int32), want[0])
 
 
+def _pages_for(eng, n_tokens):
+    return -(-n_tokens // eng.page_size)
+
+
+def test_exact_page_accounting_across_lifecycle(model):
+    """stats['pages'] tracks pages actually in use at every point: grows
+    with prefill/decode, drops on close, and is exactly 0 once every
+    session is gone (fused pool path and unfused dense path both)."""
+    cfg, params = model
+    for fused in (True, False):
+        sim = Sim(seed=6)
+        eng = BatchEngine(_full_module(cfg, params), sim, n_slots=4,
+                          page_size=8, fused=fused)
+        x = np.asarray(jax.random.randint(jax.random.PRNGKey(6), (1, 11), 0,
+                                          cfg.vocab), np.int32)
+        sim.run_process(eng.open("A", x, 64))
+        sim.run_process(eng.open("B", x, 64))
+        # 11 prompt tokens + room for the next one = 12 -> 2 pages each
+        assert eng.stats["pages"] == 2 * _pages_for(eng, 12), fused
+        for _ in range(6):                     # 11 + 6 = 17 -> 3 pages
+            eng.step(["A", "B"], np.asarray([1, 2], np.int32))
+        assert eng.stats["pages"] == 2 * _pages_for(eng, 17), fused
+        eng.close(["A"])
+        assert eng.stats["pages"] == _pages_for(eng, 17), fused
+        eng.close(["B"])
+        assert eng.stats["pages"] == 0, fused
+        assert eng.stats["pages_peak"] == 2 * _pages_for(eng, 17), fused
+        # a fresh admission after total drain starts from clean accounting
+        sim.run_process(eng.open("C", x, 64))
+        assert eng.stats["pages"] == _pages_for(eng, 12), fused
+        eng.close(["C"])
+        assert eng.stats["pages"] == 0, fused
+
+
+def test_reopen_same_session_frees_old_pages(model):
+    """Re-admitting a live session id replaces its storage instead of
+    leaking the old pages."""
+    cfg, params = model
+    sim = Sim(seed=7)
+    eng = BatchEngine(_full_module(cfg, params), sim, n_slots=2, page_size=8)
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(7), (1, 20), 0,
+                                      cfg.vocab), np.int32)
+    sim.run_process(eng.open("A", x, 64))
+    first = eng.stats["pages"]
+    sim.run_process(eng.open("A", x[:, :4], 64))
+    assert eng.stats["pages"] == _pages_for(eng, 5)
+    assert eng.stats["pages"] < first
+    eng.close(["A"])
+    assert eng.stats["pages"] == 0
+
+
+def test_int8_kv_cache_smaller_and_greedy_consistent(model):
+    """The int8 pool must hold well under half the fp32 pool's bytes and
+    still decode the same greedy continuation at this scale, with the
+    final-step logits within the quantization bound."""
+    cfg, params = model
+    outs, bytes_used = {}, {}
+    x = np.asarray(jax.random.randint(jax.random.PRNGKey(8), (1, 10), 0,
+                                      cfg.vocab), np.int32)
+    for dtype in ("fp32", "int8"):
+        sim = Sim(seed=8)
+        eng = BatchEngine(_full_module(cfg, params), sim, n_slots=1,
+                          page_size=8, kv_dtype=dtype)
+        assert eng.fused, "int8 pool requires the fused path"
+        out, _ = sim.run_process(eng.open("S", x, 64))
+        toks = [int(np.argmax(out[0]))]
+        last = None
+        for _ in range(20):
+            last, served, _ = eng.step(["S"], np.asarray([toks[-1]], np.int32))
+            assert served == ["S"]
+            toks.append(int(np.argmax(last[0])))
+        outs[dtype] = (toks, np.asarray(last))
+        bytes_used[dtype] = eng.kv_bytes()
+    assert bytes_used["int8"] <= 0.55 * bytes_used["fp32"]
+    assert outs["int8"][0] == outs["fp32"][0]      # same greedy path
+    assert np.abs(outs["int8"][1] - outs["fp32"][1]).max() < 0.25
+
+
 # --------------------------------------------------------------------------
 # Router unit tests (no network)
 # --------------------------------------------------------------------------
