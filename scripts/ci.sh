@@ -4,6 +4,7 @@
 # kernel failure still shows the rest of the suite's results).
 #   ./scripts/ci.sh                  run everything
 #   ./scripts/ci.sh --kernel-smoke   fast-decode + quantization gates only
+#   ./scripts/ci.sh --lint           latlint + simsan determinism gates only
 #   SKIP_BENCH=1 ./scripts/ci.sh     tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,10 +25,27 @@ kernel_smoke() {
     python -m benchmarks.run --require-bench
 }
 
+lint_gate() {
+    # latlint: every rule (L001-L006) must be clean on the shipped tree —
+    # violations are either fixed or carry a reasoned waiver
+    # simsan: serving + CRDT-sync scenarios must produce bit-identical
+    # event-trace digests across a double run, survive a seeded same-time
+    # tie-break perturbation with the same functional result, and finish
+    # with zero double-settles/orphans and a leak audit at baseline
+    python -m repro.analysis --strict --determinism
+}
+
 if [ "${1:-}" = "--kernel-smoke" ]; then
     kernel_smoke
     exit 0
 fi
+
+if [ "${1:-}" = "--lint" ]; then
+    lint_gate
+    exit 0
+fi
+
+lint_gate
 
 if [ -z "${SKIP_BENCH:-}" ]; then
     python benchmarks/rpc_throughput.py --smoke

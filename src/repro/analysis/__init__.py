@@ -1,0 +1,29 @@
+"""Analysis plane: repo-specific static analysis (latlint) + simulator
+sanitizer gates (simsan).
+
+``latlint`` is an AST-based lint framework with rules that encode this
+repo's correctness conventions — the ones that keep the discrete-event
+simulator deterministic and the protocol planes well-behaved:
+
+* **L001** no wall-clock (``time.time``/``time.monotonic``/argless
+  ``datetime.now``) or module-global ``random.*`` in sim-executing code
+* **L002** no raw ``register_unary``/``call_unary`` outside the typed
+  service plane (``core/service.py``)
+* **L003** no ``pickle.load(s)`` outside ``core/safepickle.py``
+* **L004** ``hedged_call`` only over methods whose ``MethodSpec`` declares
+  ``idempotent=True`` (resolved cross-file against service declarations)
+* **L005** generator-process hygiene: a bare call of a yield-protocol
+  function silently creates a never-driven generator
+* **L006** Pallas kernel sanity: BlockSpec/grid divisibility and a static
+  VMEM footprint estimate against the per-core budget
+
+Rules support inline waivers (``# latlint: disable=L00x <reason>``) and a
+machine-readable JSON report.  The simsan side lives in
+:mod:`repro.core.simnet` (``Sim(sanitize=True)``); :mod:`repro.analysis.gates`
+drives the determinism double-run and leak-audit gates over the serving and
+CRDT-sync smokes.  CLI: ``python -m repro.analysis --strict``.
+"""
+
+from .latlint import Report, Violation, run_lint  # noqa: F401
+
+__all__ = ["Report", "Violation", "run_lint"]

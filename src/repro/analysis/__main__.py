@@ -1,0 +1,68 @@
+"""CLI driver: ``python -m repro.analysis [--strict] [--json PATH]
+[--determinism] [paths...]``.
+
+Without ``paths`` the whole ``repro`` package is linted.  ``--strict``
+exits non-zero on any active (unwaived) violation.  ``--determinism``
+additionally runs the simsan gates (double-run digest equality,
+perturbation robustness, leak audit) and fails on any gate breach.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List
+
+from .latlint import run_lint
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="latlint static analysis + simsan determinism gates")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: the repro package)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on active violations")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the JSON report here ('-' for stdout)")
+    ap.add_argument("--determinism", action="store_true",
+                    help="also run the simsan determinism/leak gates")
+    ap.add_argument("--gate", action="append", metavar="NAME", default=None,
+                    help="restrict --determinism to this gate (repeatable)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for the determinism gates")
+    ap.add_argument("--perturbations", type=int, default=1,
+                    help="number of seeded tie-break perturbation runs")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [str(Path(__file__).resolve().parent.parent)]
+    report = run_lint(paths)
+    print(report.format_text())
+    if args.json:
+        if args.json == "-":
+            print(report.to_json())
+        else:
+            Path(args.json).write_text(report.to_json())
+            print(f"latlint: JSON report -> {args.json}")
+
+    rc = 0
+    if args.strict and report.active:
+        rc = 1
+
+    if args.determinism:
+        from .gates import run_all_gates
+        results = run_all_gates(seed=args.seed,
+                                perturbations=args.perturbations,
+                                names=args.gate)
+        for res in results:
+            print(res.format())
+        if any(not res.ok for res in results):
+            rc = max(rc, 2)
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,378 @@
+"""L006 — Pallas kernel sanity: static shape/grid/VMEM checks.
+
+For every ``pl.pallas_call`` in a scanned file this rule verifies, without
+executing anything:
+
+* **index_map arity** — each BlockSpec's index_map lambda takes exactly
+  ``len(grid) + num_scalar_prefetch`` arguments (PrefetchScalarGridSpec
+  prepends its scalar operands to every index_map's signature);
+* **index_map rank** — the index tuple it returns has one entry per
+  block-shape dimension;
+* **grid divisibility** — a grid extent computed as ``a // b`` must be
+  guarded by an ``assert a % b == 0`` in the same function, otherwise the
+  launch silently drops the remainder rows;
+* **VMEM budget** — the static footprint estimate (every BlockSpec block
+  + every ``pltpu.VMEM`` scratch buffer) must fit the per-core budget.
+
+Symbolic dimensions resolve through a small constant propagator (parameter
+defaults, module constants, ``min``/``//``/tuple assignments); anything
+still unresolved falls back to :data:`DIM_BOUNDS` (conservative per-name
+upper bounds for this repo's conventional dimension names) or
+:data:`DEFAULT_DIM_BOUND`.  The estimate is deliberately an upper bound:
+a kernel that passes here can still be tuned, but one that fails cannot
+fit in VMEM under this repo's shape conventions.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .latlint import LintContext, Rule, SourceFile, Violation
+from .rules import terminal_name
+
+#: TPU VMEM per core (pallas guide: ~16 MiB usable per TensorCore).
+VMEM_BUDGET = 16 * 1024 * 1024
+
+#: Conservative upper bounds for this repo's conventional dim names, used
+#: when constant propagation cannot resolve a dimension (e.g. it comes from
+#: a runtime ``x.shape`` unpack).  Keyed by variable name.
+DIM_BOUNDS: Dict[str, int] = {
+    "hd": 256, "head_dim": 256,      # head dim (largest config: 256)
+    "H": 64, "Hk": 32,               # query / kv heads per shard
+    "page": 128,                     # KV page size (serving uses 32)
+    "E": 512,                        # MoE experts
+    "k": 16, "K": 16,                # top-k
+    "W": 512, "bt": 512,             # chunk/token-block tiles
+    "bq": 512, "bk": 1024,           # attention tiles
+    "rep": 8,                        # H // Hk replication factor
+}
+
+#: Fallback bound for dimensions with no entry above.
+DEFAULT_DIM_BOUND = 128
+
+_DTYPE_BYTES = {"float32": 4, "int32": 4, "uint32": 4, "bfloat16": 2,
+                "float16": 2, "int16": 2, "int8": 1, "uint8": 1,
+                "bool_": 1, "float64": 8, "int64": 8}
+
+
+# ---------------------------------------------------------------------------
+# constant propagation
+# ---------------------------------------------------------------------------
+
+
+class Env:
+    """Name -> AST expression bindings: module constants, enclosing-function
+    parameter defaults, and (tuple-)assignments, innermost binding winning."""
+
+    def __init__(self) -> None:
+        self._bind: Dict[str, ast.AST] = {}
+        self._defaults: Dict[str, ast.AST] = {}
+
+    def bind(self, name: str, expr: ast.AST) -> None:
+        self._bind[name] = expr
+
+    def bind_default(self, name: str, expr: ast.AST) -> None:
+        self._defaults[name] = expr
+
+    def load_scope(self, scope: ast.AST) -> None:
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name):
+                    self.bind(tgt.id, node.value)
+                elif (isinstance(tgt, ast.Tuple)
+                      and isinstance(node.value, ast.Tuple)
+                      and len(tgt.elts) == len(node.value.elts)):
+                    for t, v in zip(tgt.elts, node.value.elts):
+                        if isinstance(t, ast.Name):
+                            self.bind(t.id, v)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                pos = args.args + args.kwonlyargs
+                defaults = ([None] * (len(args.args) - len(args.defaults))
+                            + list(args.defaults) + list(args.kw_defaults))
+                for a, d in zip(pos, defaults):
+                    if d is not None:
+                        self.bind_default(a.arg, d)
+
+    def resolve_expr(self, name: str) -> Optional[ast.AST]:
+        return self._bind.get(name)
+
+    def resolve_int(self, expr: Optional[ast.AST],
+                    active: Optional[Set[str]] = None) -> Optional[int]:
+        """Best-effort integer value of an expression; None if unresolvable.
+        ``active`` breaks self-referential chains like ``bq = min(bq, Sq)``
+        by falling back to the parameter default for the inner reference."""
+        if expr is None:
+            return None
+        active = set() if active is None else active
+        if isinstance(expr, ast.Constant):
+            return expr.value if isinstance(expr.value, int) else None
+        if isinstance(expr, ast.Name):
+            name = expr.id
+            if name not in active and name in self._bind:
+                return self.resolve_int(self._bind[name], active | {name})
+            if name in self._defaults:
+                return self.resolve_int(self._defaults[name], active | {name})
+            return None
+        if isinstance(expr, ast.BinOp):
+            lhs = self.resolve_int(expr.left, active)
+            rhs = self.resolve_int(expr.right, active)
+            if lhs is None or rhs is None:
+                return None
+            if isinstance(expr.op, ast.Add):
+                return lhs + rhs
+            if isinstance(expr.op, ast.Sub):
+                return lhs - rhs
+            if isinstance(expr.op, ast.Mult):
+                return lhs * rhs
+            if isinstance(expr.op, ast.FloorDiv) and rhs != 0:
+                return lhs // rhs
+            if isinstance(expr.op, ast.Mod) and rhs != 0:
+                return lhs % rhs
+            return None
+        if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name):
+            vals = [self.resolve_int(a, active) for a in expr.args]
+            known = [v for v in vals if v is not None]
+            if expr.func.id == "min" and known:
+                # min() over partially-known args: the known minimum is a
+                # sound upper bound for footprint purposes
+                return min(known)
+            if expr.func.id == "max" and len(known) == len(vals) and known:
+                return max(known)
+        return None
+
+    def dim_bound(self, expr: Optional[ast.AST]) -> int:
+        """Integer upper bound for a block dimension: exact value when
+        resolvable, else the per-name table, else the default bound."""
+        val = self.resolve_int(expr)
+        if val is not None:
+            return val
+        if isinstance(expr, ast.Name):
+            return DIM_BOUNDS.get(expr.id, DEFAULT_DIM_BOUND)
+        return DEFAULT_DIM_BOUND
+
+
+# ---------------------------------------------------------------------------
+# pallas_call model
+# ---------------------------------------------------------------------------
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _as_list(expr: Optional[ast.AST], env: Env) -> List[ast.AST]:
+    """Flatten an in_specs/out_specs expression into element expressions,
+    resolving a Name to its assignment and following ``+=`` style
+    concatenation of list literals one level deep."""
+    if expr is None:
+        return []
+    if isinstance(expr, ast.Name):
+        expr = env.resolve_expr(expr.id)
+        if expr is None:
+            return []
+    if isinstance(expr, (ast.List, ast.Tuple)):
+        return list(expr.elts)
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Add):
+        return _as_list(expr.left, env) + _as_list(expr.right, env)
+    return [expr]
+
+
+class _SpecInfo:
+    def __init__(self, call: ast.Call, env: Env):
+        self.node = call
+        shape = _kw(call, "block_shape")
+        if shape is None and call.args:
+            shape = call.args[0]
+        self.shape_elts: Optional[List[ast.AST]] = (
+            list(shape.elts) if isinstance(shape, (ast.Tuple, ast.List))
+            else None)
+        imap = _kw(call, "index_map")
+        if imap is None and len(call.args) > 1:
+            imap = call.args[1]
+        if isinstance(imap, ast.Name):
+            imap = env.resolve_expr(imap.id)
+        self.index_map: Optional[ast.Lambda] = (
+            imap if isinstance(imap, ast.Lambda) else None)
+
+    def nbytes(self, env: Env, itemsize: int = 4) -> int:
+        if self.shape_elts is None:
+            return 0
+        total = itemsize
+        for d in self.shape_elts:
+            total *= max(1, env.dim_bound(d))
+        return total
+
+
+def _block_specs(expr: Optional[ast.AST], env: Env) -> List[_SpecInfo]:
+    out = []
+    for elt in _as_list(expr, env):
+        if isinstance(elt, ast.Name):
+            elt = env.resolve_expr(elt.id)
+        if isinstance(elt, ast.Call) and terminal_name(elt.func) == "BlockSpec":
+            out.append(_SpecInfo(elt, env))
+    return out
+
+
+def _vmem_scratch_bytes(expr: Optional[ast.AST], env: Env) -> int:
+    total = 0
+    for elt in _as_list(expr, env):
+        if not (isinstance(elt, ast.Call)
+                and terminal_name(elt.func) == "VMEM"):
+            continue
+        itemsize = 4
+        if len(elt.args) > 1:
+            dtype = terminal_name(elt.args[1]) or ""
+            itemsize = _DTYPE_BYTES.get(dtype, 4)
+        shape = elt.args[0] if elt.args else None
+        if isinstance(shape, (ast.Tuple, ast.List)):
+            n = itemsize
+            for d in shape.elts:
+                n *= max(1, env.dim_bound(d))
+            total += n
+    return total
+
+
+def _assert_guards(scope: ast.AST) -> Set[Tuple[str, str]]:
+    """(numerator, denominator) name pairs proven divisible by an
+    ``assert a % b == 0`` (BoolOp conjunctions are flattened)."""
+    guards: Set[Tuple[str, str]] = set()
+
+    def harvest(test: ast.AST) -> None:
+        if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+            for v in test.values:
+                harvest(v)
+            return
+        if not (isinstance(test, ast.Compare) and len(test.ops) == 1
+                and isinstance(test.ops[0], ast.Eq)):
+            return
+        lhs, rhs = test.left, test.comparators[0]
+        for a, b in ((lhs, rhs), (rhs, lhs)):
+            if (isinstance(a, ast.BinOp) and isinstance(a.op, ast.Mod)
+                    and isinstance(a.left, ast.Name)
+                    and isinstance(a.right, ast.Name)
+                    and isinstance(b, ast.Constant) and b.value == 0):
+                guards.add((a.left.id, a.right.id))
+
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assert):
+            harvest(node.test)
+    return guards
+
+
+def _floordiv_pairs(expr: ast.AST, env: Env) -> List[Tuple[str, str]]:
+    """Name-pair floor divisions in a grid extent, following one level of
+    assignment (``nq = Sq // bq`` referenced as ``nq`` in the grid)."""
+    if isinstance(expr, ast.Name):
+        resolved = env.resolve_expr(expr.id)
+        if resolved is not None:
+            expr = resolved
+    pairs = []
+    for node in ast.walk(expr):
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv)
+                and isinstance(node.left, ast.Name)
+                and isinstance(node.right, ast.Name)):
+            pairs.append((node.left.id, node.right.id))
+    return pairs
+
+
+class KernelSanityRule(Rule):
+    id = "L006"
+    title = "Pallas BlockSpec/grid divisibility + static VMEM budget"
+
+    def check(self, sf: SourceFile, ctx: LintContext) -> Iterable[Violation]:
+        calls = [n for n in ast.walk(sf.tree)
+                 if isinstance(n, ast.Call)
+                 and terminal_name(n.func) == "pallas_call"]
+        if not calls:
+            return
+        for call in calls:
+            scope = self._enclosing(sf.tree, call)
+            env = Env()
+            env.load_scope(sf.tree)   # module constants + all param defaults
+            if scope is not None:
+                env.load_scope(scope)  # innermost bindings win
+            yield from self._check_call(sf, call, scope or sf.tree, env)
+
+    @staticmethod
+    def _enclosing(tree: ast.AST, target: ast.AST) -> Optional[ast.AST]:
+        from .rules import enclosing_function
+        return enclosing_function(tree, target)
+
+    def _check_call(self, sf: SourceFile, call: ast.Call, scope: ast.AST,
+                    env: Env) -> Iterable[Violation]:
+        grid_expr = _kw(call, "grid")
+        in_specs = _kw(call, "in_specs")
+        out_specs = _kw(call, "out_specs")
+        scratch = _kw(call, "scratch_shapes")
+        n_prefetch = 0
+        grid_spec = _kw(call, "grid_spec")
+        if isinstance(grid_spec, ast.Name):
+            grid_spec = env.resolve_expr(grid_spec.id)
+        if isinstance(grid_spec, ast.Call):
+            grid_expr = _kw(grid_spec, "grid") or grid_expr
+            in_specs = _kw(grid_spec, "in_specs") or in_specs
+            out_specs = _kw(grid_spec, "out_specs") or out_specs
+            scratch = _kw(grid_spec, "scratch_shapes") or scratch
+            npf = env.resolve_int(_kw(grid_spec, "num_scalar_prefetch"))
+            n_prefetch = npf or 0
+
+        grid_elts = self._grid_elts(grid_expr, env)
+        specs = (_block_specs(in_specs, env)
+                 + _block_specs(out_specs, env))
+
+        # 1. index_map arity / rank
+        if grid_elts is not None:
+            want = len(grid_elts) + n_prefetch
+            for spec in specs:
+                lam = spec.index_map
+                if lam is None:
+                    continue
+                got = len(lam.args.args)
+                if got != want:
+                    yield self.violation(
+                        sf, lam, f"index_map takes {got} args but the launch "
+                        f"has {len(grid_elts)} grid dims + {n_prefetch} "
+                        f"scalar-prefetch operands (= {want})")
+                rank = (len(lam.body.elts)
+                        if isinstance(lam.body, ast.Tuple) else 1)
+                if spec.shape_elts is not None and rank != len(spec.shape_elts):
+                    yield self.violation(
+                        sf, lam, f"index_map returns {rank} indices for a "
+                        f"rank-{len(spec.shape_elts)} block_shape")
+
+        # 2. grid divisibility
+        if grid_elts is not None:
+            guards = _assert_guards(scope)
+            for elt in grid_elts:
+                for num, den in _floordiv_pairs(elt, env):
+                    if (num, den) not in guards:
+                        yield self.violation(
+                            sf, call, f"grid extent {num} // {den} has no "
+                            f"`assert {num} % {den} == 0` guard — a "
+                            "non-divisible shape silently drops the "
+                            "remainder block")
+
+        # 3. static VMEM footprint
+        total = sum(s.nbytes(env) for s in specs)
+        total += _vmem_scratch_bytes(scratch, env)
+        if total > VMEM_BUDGET:
+            yield self.violation(
+                sf, call, f"static VMEM footprint estimate {total} B "
+                f"({total / 2**20:.1f} MiB) exceeds the {VMEM_BUDGET // 2**20}"
+                " MiB per-core budget — shrink block shapes or scratch")
+
+    @staticmethod
+    def _grid_elts(expr: Optional[ast.AST], env: Env) -> Optional[List[ast.AST]]:
+        if expr is None:
+            return None
+        if isinstance(expr, ast.Name):
+            expr = env.resolve_expr(expr.id)
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return list(expr.elts)
+        return None

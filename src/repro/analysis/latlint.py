@@ -1,0 +1,217 @@
+"""latlint framework: source loading, waiver parsing, rule driving, reports.
+
+A :class:`Rule` sees one parsed :class:`SourceFile` at a time plus a
+:class:`LintContext` holding cross-file indexes (service method
+declarations, generator-function names) built in a first pass — that is
+what lets L004 resolve ``hedged_call`` sites against ``MethodSpec``
+declarations living in other modules.
+
+Waivers::
+
+    x = time.time()          # latlint: disable=L001 CLI wall-clock banner
+    # latlint: disable=L001 applies to the next line too
+    # latlint: disable-file=L005 whole-file waiver
+
+A waiver with no reason does not waive — the violation stays active with a
+note, so ``--strict`` still fails.  Reports serialize to JSON
+(``Report.to_json``) for machine consumption.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+WAIVER_RE = re.compile(
+    r"#\s*latlint:\s*disable(?P<scope>-file)?="
+    r"(?P<rules>[A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)\s*(?P<reason>.*)$")
+
+
+@dataclass
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    waive_reason: str = ""
+
+    def to_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+    def format(self) -> str:
+        tag = f" [waived: {self.waive_reason}]" if self.waived else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}{tag}"
+
+
+@dataclass
+class Waiver:
+    rules: Tuple[str, ...]
+    reason: str
+    line: int
+    file_level: bool
+
+
+class SourceFile:
+    """One parsed file: AST + the waiver comments found in its text."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.line_waivers: Dict[int, Waiver] = {}
+        self.file_waivers: Dict[str, Waiver] = {}
+        for lineno, raw in enumerate(self.text.splitlines(), start=1):
+            m = WAIVER_RE.search(raw)
+            if m is None:
+                continue
+            rules = tuple(r.strip() for r in m.group("rules").split(","))
+            w = Waiver(rules, m.group("reason").strip(), lineno,
+                       m.group("scope") is not None)
+            if w.file_level:
+                for r in rules:
+                    self.file_waivers[r] = w
+            else:
+                self.line_waivers[lineno] = w
+
+    def waiver_for(self, rule: str, line: int) -> Optional[Waiver]:
+        """A waiver covers a violation if it is file-level, trails the
+        violating line, or sits alone on the line directly above it."""
+        if rule in self.file_waivers:
+            return self.file_waivers[rule]
+        for ln in (line, line - 1):
+            w = self.line_waivers.get(ln)
+            if w is not None and rule in w.rules:
+                return w
+        return None
+
+
+class LintContext:
+    """Cross-file indexes shared by all rules (filled by ``build_context``)."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+        #: service method name (python attr AND wire name) -> idempotent flag
+        self.method_idempotency: Dict[str, bool] = {}
+        #: names whose every definition in the scanned set is a generator fn
+        self.generator_only_names: set = set()
+
+
+class Rule:
+    id = "L000"
+    title = ""
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, sf: SourceFile, ctx: LintContext) -> Iterable[Violation]:
+        raise NotImplementedError
+
+    def violation(self, sf: SourceFile, node: ast.AST, message: str) -> Violation:
+        return Violation(self.id, sf.rel, getattr(node, "lineno", 0),
+                         getattr(node, "col_offset", 0), message)
+
+
+@dataclass
+class Report:
+    violations: List[Violation]
+    files_scanned: int
+
+    @property
+    def active(self) -> List[Violation]:
+        return [v for v in self.violations if not v.waived]
+
+    @property
+    def waived(self) -> List[Violation]:
+        return [v for v in self.violations if v.waived]
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for v in self.active:
+            out[v.rule] = out.get(v.rule, 0) + 1
+        return out
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "files_scanned": self.files_scanned,
+            "active": [v.to_dict() for v in self.active],
+            "waived": [v.to_dict() for v in self.waived],
+            "counts": self.counts(),
+        }, indent=2, sort_keys=True)
+
+    def format_text(self) -> str:
+        lines = [v.format() for v in self.active]
+        lines += [v.format() for v in self.waived]
+        status = "clean" if not self.active else f"{len(self.active)} active"
+        lines.append(f"latlint: {self.files_scanned} files, {status}, "
+                     f"{len(self.waived)} waived")
+        return "\n".join(lines)
+
+
+def default_rules() -> List[Rule]:
+    from . import kernel_lint, rules
+    return [rules.WallClockRule(), rules.RawRpcRule(), rules.PickleRule(),
+            rules.HedgedIdempotentRule(), rules.OrphanGeneratorRule(),
+            kernel_lint.KernelSanityRule()]
+
+
+def _collect_files(paths: Sequence[Path]) -> List[SourceFile]:
+    seen: Dict[Path, None] = {}
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                seen.setdefault(f.resolve())
+        else:
+            seen.setdefault(p.resolve())
+    files = []
+    for f in seen:
+        files.append(SourceFile(f, _logical_rel(f)))
+    return files
+
+
+def _logical_rel(path: Path) -> str:
+    """Stable logical path for rule scoping: from the ``repro`` package root
+    when the file lives inside it, else the bare file name."""
+    parts = path.parts
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        return "/".join(parts[i:])
+    return path.name
+
+
+def build_context(files: Sequence[SourceFile]) -> LintContext:
+    from .rules import index_generators, index_method_specs
+    ctx = LintContext(files)
+    index_method_specs(ctx)
+    index_generators(ctx)
+    return ctx
+
+
+def run_lint(paths: Sequence[Path],
+             rules: Optional[Sequence[Rule]] = None) -> Report:
+    files = _collect_files([Path(p) for p in paths])
+    rules = list(rules) if rules is not None else default_rules()
+    ctx = build_context(files)
+    violations: List[Violation] = []
+    for sf in files:
+        for rule in rules:
+            if not rule.applies(sf.rel):
+                continue
+            for v in rule.check(sf, ctx):
+                w = sf.waiver_for(v.rule, v.line)
+                if w is not None:
+                    if w.reason:
+                        v.waived = True
+                        v.waive_reason = w.reason
+                    else:
+                        v.message += " (waiver present but missing a reason)"
+                violations.append(v)
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return Report(violations=violations, files_scanned=len(files))

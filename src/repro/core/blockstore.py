@@ -139,6 +139,18 @@ class BlockStore:
         else:
             self._pins[cid] = n
 
+    # ------------------------------------------------------- simsan gauges
+    def outstanding_holds(self) -> int:
+        """Transient transfer holds currently live: total pin refcounts not
+        accounted for by a recorded root pin set.  Zero whenever every
+        ``hold`` was paired with a ``release`` — the leak-audit invariant."""
+        total = sum(self._pins.values())
+        rooted = sum(len(s) for s in self._pin_sets.values())
+        return total - rooted
+
+    def pinned_root_count(self) -> int:
+        return len(self._pin_sets)
+
     # ------------------------------------------------------------ eviction
     def set_capacity(self, capacity: Optional[int]) -> None:
         self.capacity = capacity

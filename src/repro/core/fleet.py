@@ -123,7 +123,8 @@ def make_fleet(n_peers: int, seed: int = 0, n_bootstrap: int = 2,
                same_region: Optional[str] = None,
                join: bool = True,
                maintenance: bool = True,
-               cores: int = 4) -> Fleet:
+               cores: int = 4,
+               sim: Optional[Sim] = None) -> Fleet:
     """Build bootstrap/relay servers + ``n_peers`` NAT-mixed peers.
 
     ``nat_kinds`` pins the exact per-peer NAT spec (overriding the random
@@ -139,7 +140,10 @@ def make_fleet(n_peers: int, seed: int = 0, n_bootstrap: int = 2,
     """
     if nat_kinds is not None and len(nat_kinds) != n_peers:
         raise ValueError("nat_kinds must have n_peers entries")
-    sim = Sim(seed=seed)
+    # ``sim=`` lets callers supply a pre-configured simulator (e.g.
+    # ``Sim(sanitize=True)`` for the simsan determinism/leak gates);
+    # ``seed`` is ignored in that case.
+    sim = Sim(seed=seed) if sim is None else sim
     net = Network(sim)
     nat_mix = list(nat_mix if nat_mix is not None else DEFAULT_NAT_MIX)
     alloc_mix = list(sym_alloc_mix if sym_alloc_mix is not None
@@ -188,6 +192,6 @@ def make_fleet(n_peers: int, seed: int = 0, n_bootstrap: int = 2,
                 return None
             sim.run_process(_join())
         if maintenance:
-            sim.process(node.maintenance_loop())
+            sim.process(node.maintenance_loop(), daemon=True)
 
     return Fleet(sim=sim, net=net, bootstrap=boots, peers=peers)

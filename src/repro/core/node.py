@@ -145,6 +145,10 @@ class LatticaNode:
         self.rpc_metrics = RpcMetrics()
         self._stub_cache: Dict[Any, Stub] = {}
         self.blockstore = BlockStore(capacity=store_budget)
+        self.sim.register_leak_check(
+            f"blockstore.holds:{name}", self.blockstore.outstanding_holds)
+        self.sim.register_leak_check(
+            f"blockstore.pins:{name}", self.blockstore.pinned_root_count)
         self._pinned_latest: Dict[str, CID] = {}
         self.store = ReplicatedStore(replica=name)
         self.peers: Dict[PeerId, PeerInfo] = {}

@@ -64,41 +64,54 @@ class RpcRouter:
 
     # -- server side ---------------------------------------------------------
     def _serve_unary(self, stream: Stream) -> Generator:
+        # close our endpoint on every exit path: the client closes its side
+        # after the response, and leaving ours open is a stream leak the
+        # simsan audit flags (half-open pair on a live connection).
         try:
-            method, payload, remote_name = yield from stream.recv(timeout=60.0)
-        except DialError:
-            return
-        handler = self.unary.get(method)
-        ctx = RpcContext(self.host, self.host.net.hosts[remote_name])
-        if handler is None:
-            self.stats["errors"] += 1
-            stream.send(("err", f"no such method {method}"), CONTROL_MSG_SIZE)
-            return
-        try:
-            resp, size = yield from handler(payload, ctx)
-            self.stats["unary_served"] += 1
-            stream.send(("ok", resp), max(size, CONTROL_MSG_SIZE))
-        except Exception as exc:  # noqa: BLE001 — surfaced to the caller
-            self.stats["errors"] += 1
             try:
-                stream.send(("err", repr(exc)), CONTROL_MSG_SIZE)
+                method, payload, remote_name = yield from stream.recv(timeout=60.0)
             except DialError:
-                pass
+                return
+            handler = self.unary.get(method)
+            ctx = RpcContext(self.host, self.host.net.hosts[remote_name])
+            if handler is None:
+                self.stats["errors"] += 1
+                stream.send(("err", f"no such method {method}"), CONTROL_MSG_SIZE)
+                return
+            try:
+                resp, size = yield from handler(payload, ctx)
+                self.stats["unary_served"] += 1
+                stream.send(("ok", resp), max(size, CONTROL_MSG_SIZE))
+            except Exception as exc:  # noqa: BLE001 — surfaced to the caller
+                self.stats["errors"] += 1
+                try:
+                    stream.send(("err", repr(exc)), CONTROL_MSG_SIZE)
+                except DialError:
+                    pass
+        finally:
+            stream.close()
 
     def _serve_stream(self, stream: Stream) -> Generator:
         try:
             method, remote_name = yield from stream.recv(timeout=60.0)
         except DialError:
+            stream.close()
             return
         handler = self.streaming.get(method)
         if handler is None:
             stream.send(("err", f"no such stream method {method}"), CONTROL_MSG_SIZE)
+            stream.close()
             return
         stream.send(("hello",), CONTROL_MSG_SIZE)
         chan = RpcChannel(stream, self.sim)
         ctx = RpcContext(self.host, self.host.net.hosts[remote_name])
         self.stats["stream_served"] += 1
-        yield from handler(chan, ctx)
+        try:
+            yield from handler(chan, ctx)
+        finally:
+            # idempotent if the handler already ended the channel; otherwise
+            # this is the server-side half-close that keeps streams balanced.
+            chan.end()
 
 
 # -- client side --------------------------------------------------------------
@@ -150,7 +163,7 @@ class RpcChannel:
         self._remote_ended = False
         self.bytes_sent = 0
         self.bytes_received = 0
-        self._pump = sim.process(self._pump_loop())
+        self._pump = sim.process(self._pump_loop(), daemon=True)
 
     # -- receive pump: demultiplexes data vs credit frames -------------------
     def _pump_loop(self) -> Generator:

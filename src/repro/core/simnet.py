@@ -16,6 +16,7 @@ Process framework (SimPy-like, minimal):
 
 from __future__ import annotations
 
+import hashlib
 import heapq
 import itertools
 from collections import deque
@@ -35,6 +36,73 @@ class DialError(SimError):
     """Raised when a dial / traversal attempt fails."""
 
 
+def _values_differ(a: Any, b: Any) -> bool:
+    """Conservative inequality: identity first, then ``==`` where it yields a
+    plain bool (ndarrays and other broadcasting types count as different)."""
+    if a is b:
+        return False
+    try:
+        return not bool(a == b)
+    except Exception:
+        return True
+
+
+class Sanitizer:
+    """simsan evidence collector for one :class:`Sim` run.
+
+    Activated via ``Sim(sanitize=True)``; records an event-trace digest
+    (every dispatched callback, in order), double-settled events, processes
+    that never ran to completion, and — together with the
+    ``register_leak_check`` hooks subsystems install on the :class:`Sim` —
+    an end-of-run resource leak audit.
+    """
+
+    def __init__(self, sim: "Sim"):
+        self.sim = sim
+        self._hash = hashlib.sha256()
+        self.events_traced = 0
+        self.double_settles: List[Dict[str, Any]] = []
+        self._processes: List[Tuple["Process", str, bool]] = []
+
+    # -- event trace ---------------------------------------------------------
+    def trace(self, t: float, fn: Callable) -> None:
+        name = getattr(fn, "__qualname__", None) or type(fn).__name__
+        self._hash.update(f"{t!r}|{name}\n".encode())
+        self.events_traced += 1
+
+    def digest(self) -> str:
+        return self._hash.hexdigest()
+
+    # -- double-settle -------------------------------------------------------
+    def note_settle(self, evt: "Event", kind: str, value: Any) -> None:
+        """Called on succeed()/fail() of an already-triggered event; records a
+        violation when the second settle disagrees with the first."""
+        first = "fail" if evt.failed else "succeed"
+        if kind == first and not _values_differ(value, evt.value):
+            return  # benign idempotent re-settle with the same outcome
+        self.double_settles.append({
+            "t": self.sim.now,
+            "event": type(evt).__name__,
+            "first": first,
+            "second": kind,
+            "first_value": repr(evt.value)[:120],
+            "second_value": repr(value)[:120],
+        })
+
+    # -- orphaned processes --------------------------------------------------
+    def note_process(self, proc: "Process", daemon: bool) -> None:
+        gen = proc._gen
+        label = getattr(gen, "__qualname__", None) or repr(gen)
+        self._processes.append((proc, label, daemon))
+
+    def orphans(self) -> List[str]:
+        """Non-daemon processes that never ran to completion.  Daemon
+        processes (service loops marked ``sim.process(gen, daemon=True)``)
+        are expected to outlive the run and are exempt."""
+        return [label for proc, label, daemon in self._processes
+                if not daemon and not proc.triggered]
+
+
 class Event:
     """One-shot event; processes can wait on it."""
 
@@ -49,6 +117,8 @@ class Event:
 
     def succeed(self, value: Any = None) -> "Event":
         if self.triggered:
+            if self.sim._san is not None:
+                self.sim._san.note_settle(self, "succeed", value)
             return self
         self.triggered = True
         self.value = value
@@ -59,6 +129,8 @@ class Event:
 
     def fail(self, exc: BaseException) -> "Event":
         if self.triggered:
+            if self.sim._san is not None:
+                self.sim._san.note_settle(self, "fail", exc)
             return self
         self.triggered = True
         self.failed = True
@@ -116,17 +188,34 @@ class Process(Event):
 
 
 class Sim:
-    def __init__(self, seed: int = 0):
+    def __init__(self, seed: int = 0, sanitize: bool = False,
+                 perturb: Optional[int] = None):
         import random
 
         self.now: float = 0.0
         self.rng = random.Random(seed)
-        self._heap: List[Tuple[float, int, Callable, Any]] = []
+        self._heap: List[Tuple[float, Any, Callable, Any]] = []
         self._seq = itertools.count()
+        #: simsan: ``sanitize=True`` records an event-trace digest, flags
+        #: conflicting double-settles, and tracks processes for the orphan
+        #: report.  ``perturb=<seed>`` additionally randomizes same-time
+        #: tie-breaks (from a *separate* seeded Random, so ``rng`` draws are
+        #: unchanged) to surface latent event-order dependence.
+        self._san: Optional[Sanitizer] = Sanitizer(self) if sanitize else None
+        self._perturb = (random.Random(f"simsan-perturb:{perturb}")
+                         if perturb is not None else None)
+        self._leak_checks: Dict[str, Callable[[], float]] = {}
+        self._leak_baseline: Dict[str, float] = {}
 
     # -- scheduling --------------------------------------------------------
     def _schedule(self, delay: float, fn: Callable, arg: Any) -> None:
-        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn, arg))
+        if self._perturb is None:
+            key: Any = next(self._seq)
+        else:
+            # Random primary key shuffles equal-time events; the sequence
+            # number stays as a deterministic final tie-break.
+            key = (self._perturb.random(), next(self._seq))
+        heapq.heappush(self._heap, (self.now + delay, key, fn, arg))
 
     def event(self) -> Event:
         return Event(self)
@@ -136,8 +225,14 @@ class Sim:
         self._schedule(delay, lambda _: ev.succeed(value), None)
         return ev
 
-    def process(self, gen: Generator) -> Process:
-        return Process(self, gen)
+    def process(self, gen: Generator, daemon: bool = False) -> Process:
+        """Spawn a process.  ``daemon=True`` marks service loops expected to
+        outlive the run (listeners, pumps, maintenance) so the simsan orphan
+        detector does not report them."""
+        proc = Process(self, gen)
+        if self._san is not None:
+            self._san.note_process(proc, daemon)
+        return proc
 
     def any_of(self, events: List[Event]) -> Event:
         """Succeeds with (index, value) of the first event that fires."""
@@ -186,6 +281,7 @@ class Sim:
 
     # -- running -----------------------------------------------------------
     def run(self, until: Optional[float] = None) -> None:
+        san = self._san
         while self._heap:
             t, _, fn, arg = self._heap[0]
             if until is not None and t > until:
@@ -193,6 +289,8 @@ class Sim:
                 return
             heapq.heappop(self._heap)
             self.now = t
+            if san is not None:
+                san.trace(t, fn)
             fn(arg)
         if until is not None:
             self.now = max(self.now, until)
@@ -200,17 +298,64 @@ class Sim:
     def run_process(self, gen: Generator, until: float = 1e9) -> Any:
         """Run the loop until ``gen`` completes; returns its value or raises."""
         proc = self.process(gen)
+        san = self._san
         while self._heap and not proc.triggered:
             t, _, fn, arg = heapq.heappop(self._heap)
             if t > until:
                 raise SimError(f"process did not complete before t={until}")
             self.now = t
+            if san is not None:
+                san.trace(t, fn)
             fn(arg)
         if not proc.triggered:
             raise SimError("deadlock: process blocked with empty event queue")
         if proc.failed:
             raise proc.value
         return proc.value
+
+    # -- simsan surface ------------------------------------------------------
+    def trace_digest(self) -> str:
+        """sha256 over every dispatched ``(time, callback)`` so far.  Two runs
+        of the same scenario under the same seed must agree bit-for-bit."""
+        if self._san is None:
+            raise SimError("trace_digest requires Sim(sanitize=True)")
+        return self._san.digest()
+
+    def register_leak_check(self, name: str, fn: Callable[[], float]) -> None:
+        """Install a named resource gauge (count of currently-held resources).
+        Subsystems register these at construction; the audit compares gauges
+        against the baseline snapshot.  Re-registering a name replaces it."""
+        self._leak_checks[name] = fn
+
+    def leak_report(self) -> Dict[str, float]:
+        return {name: fn() for name, fn in sorted(self._leak_checks.items())}
+
+    def leak_baseline(self) -> Dict[str, float]:
+        """Snapshot current gauges as the audit baseline (call after setup so
+        long-lived resources — listen sockets, live relay reservations —
+        don't read as leaks)."""
+        self._leak_baseline = self.leak_report()
+        return dict(self._leak_baseline)
+
+    def leak_audit(self) -> Dict[str, float]:
+        """Gauges that moved above the baseline: ``{name: excess}``.  Empty
+        means every audited resource returned to baseline."""
+        base = self._leak_baseline
+        return {name: v - base.get(name, 0)
+                for name, v in self.leak_report().items()
+                if v - base.get(name, 0) != 0}
+
+    def san_report(self) -> Dict[str, Any]:
+        """Full simsan report: trace digest, double-settles, orphans, leaks."""
+        if self._san is None:
+            raise SimError("san_report requires Sim(sanitize=True)")
+        return {
+            "trace_digest": self._san.digest(),
+            "events": self._san.events_traced,
+            "double_settles": list(self._san.double_settles),
+            "orphans": self._san.orphans(),
+            "leaks": self.leak_audit(),
+        }
 
 
 # --------------------------------------------------------------------------
@@ -521,7 +666,9 @@ class Host:
         if fn is None:
             stream._do_reset()
             return
-        self.net.sim.process(fn(stream))
+        # daemon: inbound handlers are driven by the remote peer and may park
+        # on recv() past the end of a scenario — not orphans.
+        self.net.sim.process(fn(stream), daemon=True)
 
     def connection_to(self, other: "Host") -> Optional[Connection]:
         for c in self._connections.get(other.name, []):
@@ -543,6 +690,33 @@ class Network:
         self._by_ip: Dict[str, Any] = {}   # ip -> Host | NATBox
         self.nats: List[Any] = []          # every NATBox on this fabric
         self._partitions: set = set()     # frozenset({region_a, region_b})
+        sim.register_leak_check("net.sockets", self._open_socket_count)
+        sim.register_leak_check("net.half_open_streams",
+                                self._half_open_stream_count)
+
+    # -- simsan gauges -------------------------------------------------------
+    def _open_socket_count(self) -> int:
+        return sum(len(h._sockets) for h in self.hosts.values())
+
+    def _half_open_stream_count(self) -> int:
+        """Streams on live connections where exactly one endpoint closed —
+        the signature of a handler or caller that forgot to close its side.
+        (Both-open pairs are in-flight exchanges; both-closed are done.)"""
+        n = 0
+        seen: set = set()
+        for h in self.hosts.values():
+            for conns in h._connections.values():
+                for c in conns:
+                    if id(c) in seen or c.closed:
+                        continue
+                    seen.add(id(c))
+                    for pair in c._streams.values():
+                        open_ends = sum(
+                            1 for s in pair
+                            if s is not None and not s.closed and not s.reset)
+                        if open_ends == 1:
+                            n += 1
+        return n
 
     # -- registry ----------------------------------------------------------
     def _register_host(self, host: Host) -> None:

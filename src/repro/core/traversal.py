@@ -131,7 +131,9 @@ class Transport:
             "rejected_capacity": 0, "rejected_foreign": 0,
             "dropped_lost_target": 0,
         }
-        self.sim.process(self._listen())
+        self.sim.process(self._listen(), daemon=True)
+        self.sim.register_leak_check(
+            f"relay.reservations:{host.name}", self._live_reservation_count)
         host.handle(PROTO_PING, self._ping_handler)
         host.handle(PROTO_DCUTR, self._dcutr_handler)
         host.handle(PROTO_AUTONAT, self._autonat_handler)
@@ -282,12 +284,16 @@ class Transport:
 
     # ------------------------------------------------------------------- ping
     def _ping_handler(self, stream: Stream) -> Generator:
-        while True:
-            try:
-                msg = yield from stream.recv(timeout=30.0)
-            except DialError:
-                return
+        # single-shot: ping() opens a fresh stream per probe, so serve one
+        # exchange and close (a parked while-True handler would hold the
+        # server endpoint open long after the client closed its side)
+        try:
+            msg = yield from stream.recv(timeout=30.0)
             stream.send(("pong", msg[1]), 64)
+        except DialError:
+            pass
+        finally:
+            stream.close()
 
     def ping(self, conn: Connection) -> Generator:
         """Returns measured RTT over the connection."""
@@ -415,6 +421,8 @@ class Transport:
             yield from self._punch(targets, nonce, n_advertised=n_adv)
         except DialError:
             return
+        finally:
+            stream.close()
 
     def dcutr_upgrade(self, relayed_conn: Connection) -> Generator:
         """Initiator: attempt to upgrade a relayed connection to direct.
@@ -433,10 +441,13 @@ class Transport:
             # pre-arm punch waiter before telling the peer the nonce
             self._pending[("punch", nonce)] = self.sim.event()
             stream.send(("connect", my_addrs, my_fp, nonce), 160)
-            msg = yield from stream.recv(timeout=10.0)
-            rtt = self.sim.now - t0
-            _, remote_addrs, remote_fp, _ = msg
-            stream.send(("sync",), 64)
+            try:
+                msg = yield from stream.recv(timeout=10.0)
+                rtt = self.sim.now - t0
+                _, remote_addrs, remote_fp, _ = msg
+                stream.send(("sync",), 64)
+            finally:
+                stream.close()
             yield self.sim.timeout(rtt / 2)
             targets, n_adv = self._punch_plan(remote_addrs, remote_fp)
             ok = yield from self._punch(targets, nonce, n_advertised=n_adv)
@@ -479,10 +490,12 @@ class Transport:
         """Second-hop prober: dial back an address on another server's behalf."""
         try:
             msg = yield from stream.recv(timeout=10.0)
+            ok = yield from self.probe_addr(tuple(msg[1]))
+            stream.send(("dialback", ok), 64)
         except DialError:
             return
-        ok = yield from self.probe_addr(tuple(msg[1]))
-        stream.send(("dialback", ok), 64)
+        finally:
+            stream.close()
 
     def _autonat_handler(self, stream: Stream) -> Generator:
         """Serve dial-back probes.  Prefer forwarding to a public neighbor the
@@ -491,6 +504,7 @@ class Transport:
         try:
             msg = yield from stream.recv(timeout=10.0)
         except DialError:
+            stream.close()
             return
         _, addr = msg
         client_host = stream.conn.hosts[0] if stream.conn.hosts[1] is self.host \
@@ -516,6 +530,7 @@ class Transport:
         else:
             ok = yield from self.probe_addr(tuple(addr))
         stream.send(("dialback", ok), 64)
+        stream.close()
 
     def autonat_probe(self, helper_conn: Connection) -> Generator:
         """Ask a connected public peer to dial back our observed addresses.
@@ -558,6 +573,11 @@ class Transport:
             del self.relay_reservations[d]
             self.relay_stats["expired"] += 1
 
+    def _live_reservation_count(self) -> int:
+        """simsan gauge: unexpired relay reservations held on this host."""
+        self._prune_reservations()
+        return len(self.relay_reservations)
+
     def _peer_host_of(self, stream: Stream) -> Host:
         """The host on the far side of a stream's (authenticated) connection
         — never trust a host name claimed inside the message payload."""
@@ -565,6 +585,12 @@ class Transport:
         return a if b is self.host else b
 
     def _relay_reserve_handler(self, stream: Stream) -> Generator:
+        try:
+            yield from self._relay_reserve_inner(stream)
+        finally:
+            stream.close()
+
+    def _relay_reserve_inner(self, stream: Stream) -> Generator:
         try:
             msg = yield from stream.recv(timeout=10.0)
         except DialError:
@@ -599,6 +625,12 @@ class Transport:
 
     def _relay_connect_handler(self, stream: Stream) -> Generator:
         try:
+            yield from self._relay_connect_inner(stream)
+        finally:
+            stream.close()
+
+    def _relay_connect_inner(self, stream: Stream) -> Generator:
+        try:
             msg = yield from stream.recv(timeout=10.0)
         except DialError:
             return
@@ -620,9 +652,9 @@ class Transport:
             return
         # Notify the target so it can account for the incoming circuit.
         stop = conn_to_target.open_stream(PROTO_RELAY_STOP, self.host)
-        stop.send(("incoming", src_host.name), 96)
         try:
-            yield from stop.recv(timeout=5.0)
+            yield from stream_request(stop, ("incoming", src_host.name), 96,
+                                      timeout=5.0)
         except DialError:
             stream.send(("error", "target rejected"), 64)
             return
@@ -647,6 +679,8 @@ class Transport:
             stream.send(("ok",), 64)
         except DialError:
             return
+        finally:
+            stream.close()
 
     def relay_connect(self, relay_conn: Connection, target: PeerId) -> Generator:
         """Client: open a circuit to ``target`` through a connected relay."""

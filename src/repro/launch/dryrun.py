@@ -159,13 +159,13 @@ def _axsize(mesh, axis) -> int:
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             dtype: Any = jnp.bfloat16, verbose: bool = True,
             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-    t0 = time.time()
+    t0 = time.time()  # latlint: disable=L001 host-side compile timing, not sim code
     lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
                                   dtype=dtype, overrides=overrides)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.time() - t0  # latlint: disable=L001 host-side compile timing, not sim code
+    t0 = time.time()  # latlint: disable=L001 host-side compile timing, not sim code
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.time() - t0  # latlint: disable=L001 host-side compile timing, not sim code
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

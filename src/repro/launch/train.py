@@ -62,9 +62,9 @@ def main() -> None:
                                seed=args.seed)
     state = train_state_init(cfg, jax.random.PRNGKey(args.seed))
     trainer = Trainer(cfg, state, sched, data)
-    t0 = time.time()
+    t0 = time.time()  # latlint: disable=L001 CLI wall-clock throughput banner
     hist = trainer.run(args.steps, log_every=max(args.steps // 20, 1))
-    dt = time.time() - t0
+    dt = time.time() - t0  # latlint: disable=L001 CLI wall-clock throughput banner
     toks = args.steps * args.batch * args.seq
     print(f"[train] {args.steps} steps in {dt:.1f}s "
           f"({toks/dt:.0f} tok/s) loss {hist[0]['loss']:.3f} -> "

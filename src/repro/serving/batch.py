@@ -48,6 +48,7 @@ greedy decode through the batched plane still matches
 
 from __future__ import annotations
 
+import itertools
 from collections import deque
 from typing import Any, Deque, Dict, Generator, List, Optional, Tuple
 
@@ -70,6 +71,9 @@ PEER_BW = 8.0e10
 
 #: archs the fused paged-decode path supports (attention-family blocks)
 _FUSED_ARCHS = ("dense", "moe", "vlm", "audio")
+
+#: distinguishes each engine's simsan leak gauge within one Sim
+_ENGINE_SEQ = itertools.count()
 
 
 def _quant_page_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -250,6 +254,8 @@ class BatchEngine:
             "step_sessions": 0, "queue_peak": 0, "slot_reuse": 0,
             "pages": 0, "pages_peak": 0, "idle_evicted": 0,
         }
+        sim.register_leak_check(
+            f"kv.pages:{next(_ENGINE_SEQ)}", self._pages_in_use)
 
     @staticmethod
     def _supports_fused(module: Any) -> bool:

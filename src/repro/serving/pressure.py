@@ -260,7 +260,7 @@ class PressureMonitor:
                              module, n_slots=self.n_slots,
                              page_size=self.page_size)
         yield from server.announce()
-        self.node.sim.process(load_publisher(server))
+        self.node.sim.process(load_publisher(server), daemon=True)
         self.spawned.append(server)
         self.stats["spawned"] += 1
         return server

@@ -193,6 +193,21 @@ class InferenceService(Service):
         resp = yield from self.server._handle(payload, ctx)
         return resp
 
+    @unary("score", request=TensorDictCodec(), response=TensorDictCodec(),
+           timeout=120.0, idempotent=True)
+    def score(self, payload: Any, ctx: RpcContext) -> Generator:
+        """Stateless forward pass: touches no session state, so it is the
+        one v1 op that may be hedged/retried (latlint L004 requires the
+        idempotency to be declared on the MethodSpec, not assumed)."""
+        if payload.get("op") != "score":
+            raise ServiceError(RpcStatus.NOT_FOUND,
+                               "score method only serves op == 'score'")
+        if not self.server.alive:
+            raise ServiceError(RpcStatus.UNAVAILABLE,
+                               f"shard {self.server.shard_idx} is down")
+        resp = yield from self.server._handle(payload, ctx)
+        return resp
+
 
 class InferenceV2Service(Service):
     """The continuous-batching surface: per-step admission/eviction against
@@ -269,7 +284,7 @@ class ShardServer:
         if not hasattr(node, "shard_servers"):
             node.shard_servers = []                      # metrics registry
         node.shard_servers.append(self)
-        node.sim.process(self._reaper())
+        node.sim.process(self._reaper(), daemon=True)
 
     def announce(self) -> Generator:
         yield from self.node.dht.provide(shard_key(self.fleet, self.shard_idx))
@@ -485,7 +500,9 @@ class ShardClient:
                 try:
                     stub = self.node.stub(InferenceService, info,
                                           scope=f"{self.fleet}.{idx}")
-                    resp = yield from stub.infer(payload)
+                    # the dedicated score method declares idempotent=True;
+                    # hedging the stateful `infer` would violate L004
+                    resp = yield from stub.score(payload)
                     self.router.observe(idx, info.peer_id,
                                         self.node.sim.now - t0, True)
                     return resp
@@ -829,5 +846,5 @@ def serve_fleet(nodes: List[LatticaNode], cfg: ModelConfig, params: Any,
     pub = publisher or nodes[0]
     yield from publish_serving_plan(pub, fleet, plan, parts)
     for s in servers:
-        s.node.sim.process(load_publisher(s))
+        s.node.sim.process(load_publisher(s), daemon=True)
     return servers
