@@ -3,6 +3,11 @@ convergence latency, v1/v2 interop, and anti-entropy convergence time.
 
     PYTHONPATH=src python benchmarks/crdt_sync.py               # full report
     PYTHONPATH=src python benchmarks/crdt_sync.py --sync-smoke  # CI gates
+    PYTHONPATH=src python benchmarks/crdt_sync.py --mst-smoke   # MST gate
+
+The ``--mst-smoke`` gate: at 10k registry keys with 1% churn on both
+sides, the Merkle-summary walk localizes the divergence in <=10% of the
+bytes the flat per-key v2 summary would move.
 
 The ``--sync-smoke`` gates (wired into scripts/ci.sh):
   * at ~1k registry-shaped keys with 1% churn per round, the v2 protocol
@@ -99,6 +104,48 @@ def run_delta_efficiency(n_keys: int = N_KEYS, churn: float = CHURN,
     return {"n_keys": n_keys, "churn": churn, "rounds": rounds,
             "v1_bytes_per_round": v1, "v2_bytes_per_round": v2,
             "ratio": v2 / v1 if v1 else 1.0}
+
+
+# ------------------------------------------- 1b. MST summary localization
+
+
+MST_N_KEYS = 10_000
+
+
+def run_mst_efficiency(n_keys: int = MST_N_KEYS, churn: float = CHURN,
+                       rounds: int = 3,
+                       versions: int = 4) -> Dict[str, float]:
+    """Merkle-walk localization bytes vs the flat v2 summary at registry
+    scale.  Two identical ``n_keys``-key stores diverge by ``churn`` on
+    *both* sides each round; the mst pair pays a log-depth probe walk to
+    localize the differing keys, the v2 pair re-ships the full per-key
+    digest summary.  Sync caches are cleared between rounds: at fleet
+    scale a node rarely re-syncs the partner it converged with last, so
+    the cache-miss path is the one that matters."""
+    probe: List[int] = []
+    flat: List[int] = []
+    for proto, counter, out in (("mst", "mst_probe_bytes", probe),
+                                ("v2", "summary_bytes", flat)):
+        sim, a, b = _pair(proto, seed=2)
+        _seed_registry(a, n_keys, versions)
+        _sync_bytes(sim, a, b)              # initial replication
+        assert a.store.digest() == b.store.digest()
+        for r in range(rounds):
+            _churn(a, n_keys, churn, 2 * r + 1)
+            _churn(b, n_keys, churn, 2 * r + 2)
+            a._crdt_sync_cache.clear()
+            b._crdt_sync_cache.clear()
+            before = a.crdt_stats[counter]
+            _sync_bytes(sim, a, b)
+            assert a.store.digest() == b.store.digest(), "round diverged"
+            out.append(a.crdt_stats[counter] - before)
+    probe_mean = sum(probe) / len(probe)
+    flat_mean = sum(flat) / len(flat)
+    return {"n_keys": n_keys, "churn": churn, "rounds": rounds,
+            "versions": versions,
+            "mst_probe_bytes_per_round": probe_mean,
+            "flat_summary_bytes_per_round": flat_mean,
+            "ratio": probe_mean / flat_mean if flat_mean else 1.0}
 
 
 # ------------------------------------------------ 2. push-plane latency
@@ -231,6 +278,35 @@ def main_sync(report: List[str]) -> Dict[str, object]:
             "mixed_interop": mixed}
 
 
+def main_mst(report: List[str]) -> Dict[str, object]:
+    report.append(f"# MST probe walk vs flat v2 summary ({MST_N_KEYS} keys, "
+                  f"{CHURN:.0%} churn/round, both sides diverging)")
+    eff = run_mst_efficiency()
+    report.append(f"flat v2 summary: "
+                  f"{eff['flat_summary_bytes_per_round']:>10.0f} B/round")
+    report.append(f"mst probe walk:  "
+                  f"{eff['mst_probe_bytes_per_round']:>10.0f} B/round"
+                  f"  ({eff['ratio']:.1%} of flat)")
+    return {"mst_efficiency": eff}
+
+
+def mst_smoke() -> int:
+    """CI gate: at registry scale (10k keys, 1% churn) the Merkle walk
+    must localize divergence in <=10% of the flat summary's bytes."""
+    eff = run_mst_efficiency()
+    print(f"[crdt-sync] mst probe {eff['mst_probe_bytes_per_round']:.0f} "
+          f"B/round vs flat summary "
+          f"{eff['flat_summary_bytes_per_round']:.0f} B/round "
+          f"({eff['ratio']:.1%}) at {eff['n_keys']} keys / "
+          f"{eff['churn']:.0%} churn")
+    if eff["ratio"] > 0.10:
+        print(f"[crdt-sync] FAIL: mst probe moved {eff['ratio']:.1%} of "
+              "flat summary bytes (gate: <=10%)")
+        return 1
+    print("[crdt-sync] mst gate passed")
+    return 0
+
+
 def sync_smoke() -> int:
     """CI gates for the delta replication plane."""
     failures = []
@@ -275,7 +351,10 @@ def sync_smoke() -> int:
 if __name__ == "__main__":
     if "--sync-smoke" in sys.argv:
         raise SystemExit(sync_smoke())
+    if "--mst-smoke" in sys.argv:
+        raise SystemExit(mst_smoke())
     out: List[str] = []
     main_sync(out)
+    main_mst(out)
     main(out)
     print("\n".join(out))

@@ -1,0 +1,299 @@
+"""Fleet-scale scenarios: 1k/10k-node overlays under continuous churn.
+
+    PYTHONPATH=src python benchmarks/fleet_scale.py                # report
+    PYTHONPATH=src python benchmarks/fleet_scale.py --fleet-smoke  # CI gates
+
+Each scenario stands up a :func:`repro.core.fleet.make_scale_fleet`
+overlay (Trautwein NAT mix, pre-established edges, virtual clock), starts
+a continuous churn loop restarting 1% of the NAT'd population every 2
+virtual seconds, and then measures the three planes the paper scales:
+
+  * dissemination — registry writes ride the CRDT delta-push plane over
+    the scored gossipsub mesh; delivery is the fraction of nodes whose
+    ``watch`` callback fired within one push window + 3 gossip rounds,
+    and relay fairness is max/mean forwarded-message load;
+  * lookup — DHT provide/find_providers pairs between random nodes;
+  * anti-entropy — a member registry converges through hub publics via
+    MST-summarized sync rounds; probe bytes per exchange are compared
+    against the flat per-key summary a v2 round would ship.
+
+The ``--fleet-smoke`` gates (1k nodes, wired into scripts/ci.sh):
+  * >=99% mean delivery within 3 gossip rounds under churn;
+  * max relay load <= 3x the fleet mean;
+  * every DHT lookup finds its provider;
+  * sampled nodes pull the full member registry (coverage >= 99%);
+  * the whole scenario runs in <= 60 s wall.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core.crdt import encode_summary
+from repro.core.fleet import ScaleFleet, make_scale_fleet
+from repro.core.pubsub import HEARTBEAT
+
+
+# ------------------------------------------------------------------ phases
+
+
+def _attach_watchers(fleet: ScaleFleet,
+                     arrivals: Dict[str, Dict[str, float]]) -> None:
+    """Every node watches ``reg/`` (joining the crdt/reg push topic) and
+    records the virtual time its callback first saw each key."""
+    sim = fleet.sim
+    for node in fleet.nodes:
+        def cb(key: str, value: object, origin: str,
+               _n: str = node.host.name) -> None:
+            arrivals.setdefault(key, {}).setdefault(_n, sim.now)
+        node.watch_crdt("reg/", cb)
+
+
+def _push_phase(fleet: ScaleFleet, arrivals: Dict[str, Dict[str, float]],
+                n_writes: int) -> Dict[str, object]:
+    """Spaced registry writes on random nodes; each rides the delta-push
+    plane as one coalesced doc on crdt/reg.  Delivery counts callbacks
+    fired within push-window + 3 gossip rounds of the write."""
+    sim, rng = fleet.sim, fleet.sim.rng
+    write_t: Dict[str, float] = {}
+    for i in range(n_writes):
+        w = rng.choice(fleet.nodes)
+        key = f"reg/fleet/w{i}"
+        w.store.register(key).set((i, w.host.name), sim.now, w.host.name)
+        write_t[key] = sim.now
+        sim.run(until=sim.now + 1.0)
+    window = fleet.nodes[0].crdt_push_window + 3 * HEARTBEAT
+    sim.run(until=max(write_t.values()) + window + 0.5)
+    n = len(fleet.nodes)
+    fracs = []
+    for key, t0 in write_t.items():
+        got = sum(1 for t in arrivals.get(key, {}).values()
+                  if t <= t0 + window)
+        fracs.append(got / n)
+    return {"writes": n_writes,
+            "delivery_mean": round(sum(fracs) / len(fracs), 4),
+            "delivery_min": round(min(fracs), 4),
+            "window_s": round(window, 2)}
+
+
+def _relay_stats(fleet: ScaleFleet) -> Dict[str, float]:
+    loads = fleet.relay_load()
+    mean = sum(loads) / len(loads)
+    return {"max": max(loads), "mean": round(mean, 2),
+            "ratio": round(max(loads) / mean, 2) if mean else 0.0}
+
+
+def _run_batch(fleet: ScaleFleet, gens: List[object],
+               timeout: float = 8.0) -> List[object]:
+    """Drive a batch of generators as concurrent sim processes.  Virtual
+    time is the *slowest* member, not the sum — sequential driving would
+    drag the whole fleet's heartbeat machinery through minutes of virtual
+    time.  Stragglers past ``timeout`` are abandoned (their processes
+    finish in the background); failures stay on the returned Process."""
+    sim = fleet.sim
+    procs = [sim.process(g) for g in gens]
+    deadline = sim.now + timeout
+    while sim.now < deadline and not all(p.triggered for p in procs):
+        sim.run(until=min(deadline, sim.now + 0.25))
+    return procs
+
+
+def _dht_phase(fleet: ScaleFleet, n_lookups: int) -> Dict[str, object]:
+    """provide/find_providers pairs between random (mostly NAT'd) nodes
+    while the churn loop keeps restarting parts of the overlay."""
+    sim, rng = fleet.sim, fleet.sim.rng
+    t0 = sim.now
+    pairs = [(rng.choice(fleet.nodes), rng.choice(fleet.nodes),
+              hashlib.sha256(f"fleet/model/{i}".encode()).digest())
+             for i in range(n_lookups)]
+    provides = _run_batch(fleet, [p.dht.provide(k) for p, _s, k in pairs],
+                          timeout=20.0)
+    unprovided = sum(1 for p in provides if not p.triggered or p.failed)
+    finds = _run_batch(fleet, [s.dht.find_providers(k)
+                               for _p, s, k in pairs], timeout=20.0)
+    ok = sum(1 for p in finds
+             if p.triggered and not p.failed and p.value)
+    failures = sum(1 for p in finds if not p.triggered or p.failed)
+    return {"lookups": n_lookups, "ok": ok, "failures": failures,
+            "provide_incomplete": unprovided,
+            "virtual_s": round(sim.now - t0, 2)}
+
+
+def _registry_phase(fleet: ScaleFleet, n_members: int, n_hubs: int,
+                    n_pulls: int) -> Dict[str, object]:
+    """Member-registry anti-entropy: members self-register in ``mreg/``
+    (a namespace with no push subscribers, so only sync moves it), upload
+    to hub publics, hubs converge star-wise on hub 0 (two concurrent
+    rounds: first accumulates the union, second distributes it), and
+    sampled NAT'd nodes pull the full registry — all while churn keeps
+    restarting members."""
+    sim, rng = fleet.sim, fleet.sim.rng
+    members = rng.sample(fleet.nodes, min(n_members, len(fleet.nodes)))
+    for m in members:
+        m.store.register(f"mreg/member/{m.host.name}").set(
+            (m.host.region, m.host.name), sim.now, m.host.name)
+    member_keys = [f"mreg/member/{m.host.name}" for m in members]
+    hubs = rng.sample(fleet.publics, min(n_hubs, len(fleet.publics)))
+    before = fleet.summary_bytes()
+    failures = 0
+
+    def batch(syncs: List[object]) -> None:
+        nonlocal failures
+        procs = _run_batch(fleet, syncs)
+        failures += sum(1 for p in procs if not p.triggered or p.failed)
+
+    batch([m.sync_crdt_with(rng.choice(hubs).info()) for m in members])
+    for _ in range(2):
+        batch([h.sync_crdt_with(hubs[0].info()) for h in hubs[1:]])
+    pulled = rng.sample(fleet.natted, min(n_pulls, len(fleet.natted)))
+    hub_of = {n.host.name: rng.choice(hubs) for n in pulled}
+
+    def coverage_of(node: object) -> float:
+        got = sum(1 for k in member_keys
+                  if node.store.entry_vv(k) is not None)
+        return got / len(member_keys)
+
+    batch([n.sync_crdt_with(hub_of[n.host.name].info()) for n in pulled])
+    retry = [n for n in pulled if coverage_of(n) < 0.999]
+    if retry:        # e.g. restarted mid-pull: one more round, fresh hub
+        batch([n.sync_crdt_with(rng.choice(hubs).info()) for n in retry])
+    coverage = [coverage_of(n) for n in pulled]
+    after = fleet.summary_bytes()
+    probe = after["mst_probe_bytes"] - before["mst_probe_bytes"]
+    exchanges = after["mst_exchanges"] - before["mst_exchanges"]
+    probe_per_ex = probe / exchanges if exchanges else 0.0
+    # what ONE flat v2 summary round against a converged hub would ship
+    # latlint: disable=L007 flat-summary byte baseline for the receipt
+    flat = len(encode_summary(hubs[0].store.key_digests()))
+    return {"members": len(members), "hubs": len(hubs),
+            "pulls": len(pulled), "sync_failures": failures,
+            "pull_coverage": round(sum(coverage) / len(coverage), 4),
+            "mst_probe_bytes": probe, "mst_exchanges": exchanges,
+            "probe_bytes_per_exchange": round(probe_per_ex, 1),
+            "flat_summary_bytes": flat,
+            "probe_vs_flat_ratio": round(probe_per_ex / flat, 4)
+            if flat else 0.0}
+
+
+# ---------------------------------------------------------------- scenario
+
+
+def run_fleet_scenario(n_nodes: int, seed: int, *, subscribe: bool,
+                       n_writes: int, n_lookups: int, n_members: int,
+                       n_hubs: int, n_pulls: int,
+                       churn_frac: float = 0.01,
+                       churn_interval: float = 2.0) -> Dict[str, object]:
+    t0 = time.time()
+    fleet = make_scale_fleet(n_nodes, seed=seed)
+    sim = fleet.sim
+    build_wall = time.time() - t0
+    arrivals: Dict[str, Dict[str, float]] = {}
+    if subscribe:
+        _attach_watchers(fleet, arrivals)
+        sim.run(until=sim.now + 5.0)            # mesh settles via heartbeats
+    sim.process(fleet.churn_loop(churn_frac, churn_interval), daemon=True)
+    push: Optional[Dict[str, object]] = None
+    relay: Optional[Dict[str, float]] = None
+    if subscribe and n_writes:
+        push = _push_phase(fleet, arrivals, n_writes)
+        relay = _relay_stats(fleet)
+    dht = _dht_phase(fleet, n_lookups)
+    registry = _registry_phase(fleet, n_members, n_hubs, n_pulls)
+    return {"n_nodes": n_nodes, "seed": seed,
+            "publics": len(fleet.publics), "natted": len(fleet.natted),
+            "edges": fleet.stats["edges"],
+            "churn_events": fleet.stats["churn_events"],
+            "churn": {"frac": churn_frac, "interval_s": churn_interval},
+            "build_wall_s": round(build_wall, 2),
+            "push": push, "relay": relay, "dht": dht,
+            "registry": registry,
+            "virtual_s": round(sim.now, 2),
+            "wall_s": round(time.time() - t0, 2)}
+
+
+def _describe(r: Dict[str, object], report: List[str]) -> None:
+    report.append(f"{r['n_nodes']} nodes ({r['publics']} public / "
+                  f"{r['natted']} NAT'd), {r['edges']} edges, "
+                  f"{r['churn_events']} churn restarts, "
+                  f"built {r['build_wall_s']}s, total {r['wall_s']}s wall")
+    if r["push"]:
+        p, rl = r["push"], r["relay"]
+        report.append(f"  push delivery within {p['window_s']}s: "
+                      f"mean {p['delivery_mean']:.1%} "
+                      f"min {p['delivery_min']:.1%} over {p['writes']} "
+                      f"writes; relay load max/mean = {rl['max']}/"
+                      f"{rl['mean']} ({rl['ratio']}x)")
+    d = r["dht"]
+    report.append(f"  dht: {d['ok']}/{d['lookups']} provider lookups ok "
+                  f"({d['failures']} failed)")
+    g = r["registry"]
+    report.append(f"  registry: {g['members']} members via {g['hubs']} "
+                  f"hubs, pull coverage {g['pull_coverage']:.1%}, "
+                  f"mst probe {g['probe_bytes_per_exchange']:.0f} B/exchange"
+                  f" vs flat {g['flat_summary_bytes']} B "
+                  f"({g['probe_vs_flat_ratio']:.1%})")
+
+
+# ------------------------------------------------------------ entry points
+
+
+_SMOKE_1K = dict(subscribe=True, n_writes=4, n_lookups=16, n_members=60,
+                 n_hubs=32, n_pulls=32)
+_FULL_1K = dict(subscribe=True, n_writes=6, n_lookups=24, n_members=120,
+                n_hubs=48, n_pulls=48)
+_FULL_10K = dict(subscribe=False, n_writes=0, n_lookups=12, n_members=200,
+                 n_hubs=64, n_pulls=64)
+
+
+def main_1k(report: List[str], smoke: bool = False) -> Dict[str, object]:
+    report.append("# 1k-node fleet under 1%/2s churn (Trautwein NAT mix)")
+    r = run_fleet_scenario(1000, seed=3,
+                           **(_SMOKE_1K if smoke else _FULL_1K))
+    _describe(r, report)
+    return r
+
+
+def main_10k(report: List[str], smoke: bool = False) -> Dict[str, object]:
+    report.append("# 10k-node fleet under 1%/2s churn (no subscribe-all: "
+                  "DHT + registry anti-entropy planes)")
+    r = run_fleet_scenario(2000 if smoke else 10_000, seed=5, **_FULL_10K)
+    _describe(r, report)
+    return r
+
+
+def fleet_smoke() -> int:
+    """CI gates over the 1k scenario."""
+    r = run_fleet_scenario(1000, seed=3, **_SMOKE_1K)
+    out: List[str] = []
+    _describe(r, out)
+    for line in out:
+        print(f"[fleet] {line.strip()}")
+    checks = [
+        ("delivery >= 99% within 3 gossip rounds",
+         r["push"]["delivery_mean"] >= 0.99),
+        ("relay load max <= 3x mean", r["relay"]["ratio"] <= 3.0),
+        ("all dht lookups find their provider",
+         r["dht"]["ok"] == r["dht"]["lookups"]),
+        ("registry pull coverage >= 99%",
+         r["registry"]["pull_coverage"] >= 0.99),
+        ("scenario wall time <= 60s", r["wall_s"] <= 60.0),
+    ]
+    failed = [name for name, ok in checks if not ok]
+    for name in failed:
+        print(f"[fleet] FAIL: {name}")
+    if failed:
+        return 1
+    print(f"[fleet] all {len(checks)} gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--fleet-smoke" in sys.argv:
+        raise SystemExit(fleet_smoke())
+    out: List[str] = []
+    main_1k(out)
+    main_10k(out)
+    print("\n".join(out))

@@ -15,6 +15,9 @@ Sections:
     quant       int8_block wire quantization: sync bytes + codec throughput
     crdt        replicated-store convergence (anti-entropy vs delta push)
     crdtsync    v2 delta sync bytes vs full-state, push latency, v1 interop
+    mstsync     MST probe bytes vs flat summary at 10k keys under churn
+    fleet1k     1k-node fleet under churn: push delivery, DHT, registry
+    fleet10k    10k-node fleet (DHT + registry anti-entropy planes)
     shards      sharded inference + failover (Fig. 1-4)
     serving     continuous batching: N concurrent clients, kill, pressure
     roofline    kernels executed + arch × shape roofline terms
@@ -38,8 +41,9 @@ import sys
 import time
 from typing import Callable, Dict, List, Tuple
 
-from . import (_bench, crdt_sync, decode_step, dht_lookup, model_sync,
-               nat_traversal, roofline, rpc_throughput, sharded_inference)
+from . import (_bench, crdt_sync, decode_step, dht_lookup, fleet_scale,
+               model_sync, nat_traversal, roofline, rpc_throughput,
+               sharded_inference)
 
 #: section -> (BENCH group, runner).  Groups with ONE section emit the
 #: section's dict directly (standalone scripts write the same shape);
@@ -55,6 +59,9 @@ SECTIONS: List[Tuple[str, str, Callable[..., dict]]] = [
     ("quant", "model_sync", model_sync.main_quant),
     ("crdt", "crdt_sync", crdt_sync.main),
     ("crdtsync", "crdt_sync", crdt_sync.main_sync),
+    ("mstsync", "crdt_sync", crdt_sync.main_mst),
+    ("fleet1k", "fleet", fleet_scale.main_1k),
+    ("fleet10k", "fleet", fleet_scale.main_10k),
     ("shards", "sharded", sharded_inference.main),
     ("serving", "serving", sharded_inference.main_serving),
     ("roofline", "roofline", roofline.main),

@@ -5,6 +5,7 @@
 #   ./scripts/ci.sh                  run everything
 #   ./scripts/ci.sh --kernel-smoke   fast-decode + quantization gates only
 #   ./scripts/ci.sh --lint           latlint + simsan determinism gates only
+#   ./scripts/ci.sh --fleet-smoke    MST-efficiency + 1k-node churn gates only
 #   SKIP_BENCH=1 ./scripts/ci.sh     tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,10 +26,21 @@ kernel_smoke() {
     python -m benchmarks.run --require-bench
 }
 
+fleet_smoke() {
+    # MST anti-entropy efficiency: at 10k keys / 1% churn the Merkle walk's
+    # probe bytes must be <=10% of the flat per-key summary a v2 round ships
+    python benchmarks/crdt_sync.py --mst-smoke
+    # 1k-node fleet under continuous churn (Trautwein NAT mix): >=99% push
+    # delivery within 3 gossip rounds, relay load max <= 3x mean, every DHT
+    # lookup finds its provider, >=99% registry pull coverage, <=60s wall
+    python benchmarks/fleet_scale.py --fleet-smoke
+}
+
 lint_gate() {
-    # latlint: every rule (L001-L006) must be clean on the shipped tree —
+    # latlint: every rule (L001-L007) must be clean on the shipped tree —
     # violations are either fixed or carry a reasoned waiver
-    # simsan: serving + CRDT-sync scenarios must produce bit-identical
+    # simsan: serving + CRDT-sync + churned-fleet scenarios must produce
+    # bit-identical
     # event-trace digests across a double run, survive a seeded same-time
     # tie-break perturbation with the same functional result, and finish
     # with zero double-settles/orphans and a leak audit at baseline
@@ -42,6 +54,11 @@ fi
 
 if [ "${1:-}" = "--lint" ]; then
     lint_gate
+    exit 0
+fi
+
+if [ "${1:-}" = "--fleet-smoke" ]; then
+    fleet_smoke
     exit 0
 fi
 
@@ -73,6 +90,9 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # fast-decode + quantized-sync gates (also runnable standalone via
     # ./scripts/ci.sh --kernel-smoke)
     kernel_smoke
+    # MST probe-efficiency + 1k-node fleet churn gates (also standalone via
+    # ./scripts/ci.sh --fleet-smoke)
+    fleet_smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

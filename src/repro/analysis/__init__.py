@@ -16,12 +16,16 @@ simulator deterministic and the protocol planes well-behaved:
   function silently creates a never-driven generator
 * **L006** Pallas kernel sanity: BlockSpec/grid divisibility and a static
   VMEM footprint estimate against the per-core budget
+* **L007** no flat O(keys) ``key_digests()`` summary construction outside
+  ``core/crdt.py`` — sync probes walk the Merkle summary forest; the flat
+  form is a waivered wire-compat surface for pre-MST peers only
 
 Rules support inline waivers (``# latlint: disable=L00x <reason>``) and a
 machine-readable JSON report.  The simsan side lives in
 :mod:`repro.core.simnet` (``Sim(sanitize=True)``); :mod:`repro.analysis.gates`
-drives the determinism double-run and leak-audit gates over the serving and
-CRDT-sync smokes.  CLI: ``python -m repro.analysis --strict``.
+drives the determinism double-run and leak-audit gates over the serving,
+CRDT-sync, and churned scale-fleet smokes.  CLI:
+``python -m repro.analysis --strict``.
 """
 
 from .latlint import Report, Violation, run_lint  # noqa: F401

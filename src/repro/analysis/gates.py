@@ -151,9 +151,64 @@ def crdt_gate(seed: int = 0, perturb: Optional[int] = None) -> GateRun:
     return _finish(sim, (ok, digest))
 
 
+# ---------------------------------------------------------------------------
+# fleet gate: scale-fleet churn — scored mesh + MST anti-entropy hygiene
+# ---------------------------------------------------------------------------
+
+
+def fleet_gate(seed: int = 0, perturb: Optional[int] = None) -> GateRun:
+    """NAT-mixed scale fleet under a churn wave: a registry write rides the
+    push plane while restarts tear mesh links down, then star-pattern MST
+    anti-entropy repairs the restarted replicas.  Exercises graft/prune,
+    subscription re-announce and the bounded mesh caches — the audit
+    charges any mesh state (mcache, seen-set, pending IWANTs) a restart or
+    repair fails to return.  Fingerprint: (converged?, store digest)."""
+    from ..core.fleet import make_scale_fleet
+
+    sim = Sim(seed=seed, sanitize=True, perturb=perturb)
+    fleet = make_scale_fleet(48, sim=sim)
+    writer = fleet.publics[0]
+    hub = fleet.publics[1]
+    for n in fleet.nodes:
+        n.join_crdt_push("reg")
+    sim.run(until=sim.now + 10)      # subscription propagation + mesh graft
+
+    def sync_round() -> None:
+        # every node anti-entropies with the hub concurrently; delta2 sync
+        # is bidirectional, so one gather round + one distribute round
+        # spreads the union even to replicas that missed every push
+        for _ in range(2):
+            procs = [sim.process(n.sync_crdt_with(hub.info()))
+                     for n in fleet.nodes if n is not hub]
+            deadline = sim.now + 60.0
+            while sim.now < deadline and not all(p.triggered for p in procs):
+                sim.run(until=min(deadline, sim.now + 0.5))
+
+    def write_churn_converge(tag: int) -> bool:
+        for i in range(4):
+            writer.store.orset(f"reg/gate{tag}").add(
+                (tag, bytes([tag, i]) * 16), writer.host.name)
+        writer.store.counter("reg/steps").increment(writer.host.name, tag)
+        sim.run(until=sim.now + 2)   # let the push wave land first
+        fleet.churn_wave(0.05)       # restart NAT'd members mid-flight
+        sim.run(until=sim.now + 5)   # restarted nodes re-announce + regraft
+        sync_round()
+        return wait_converged(sim, fleet.nodes, timeout=300.0)
+
+    # warm-up: dials, push meshes, relay paths, first churn's re-wiring
+    write_churn_converge(1)
+    sim.run(until=sim.now + 30)      # heartbeats expire transient IWANTs
+    sim.leak_baseline()
+    ok = write_churn_converge(2)
+    sim.run(until=sim.now + 30)
+    digest = writer.store.digest().hex()
+    return _finish(sim, (ok, digest))
+
+
 GATES: Dict[str, GateFn] = {
     "serving": serving_gate,
     "crdt-sync": crdt_gate,
+    "fleet": fleet_gate,
 }
 
 

@@ -158,7 +158,7 @@ def default_rules() -> List[Rule]:
     from . import kernel_lint, rules
     return [rules.WallClockRule(), rules.RawRpcRule(), rules.PickleRule(),
             rules.HedgedIdempotentRule(), rules.OrphanGeneratorRule(),
-            kernel_lint.KernelSanityRule()]
+            kernel_lint.KernelSanityRule(), rules.FlatSummaryRule()]
 
 
 def _collect_files(paths: Sequence[Path]) -> List[SourceFile]:

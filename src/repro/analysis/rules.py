@@ -1,4 +1,4 @@
-"""latlint rules L001–L005 (AST checks; L006 lives in kernel_lint).
+"""latlint rules L001–L005 and L007 (AST checks; L006 lives in kernel_lint).
 
 Each rule encodes a convention the repo's determinism or safety story
 depends on; see the module docstring of :mod:`repro.analysis` for the
@@ -309,3 +309,30 @@ class OrphanGeneratorRule(Rule):
                     "creates a generator nothing will drive — use "
                     "`yield from {0}(...)` or `sim.process({0}(...))`"
                     .format(name))
+
+
+# ---------------------------------------------------------------------------
+# L007 — O(keys) flat summary construction outside the Merkle path
+# ---------------------------------------------------------------------------
+
+_L007_EXEMPT = ("core/crdt.py",)
+
+
+class FlatSummaryRule(Rule):
+    id = "L007"
+    title = "no flat O(keys) key_digests() summary outside core/crdt.py"
+
+    def applies(self, rel: str) -> bool:
+        return not rel.endswith(_L007_EXEMPT)
+
+    def check(self, sf: SourceFile, ctx: LintContext) -> Iterable[Violation]:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                name = terminal_name(node.func)
+                if name == "key_digests":
+                    yield self.violation(
+                        sf, node, "key_digests() builds an O(keys) flat "
+                        "summary every call — sync probes should walk "
+                        "summary_forest()/summary_roots() (O(log n) MST "
+                        "localization); waive only where the flat v2/v1 "
+                        "wire surface for old peers is the point")

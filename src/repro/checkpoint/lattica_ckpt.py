@@ -177,6 +177,30 @@ def chunk_spec_of(node: LatticaNode, root: CID) -> Optional[ChunkSpec]:
         return None
 
 
+def negotiate_chunk_spec(node: LatticaNode, root: CID,
+                         prefer: Optional[ChunkSpec] = None,
+                         ) -> Optional[ChunkSpec]:
+    """Settle which ``ChunkSpec`` governs a fetched checkpoint.
+
+    Content addressing means the publisher always wins — the DAG's
+    boundaries are baked into its CIDs and a fetcher cannot re-cut them —
+    so "negotiation" is the graceful-degradation half: a fetcher with a
+    different preference accepts the recorded spec, the mismatch is
+    counted on ``bitswap.stats`` so operators can see a fleet fragmenting
+    into incompatible chunking, and the returned spec is what the fetcher
+    must use for its own delta re-publishes to keep unchanged-content
+    CIDs stable.  Falls back to the fetcher's preference when the
+    manifest records nothing (v1 / spec-less meta)."""
+    recorded = chunk_spec_of(node, root)
+    stats = node.bitswap.stats
+    stats["spec_negotiated"] += 1
+    if recorded is None:
+        return prefer
+    if prefer is not None and prefer != recorded:
+        stats["spec_mismatch"] += 1
+    return recorded
+
+
 def publish_checkpoint(node: LatticaNode, params: Any, step: int,
                        fleet: str, base: Optional[CID] = None,
                        spec: Optional[ChunkSpec] = None,
@@ -230,15 +254,20 @@ def publish_checkpoint(node: LatticaNode, params: Any, step: int,
 
 def fetch_checkpoint(node: LatticaNode, root: CID, like: Any = None,
                      hint_providers: Optional[List[PeerInfo]] = None,
-                     fleet: Optional[str] = None) -> Generator:
+                     fleet: Optional[str] = None,
+                     prefer_spec: Optional[ChunkSpec] = None) -> Generator:
     """Swarm-fetch a model version; returns the params pytree.
 
     Hierarchical (v2) roots reassemble per-tensor — sub-DAGs already in the
     local store (tensors unchanged since the last fetched version) are not
     re-fetched.  Flat (v1) roots take the legacy whole-blob path.  With
     ``fleet``, the fetched root is pinned as that fleet's latest (evicting
-    older versions under a blockstore budget)."""
+    older versions under a blockstore budget).  ``prefer_spec`` states the
+    fetcher's chunking preference: when it differs from what the publisher
+    recorded, the fetch still proceeds on the publisher's boundaries (see
+    :func:`negotiate_chunk_spec`) and the mismatch is counted."""
     yield from node.fetch_artifact(root, hint_providers, assemble=False)
+    negotiate_chunk_spec(node, root, prefer_spec)
     manifest = node.blockstore.peek(root)
     try:
         # store blocks were verified on put; skip re-hashing on reassembly

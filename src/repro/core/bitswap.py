@@ -140,7 +140,8 @@ class Bitswap:
         self.stats = {"blocks_served": 0, "blocks_fetched": 0,
                       "bytes_served": 0, "bytes_fetched": 0, "retries": 0,
                       "stream_sessions": 0, "have_probes": 0,
-                      "have_skips": 0, "unsolicited_rejected": 0}
+                      "have_skips": 0, "unsolicited_rejected": 0,
+                      "spec_negotiated": 0, "spec_mismatch": 0}
         self.scores: Dict[bytes, ProviderScore] = {}
         node.serve(BitswapService(self))
 

@@ -118,9 +118,16 @@ def dashboard(nodes: Iterable["LatticaNode"]) -> str:
     for r in rows:
         lines.append(" ".join(
             f"{str(r.get(name, ''))[:w]:>{w}}" for name, w in _DASH_COLS))
+    fwd = [r.get("pubsub.forwarded", 0) for r in rows] or [0]
     totals = {
         "direct_ok": sum(r.get("transport.punch_ok", 0) for r in rows),
         "punch_fail": sum(r.get("transport.punch_fail", 0) for r in rows),
+        # mesh relay load: a healthy scored mesh keeps max near mean —
+        # flood dissemination concentrates on well-known hubs instead
+        "mesh_relay_max": max(fwd),
+        "mesh_relay_mean": round(sum(fwd) / len(fwd), 1),
+        # anti-entropy probe bytes (Merkle summary walks, O(log n)/probe)
+        "summary_bytes": sum(r.get("crdt.mst_probe_bytes", 0) for r in rows),
         "bytes_moved": sum(r.get("bitswap.bytes_fetched", 0) for r in rows),
         "rpc_served": sum(r.get("rpc.unary_served", 0) for r in rows),
         "rpc_errors": sum(r.get("rpc.errors", 0) for r in rows),

@@ -65,13 +65,19 @@ class NATBox:
 
     def __init__(self, net: "Network", kind: NATKind,
                  alloc: Union[PortAlloc, str] = PortAlloc.SEQUENTIAL,
-                 delta: int = 1, port_base: int = 20000):
+                 delta: int = 1, port_base: int = 20000,
+                 ttl: Optional[float] = None):
         self.net = net
         self.kind = kind
         self.alloc = PortAlloc(alloc)
         self.delta = int(delta) if self.alloc is not PortAlloc.SEQUENTIAL else 1
         if self.alloc is PortAlloc.FIXED_DELTA and self.delta < 1:
             raise ValueError("fixed_delta allocator needs delta >= 1")
+        if ttl is not None and ttl <= 0:
+            raise ValueError("nat mapping ttl must be positive")
+        #: Idle seconds after which a mapping expires (RFC 4787 REQ-5 UDP
+        #: timer).  ``None`` keeps mappings forever — the pre-expiry model.
+        self.ttl = ttl
         self.public_ip = f"198.51.{next(NATBox._ip_seq)}.1"
         self._next_port = port_base
         # cone NATs: (int_ip, int_port) -> ext_port
@@ -82,6 +88,9 @@ class NATBox:
         self._rev: Dict[int, Tuple["Host", int]] = {}
         # filter state: ext_port -> set of remote addrs/ips sent to
         self._sent_to: Dict[int, Set[Addr]] = {}
+        # expiry state: ext_port -> last traffic time / owning map key
+        self._last_used: Dict[int, float] = {}
+        self._key_of: Dict[int, Tuple] = {}
         self._hosts: Dict[str, "Host"] = {}
         #: Per-box traversal counters (aggregated per kind by
         #: ``Network.nat_stats``).
@@ -90,6 +99,7 @@ class NATBox:
             "inbound_ok": 0,          # inbound datagrams routed through
             "inbound_filtered": 0,    # dropped by the filter state machine
             "inbound_unmapped": 0,    # dropped: no mapping at that ext port
+            "expired": 0,             # mappings reclaimed by the idle timer
         }
         net.register_nat(self)
 
@@ -115,46 +125,82 @@ class NATBox:
         ext = self._alloc_port()
         self._rev[ext] = (host, int_port)
         self._sent_to[ext] = set()
+        self._last_used[ext] = self.net.sim.now
         self.stats["mappings"] += 1
         return ext
+
+    # -- expiry --------------------------------------------------------------
+    def _expired(self, ext: int) -> bool:
+        if self.ttl is None:
+            return False
+        last = self._last_used.get(ext)
+        return last is not None and self.net.sim.now - last > self.ttl
+
+    def _purge(self, ext: int) -> None:
+        """Reclaim one idle mapping: external port, filter state, and the
+        owning cone/symmetric table entry all go together, so the next
+        outbound flow mints a *fresh* external port (which is exactly what
+        breaks stale advertised addresses on real NATs)."""
+        self._rev.pop(ext, None)
+        self._sent_to.pop(ext, None)
+        self._last_used.pop(ext, None)
+        key = self._key_of.pop(ext, None)
+        if key is not None:
+            if len(key) == 3:
+                self._sym_map.pop(key, None)
+            else:
+                self._cone_map.pop(key, None)
+        self.stats["expired"] += 1
 
     # -- outbound ------------------------------------------------------------
     def map_outbound(self, host: "Host", int_port: int, dst: Addr) -> Addr:
         if self.kind is NATKind.SYMMETRIC:
-            key = (host.ip, int_port, dst)
-            if key not in self._sym_map:
-                self._sym_map[key] = self._mint(host, int_port)
-            ext = self._sym_map[key]
+            key: Tuple = (host.ip, int_port, dst)
+            table: Dict = self._sym_map
         else:
-            ckey = (host.ip, int_port)
-            if ckey not in self._cone_map:
-                self._cone_map[ckey] = self._mint(host, int_port)
-            ext = self._cone_map[ckey]
+            key = (host.ip, int_port)
+            table = self._cone_map
+        ext = table.get(key)
+        if ext is not None and self._expired(ext):
+            self._purge(ext)
+            ext = None
+        if ext is None:
+            ext = table[key] = self._mint(host, int_port)
+            self._key_of[ext] = key
         self._sent_to[ext].add(dst)
+        self._last_used[ext] = self.net.sim.now
         return (self.public_ip, ext)
 
     # -- inbound -------------------------------------------------------------
     def filter_inbound(self, ext_port: int, src: Addr) -> Optional[Tuple["Host", int]]:
         entry = self._rev.get(ext_port)
+        if entry is not None and self._expired(ext_port):
+            self._purge(ext_port)
+            entry = None
         if entry is None:
             self.stats["inbound_unmapped"] += 1
             return None
         sent = self._sent_to.get(ext_port, set())
         if self.kind is NATKind.FULL_CONE:
-            self.stats["inbound_ok"] += 1
-            return entry
+            return self._pass(ext_port, entry)
         if self.kind is NATKind.RESTRICTED_CONE:
             if any(a[0] == src[0] for a in sent):
-                self.stats["inbound_ok"] += 1
-                return entry
+                return self._pass(ext_port, entry)
             self.stats["inbound_filtered"] += 1
             return None
         # PORT_RESTRICTED and SYMMETRIC both filter on (ip, port)
         if src in sent:
-            self.stats["inbound_ok"] += 1
-            return entry
+            return self._pass(ext_port, entry)
         self.stats["inbound_filtered"] += 1
         return None
+
+    def _pass(self, ext_port: int,
+              entry: Tuple["Host", int]) -> Tuple["Host", int]:
+        """Route one inbound datagram through; established flows keep
+        their mapping alive in both directions (RFC 4787 REQ-6)."""
+        self.stats["inbound_ok"] += 1
+        self._last_used[ext_port] = self.net.sim.now
+        return entry
 
 
 def nat_label(box: Optional[NATBox]) -> str:
@@ -175,9 +221,8 @@ def aggregate_nat_stats(boxes: List[NATBox]) -> Dict[str, Dict[str, int]]:
     out: Dict[str, Dict[str, int]] = {}
     for box in boxes:
         key = nat_label(box)
-        row = out.setdefault(key, {"boxes": 0, "mappings": 0, "inbound_ok": 0,
-                                   "inbound_filtered": 0, "inbound_unmapped": 0})
+        row = out.setdefault(key, {"boxes": 0})
         row["boxes"] += 1
         for k, v in box.stats.items():
-            row[k] += v
+            row[k] = row.get(k, 0) + v
     return out

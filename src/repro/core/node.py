@@ -17,9 +17,13 @@ from typing import Any, Dict, Generator, List, Optional, Tuple, TYPE_CHECKING
 from .bitswap import Bitswap
 from .blockstore import BlockStore
 from .cid import CID, ChunkSpec, build_dag, build_tree_dag
-from .crdt import (ReplicatedStore, decode_delta_request, decode_summary,
-                   decode_vv_map, encode_delta_request, encode_summary,
-                   encode_vv_map)
+from .crdt import (MST_LEAF_SIZE, ReplicatedStore, decode_delta2_request,
+                   decode_delta2_response, decode_delta_request,
+                   decode_mst_request, decode_mst_response, decode_summary,
+                   decode_vv_map, encode_delta2_request,
+                   encode_delta2_response, encode_delta_request,
+                   encode_mst_request, encode_mst_response, encode_summary,
+                   encode_vv_map, mst_wire_hash)
 from .dht import KademliaDHT, PeerInfo
 from .peer import Multiaddr, PeerId
 from .pubsub import PubSub
@@ -98,6 +102,7 @@ class CrdtSyncV2Service(CrdtSyncService):
         theirs = decode_summary(payload)
         yield ctx.cpu(20e-6)
         store = self.node.store
+        # latlint: disable=L007 serves the flat-v2 wire surface for old peers
         mine = store.key_digests()
         diff: Dict[str, Any] = {}
         for key, dg in theirs.items():
@@ -120,6 +125,65 @@ class CrdtSyncV2Service(CrdtSyncService):
         return ReplicatedStore.encode_delta(mine)
 
 
+class CrdtSyncMstService(CrdtSyncV2Service):
+    """Merkle-summarized anti-entropy: the caller walks our namespace-
+    sharded summary forest (``crdt.mst``) to localize differing keys in
+    O(log n) tree nodes, then runs the existing ``crdt.delta`` round on
+    just those keys.  The flat v2 ``crdt.summary`` and the v1 full-state
+    surface stay served, so mixed fleets negotiate downward per peer."""
+
+    @unary("crdt.mst", request=ByteLength(), response=ByteLength(),
+           idempotent=True, timeout=30.0)
+    def mst(self, payload: Any, ctx: RpcContext) -> Generator:
+        want_roots, queries = decode_mst_request(payload)
+        yield ctx.cpu(15e-6)
+        store = self.node.store
+        forest = store.summary_forest()
+        nodes: List[Dict[str, Any]] = []
+        for ns, path in queries:
+            tree = forest.get(ns)
+            if tree is None or not tree.keys_under(path):
+                nodes.append({"ns": ns, "p": path, "t": "x"})
+            elif tree.is_leaf(path):
+                kd = {k: [dg, store.entry_vv(k)]
+                      for k, dg in tree.leaf_digests(path).items()}
+                nodes.append({"ns": ns, "p": path, "t": "l", "kd": kd})
+            else:
+                nodes.append({"ns": ns, "p": path, "t": "i",
+                              "c": tree.children(path)})
+        roots = store.summary_roots() if want_roots else None
+        return encode_mst_response(nodes, roots)
+
+    @unary("crdt.delta2", request=ByteLength(), response=ByteLength(),
+           idempotent=True, timeout=60.0)
+    def delta2(self, payload: Any, ctx: RpcContext) -> Generator:
+        """The MST walk's delta round.  Beyond ``crdt.delta`` it (a) ships
+        full state for our keys under the caller's reconcile-bucket paths
+        that its vv map does not name (the caller never fetched our per-key
+        digests for those buckets), and (b) returns a ``want`` vv map for
+        the keys where the caller's vv shows state we lack, so it can
+        answer with one push-only ``crdt.delta``."""
+        vv_map, their_deltas, buckets = decode_delta2_request(payload)
+        yield ctx.cpu(30e-6)
+        store = self.node.store
+        if their_deltas and store.apply_delta(their_deltas):
+            self.node._schedule_crdt_push()     # rumor-monger fresh state
+        mine = store.delta_since(vv_map, keys=vv_map.keys())
+        forest = store.summary_forest()
+        for ns, path in buckets:
+            tree = forest.get(ns)
+            if tree is None:
+                continue
+            extra = [k for k in tree.keys_under(path) if k not in vv_map]
+            if extra:
+                mine.update(store.delta_since({}, keys=extra))
+        want: Dict[str, Any] = {}
+        for k, vv in vv_map.items():
+            if vv and store.entry_vv(k) != vv:
+                want[k] = store.entry_vv(k)
+        return encode_delta2_response(mine, want)
+
+
 def crdt_ns(key: str) -> str:
     """Namespace of a store key: its first path segment (``ckpt/f`` →
     ``ckpt``).  Delta pushes are published per-namespace on
@@ -133,8 +197,9 @@ class LatticaNode:
                  serve_rendezvous: bool = False,
                  machine: Optional[str] = None,
                  store_budget: Optional[int] = None,
-                 crdt_proto: str = "v2",
-                 crdt_push: bool = True):
+                 crdt_proto: str = "mst",
+                 crdt_push: bool = True,
+                 crdt_push_window: float = 0.0):
         self.net = net
         self.sim: Sim = net.sim
         self.host: Host = net.host(name, region=region, zone=zone, nat=nat,
@@ -153,21 +218,29 @@ class LatticaNode:
         self.store = ReplicatedStore(replica=name)
         self.peers: Dict[PeerId, PeerInfo] = {}
         self.infos_by_host: Dict[str, PeerInfo] = {}
-        if crdt_proto not in ("v1", "v2"):
+        if crdt_proto not in ("v1", "v2", "mst"):
             raise ValueError(f"unknown crdt_proto {crdt_proto!r}")
-        #: "v2" syncs via summary + per-key deltas (falling back per peer);
-        #: "v1" forces the legacy digest→full-swap protocol and serves only
-        #: the v1 wire surface (used to exercise mixed-version fleets)
+        #: "mst" (default) localizes differing keys via the Merkle summary
+        #: forest walk; "v2" uses the flat per-key digest summary; "v1"
+        #: forces the legacy digest→full-swap protocol and serves only the
+        #: v1 wire surface.  Each tier negotiates downward per peer
+        #: (mst→v2→v1), so mixed-version fleets still converge.
         self.crdt_proto = crdt_proto
         #: eager convergence: local mutations publish deltas on crdt/<ns>
         #: pubsub topics so connected subscribers converge in one gossip
         #: round instead of waiting for an anti-entropy tick
-        self.crdt_push = crdt_push and crdt_proto == "v2"
+        self.crdt_push = crdt_push and crdt_proto in ("v2", "mst")
+        #: how long a scheduled push waits to coalesce further writes; 0.0
+        #: batches only the same event instant (one-tick debounce), while a
+        #: positive window lets high-churn namespaces ship one delta doc
+        #: per window instead of per instant
+        self.crdt_push_window = float(crdt_push_window)
         self.crdt_stats = {"rounds": 0, "delta_exchanges": 0,
                            "full_exchanges": 0, "tx_bytes": 0, "rx_bytes": 0,
                            "push_published": 0, "push_bytes": 0,
                            "push_applied": 0, "push_rejected": 0,
-                           "summary_skipped": 0}
+                           "summary_skipped": 0, "summary_bytes": 0,
+                           "mst_exchanges": 0, "mst_probe_bytes": 0}
         self._crdt_peer_proto: Dict[PeerId, str] = {}
         #: per peer (our digest, our vv) snapshotted when both sides last
         #: held identical state — lets steady-state rounds skip the
@@ -178,7 +251,8 @@ class LatticaNode:
         self._crdt_topics: set = set()
         self.identity = self.serve(IdentityService(self))
         self.crdt_sync = self.serve(
-            CrdtSyncV2Service(self) if crdt_proto == "v2"
+            CrdtSyncMstService(self) if crdt_proto == "mst"
+            else CrdtSyncV2Service(self) if crdt_proto == "v2"
             else CrdtSyncService(self))
         if self.crdt_push:
             self.store.on_local_change(self._on_crdt_mutation)
@@ -429,12 +503,14 @@ class LatticaNode:
     def sync_crdt_with(self, info: PeerInfo) -> Generator:
         """One anti-entropy round with one peer; returns True if state moved.
 
-        v2 (default): digest probe → per-key digest summary → per-key delta
-        transfer, so bytes moved are O(changed-state).  Peers that do not
-        serve the v2 methods (``NOT_FOUND``) are remembered and get the v1
-        full-state exchange; a v1-configured node always speaks v1."""
+        mst (default): digest probe → Merkle summary-forest walk localizes
+        differing keys in O(log n) tree nodes → per-key delta transfer.
+        v2: digest probe → flat per-key digest summary → delta transfer.
+        Peers that do not serve a tier's methods (``NOT_FOUND``) are
+        remembered and get the next tier down (mst→v2→v1); a v1-configured
+        node always speaks v1."""
         stats = self.crdt_stats
-        stub = self.stub(CrdtSyncV2Service, info)
+        stub = self.stub(CrdtSyncMstService, info)
         theirs = yield from stub.digest()
         stats["rounds"] += 1
         if theirs == self.store.digest():
@@ -443,8 +519,8 @@ class LatticaNode:
             # summary exchange
             self._crdt_sync_cache[info.peer_id] = (theirs, self.store.vv())
             return False
-        if (self.crdt_proto == "v2"
-                and self._crdt_peer_proto.get(info.peer_id) != "v1"):
+        peer_proto = self._crdt_peer_proto.get(info.peer_id)
+        if self.crdt_proto in ("v2", "mst") and peer_proto != "v1":
             cached = self._crdt_sync_cache.get(info.peer_id)
             if cached is not None and cached[0] == theirs:
                 # the peer still holds exactly the state both sides shared
@@ -453,6 +529,19 @@ class LatticaNode:
                 # without the crdt.summary round trip
                 moved = yield from self._sync_crdt_skip(stub, info, cached[1])
                 return moved
+            if self.crdt_proto == "mst" and peer_proto != "v2":
+                try:
+                    moved = yield from self._sync_crdt_mst(stub)
+                    stats["delta_exchanges"] += 1
+                    stats["mst_exchanges"] += 1
+                    self._crdt_sync_cache[info.peer_id] = (
+                        self.store.digest(), self.store.vv())
+                    return moved
+                except ServiceError as e:
+                    if e.status is not RpcStatus.NOT_FOUND:
+                        raise
+                    # peer predates the MST surface; remember and use flat v2
+                    self._crdt_peer_proto[info.peer_id] = "v2"
             try:
                 moved = yield from self._sync_crdt_v2(stub)
                 stats["delta_exchanges"] += 1
@@ -476,14 +565,124 @@ class LatticaNode:
             self._schedule_crdt_push()
         return True
 
+    def _sync_crdt_mst(self, stub: Stub) -> Generator:
+        """Merkle walk + delta round of the mst protocol (digest already
+        differed).  Round 0 fetches the peer's per-namespace roots; each
+        following round batch-queries the differing subtrees one level
+        deeper.  A differing subtree that is bucket-sized on *our* side
+        stops descending there: its keys are reconciled through the
+        ``crdt.delta2`` round's vv exchange (the responder ships its
+        unnamed keys under the bucket path, and its ``want`` map pulls our
+        surplus) — the probe never fetches per-key digest docs for buckets
+        both sides hold.  Returns True if any state moved either way."""
+        stats = self.crdt_stats
+        store = self.store
+
+        def track(req: bytes, resp: bytes) -> None:
+            stats["tx_bytes"] += len(req)
+            stats["rx_bytes"] += len(resp)
+            stats["mst_probe_bytes"] += len(req) + len(resp)
+
+        req = encode_mst_request([], want_roots=True)
+        resp = yield from stub.mst(req)
+        track(req, resp)
+        their_roots, _ = decode_mst_response(resp)
+        their_roots = their_roots or {}
+        forest = store.summary_forest()
+        my_roots = {ns: mst_wire_hash(t.root()) for ns, t in forest.items()}
+
+        want_vv: Dict[str, Any] = {}    # remote-differing key -> their vv
+        local_only: set = set()         # our keys the peer lacks entirely
+        buckets: List[Tuple[str, str]] = []     # differing shared buckets
+        frontier: List[Tuple[str, str]] = []
+        for ns in sorted(set(my_roots) | set(their_roots)):
+            if my_roots.get(ns) == their_roots.get(ns):
+                continue
+            if ns not in their_roots:
+                local_only.update(forest[ns].keys_under(""))
+            else:
+                frontier.append((ns, ""))
+        rounds = 0
+        while frontier and rounds < 64:
+            rounds += 1
+            batch, frontier = frontier[:512], frontier[512:]
+            req = encode_mst_request(batch)
+            resp = yield from stub.mst(req)
+            track(req, resp)
+            _, docs = decode_mst_response(resp)
+            for nd in docs:
+                ns, path, t = nd["ns"], nd["p"], nd["t"]
+                tree = forest.get(ns)
+                local_keys = tree.keys_under(path) if tree is not None else []
+                if t == "x":
+                    # peer has nothing under this subtree
+                    local_only.update(local_keys)
+                elif t == "i":
+                    their_children = nd["c"]        # wire-width hashes
+                    mine_children = (
+                        {nib: mst_wire_hash(h)
+                         for nib, h in tree.children(path).items()}
+                        if local_keys else {})
+                    for nib in sorted(set(their_children) | set(mine_children)):
+                        th = their_children.get(nib)
+                        if th == mine_children.get(nib):
+                            continue
+                        if th is None:
+                            local_only.update(tree.keys_under(path + nib))
+                            continue
+                        sub = path + nib
+                        n_sub = (len(tree.keys_under(sub))
+                                 if tree is not None else 0)
+                        if 0 < n_sub <= MST_LEAF_SIZE:
+                            buckets.append((ns, sub))
+                        else:
+                            frontier.append((ns, sub))
+                else:   # leaf doc: our side was empty (or outsized) here
+                    their_kd = nd["kd"]
+                    mine_kd = (tree.leaf_digests(path)
+                               if tree is not None else {})
+                    for k, pair in their_kd.items():
+                        if mine_kd.get(k) != pair[0]:
+                            want_vv[k] = pair[1]
+                    for k in local_keys:
+                        if k not in their_kd:
+                            local_only.add(k)
+        diff: Dict[str, Any] = dict(want_vv)
+        for k in local_only:
+            diff.setdefault(k, None)    # peer knows nothing of these
+        if not diff and not buckets:
+            return False
+        push = store.delta_since(diff, keys=diff.keys())
+        my_vv = {k: store.entry_vv(k) for k in diff}
+        for ns, path in buckets:
+            for k in forest[ns].keys_under(path):
+                my_vv[k] = store.entry_vv(k)
+        req = encode_delta2_request(my_vv, push, buckets)
+        dresp = yield from stub.delta2(req)
+        stats["tx_bytes"] += len(req)
+        stats["rx_bytes"] += len(dresp)
+        their_deltas, want = decode_delta2_response(dresp)
+        changed = store.apply_delta(their_deltas) if their_deltas else []
+        push2 = store.delta_since(want, keys=want.keys()) if want else {}
+        if push2:
+            req2 = encode_delta_request({}, push2)
+            dresp2 = yield from stub.delta(req2)
+            stats["tx_bytes"] += len(req2)
+            stats["rx_bytes"] += len(dresp2)
+        if changed:
+            self._schedule_crdt_push()      # rumor-monger what we learned
+        return bool(changed) or bool(push) or bool(push2)
+
     def _sync_crdt_v2(self, stub: Stub) -> Generator:
         """Summary + delta rounds of the v2 protocol (digest already
         differed).  Returns True if any state moved in either direction."""
         stats = self.crdt_stats
+        # latlint: disable=L007 negotiated flat-v2 fallback for pre-MST peers
         summary = encode_summary(self.store.key_digests())
         resp = yield from stub.summary(summary)
         stats["tx_bytes"] += len(summary)
         stats["rx_bytes"] += len(resp)
+        stats["summary_bytes"] += len(summary) + len(resp)
         diff = decode_vv_map(resp)
         if not diff:
             return False
@@ -555,12 +754,23 @@ class LatticaNode:
     def _on_crdt_push_msg(self, topic: str, data: Any, frm: PeerId) -> None:
         try:
             deltas = ReplicatedStore.decode_delta(data)
+            # local state on these keys not yet flushed, captured before
+            # the merge — those keys must stay behind the push baseline
+            pending = self.store.delta_since(self._push_vv,
+                                             keys=deltas.keys())
             changed = self.store.apply_delta(deltas)
         except (ValueError, TypeError):
             self.crdt_stats["push_rejected"] += 1
             return
         if changed:
             self.crdt_stats["push_applied"] += 1
+            # the push plane itself just carried this state to every mesh
+            # subscriber; advancing the baseline keeps the next flush from
+            # re-broadcasting the whole namespace (repair of missed pushes
+            # is IHAVE/IWANT's and anti-entropy's job, not re-publish)
+            for k in deltas:
+                if k not in pending:
+                    self._push_vv[k] = self.store.entry_vv(k)
 
     def _on_crdt_mutation(self, key: str) -> None:
         """Store local-mutation hook: debounce-schedule one push process so
@@ -574,7 +784,12 @@ class LatticaNode:
         self.sim.process(self._crdt_push_once())
 
     def _crdt_push_once(self) -> Generator:
-        yield 0.0           # let the mutating call finish its write batch
+        # window 0.0 batches just the current event instant (the mutating
+        # call finishes its write batch); a positive window additionally
+        # coalesces every write landing inside it into one delta doc per
+        # namespace — high-churn fleets trade one window of push latency
+        # for O(window) fewer published docs
+        yield self.crdt_push_window
         self._push_pending = False
         yield from self.crdt_push_flush()
         return None

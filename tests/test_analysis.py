@@ -156,6 +156,39 @@ def test_l005_ambiguous_name_is_skipped(tmp_path):
     assert rep.active == []
 
 
+def test_l007_flat_summary_fires_once(tmp_path):
+    rep = lint_src(tmp_path, """\
+        def probe(store, stub):
+            summary = encode_summary(store.key_digests())
+            yield from stub.summary(summary)
+        """)
+    v = only_active(rep, "L007")
+    assert "O(keys)" in v.message and "summary_forest" in v.message
+
+
+def test_l007_waiver_and_crdt_module_exempt(tmp_path):
+    waived = lint_src(tmp_path, """\
+        def probe(store):
+            # latlint: disable=L007 serves the flat-v2 wire for old peers
+            return store.key_digests()
+        """)
+    assert waived.active == [] and [v.rule for v in waived.waived] == ["L007"]
+    defining = lint_src(tmp_path, """\
+        def summary_of(store):
+            return store.key_digests()
+        """, name="repro/core/crdt.py")
+    assert defining.active == []
+
+
+def test_l007_mst_walk_is_fine(tmp_path):
+    rep = lint_src(tmp_path, """\
+        def probe(store):
+            forest = store.summary_forest()
+            return store.summary_roots(), forest
+        """)
+    assert rep.active == []
+
+
 def test_l006_vmem_budget_fires_once(tmp_path):
     rep = lint_src(tmp_path, """\
         import jax.experimental.pallas as pl

@@ -9,7 +9,10 @@ from hypothesis import given, settings, strategies as st
 from repro.checkpoint import (leaf_from_part, load_local, params_from_bytes,
                               params_to_bytes, params_to_parts, save_local)
 from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
-                                           fetch_latest, publish_checkpoint)
+                                           fetch_checkpoint, fetch_latest,
+                                           negotiate_chunk_spec,
+                                           publish_checkpoint)
+from repro.core.cid import ChunkSpec
 from repro.configs import get_config
 from repro.core.cid import build_dag
 from repro.core.fleet import make_fleet
@@ -176,6 +179,43 @@ def test_local_save_load(tmp_path):
     back = load_local(path, like=params)
     np.testing.assert_array_equal(np.asarray(params["embed"]),
                                   np.asarray(back["embed"]))
+
+
+def test_fetch_negotiates_publisher_chunk_spec():
+    """A fetcher preferring cdc against a fixed-chunked checkpoint still
+    fetches fine — the publisher's recorded spec wins (content addressing
+    fixes the boundaries) and the mismatch is counted for operators."""
+    fleet = make_fleet(6, seed=17)
+    sim = fleet.sim
+    trainer, edge = fleet.peers[0], fleet.peers[-1]
+    _, params = _params()
+    pub_spec = ChunkSpec(chunk_size=32 * 1024)
+
+    def publish():
+        return (yield from publish_checkpoint(trainer, params, 7, "fleetB",
+                                              spec=pub_spec))
+
+    root = sim.run_process(publish(), until=sim.now + 600)
+    prefer = ChunkSpec.cdc(avg_size=64 * 1024)
+
+    def fetch():
+        yield from edge.sync_crdt_with(trainer.info())
+        return (yield from fetch_checkpoint(
+            edge, root, like=params, hint_providers=[trainer.info()],
+            prefer_spec=prefer))
+
+    got = sim.run_process(fetch(), until=sim.now + 900)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert edge.bitswap.stats["spec_mismatch"] == 1
+    assert edge.bitswap.stats["spec_negotiated"] == 1
+    # the negotiated spec is the publisher's: a delta re-publish from the
+    # fetcher reproduces identical boundaries
+    assert negotiate_chunk_spec(edge, root, prefer) == pub_spec
+    # agreeing (or indifferent) fetchers never count a mismatch
+    assert negotiate_chunk_spec(edge, root, pub_spec) == pub_spec
+    assert negotiate_chunk_spec(edge, root, None) == pub_spec
+    assert edge.bitswap.stats["spec_mismatch"] == 2    # only the retry above
 
 
 def test_publish_fetch_over_mesh():

@@ -201,3 +201,125 @@ def test_steady_state_skips_summary_after_digest_match():
     sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 300)
     assert a.store.digest() == b.store.digest()
     assert a.crdt_stats["summary_skipped"] == 1      # no bogus skip
+
+
+# -- Merkle summary forest: probe equivalence with the flat summary ----------
+
+
+def _rand_ops(rng, store, n, replica, clock):
+    """Apply ``n`` random mutations across three namespaces."""
+    for _ in range(n):
+        ns = rng.choice(("reg", "models", "gate"))
+        i = rng.randrange(40)
+        kind = rng.randrange(3)
+        if kind == 0:
+            store.counter(f"{ns}/c{i}").increment(replica, rng.randrange(1, 4))
+        elif kind == 1:
+            store.orset(f"{ns}/s{i}").add(rng.randrange(8), replica)
+        else:
+            clock[0] += 1.0
+            store.register(f"{ns}/r{i}").set(rng.randrange(100), clock[0],
+                                             replica)
+
+
+def _mst_localized(a, b):
+    """Keys a summary-forest walk localizes as differing between two
+    stores — the local-model mirror of the ``crdt.mst`` probe."""
+    fa, fb = a.summary_forest(), b.summary_forest()
+    diff = set()
+    for ns in set(fa) | set(fb):
+        ta, tb = fa.get(ns), fb.get(ns)
+        if ta is None or tb is None:
+            diff.update((ta or tb).keys_under(""))
+            continue
+        stack = [""]
+        while stack:
+            path = stack.pop()
+            if ta.node_hash(path) == tb.node_hash(path):
+                continue
+            if ta.is_leaf(path) or tb.is_leaf(path):
+                ka, kb = ta.leaf_digests(path), tb.leaf_digests(path)
+                diff.update(k for k in set(ka) | set(kb)
+                            if ka.get(k) != kb.get(k))
+                continue
+            ca, cb = ta.children(path), tb.children(path)
+            stack.extend(path + nib for nib in set(ca) | set(cb)
+                         if ca.get(nib) != cb.get(nib))
+    return diff
+
+
+def test_mst_walk_localizes_exactly_the_flat_diff():
+    """Property (seeded randomized sweep — hypothesis is not in the
+    image): on randomized divergent stores, walking the two summary
+    forests localizes exactly the keys whose per-key digests differ in
+    the flat ``key_digests()`` summary — no misses, no false positives.
+    That equivalence is what lets the mst probe replace the O(keys)
+    summary round wholesale."""
+    import random
+
+    for seed in range(8):
+        a, b = ReplicatedStore("a"), ReplicatedStore("b")
+        shared = [random.Random(seed), random.Random(seed)]
+        _rand_ops(shared[0], a, 60, "s", [0.0])
+        _rand_ops(shared[1], b, 60, "s", [0.0])
+        assert a.digest() == b.digest()
+        assert _mst_localized(a, b) == set()
+        _rand_ops(random.Random(1000 + seed), a, 15, "a", [100.0])
+        _rand_ops(random.Random(2000 + seed), b, 15, "b", [200.0])
+        da, db = a.key_digests(), b.key_digests()
+        flat = {k for k in set(da) | set(db) if da.get(k) != db.get(k)}
+        assert _mst_localized(a, b) == flat
+        assert flat        # the sweep actually diverged something
+
+
+def test_mst_sync_converges_randomized_stores():
+    """End-to-end check of the wire walk on the same randomized shapes:
+    one mst sync round reconciles every divergent key both ways."""
+    import random
+
+    for seed in (0, 1):
+        sim, a, b = _two(proto_a="mst", proto_b="mst", seed=40 + seed)
+        shared = [random.Random(seed), random.Random(seed)]
+        _rand_ops(shared[0], a.store, 60, "s", [0.0])
+        _rand_ops(shared[1], b.store, 60, "s", [0.0])
+        _rand_ops(random.Random(1000 + seed), a.store, 15, "a", [100.0])
+        _rand_ops(random.Random(2000 + seed), b.store, 15, "b", [200.0])
+        assert a.store.digest() != b.store.digest()
+        sim.run_process(a.sync_crdt_with(b.info()), until=sim.now + 300)
+        assert a.store.digest() == b.store.digest()
+        assert a.crdt_stats["mst_exchanges"] == 1
+
+
+def test_push_apply_advances_baseline_without_rebroadcast():
+    """Regression: applying a pushed delta used to leave the receiver's
+    push baseline behind, so the receiver's next local write re-published
+    the entire namespace it had just received — at fleet scale every
+    subscriber re-broadcasting every push turned one write into an
+    overlay-wide echo storm.  A push-applied key (with no unflushed local
+    edits) must advance the baseline; the next flush carries only the
+    local delta."""
+    fleet = make_fleet(4, seed=9, same_region="us", nat_kinds=[None] * 4)
+    sim = fleet.sim
+    for n in fleet.peers:
+        n.join_crdt_push("reg")
+    sim.run(until=sim.now + 5)
+    a, b = fleet.peers[0], fleet.peers[1]
+    for i in range(8):
+        a.store.orset(f"reg/bulk{i}").add((i, bytes([i]) * 32), a.host.name)
+    assert wait_converged(sim, fleet.peers, timeout=300.0)
+    assert b.crdt_stats["push_applied"] >= 1
+    # b's baseline covers the pushed keys: nothing pending to re-publish
+    assert not b.store.delta_since(b._push_vv)
+
+    sent = []
+    publish = b.pubsub.publish
+    def spy(topic, data, size=256):
+        sent.append(data)
+        return publish(topic, data, size)
+    b.pubsub.publish = spy
+    b.store.counter("reg/steps").increment(b.host.name, 1)
+    assert wait_converged(sim, fleet.peers, timeout=300.0)
+    keys = set()
+    for blob in sent:
+        keys |= set(ReplicatedStore.decode_delta(blob))
+    assert keys == {"reg/steps"}

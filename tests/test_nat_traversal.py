@@ -250,6 +250,67 @@ def test_port_alloc_random_is_irregular_but_deterministic():
     assert ports == draw(7)                 # seeded rng => reproducible
 
 
+def test_mapping_expires_after_idle_ttl():
+    sim = Sim(seed=2)
+    net = Network(sim)
+    box = NATBox(net, K.PORT_RESTRICTED, ttl=60.0)
+    host = net.host("h", nat=box)
+    ip, ext = box.map_outbound(host, 4001, ("9.9.9.9", 1))
+    # inside the ttl: inbound from the contacted remote routes through
+    assert box.filter_inbound(ext, ("9.9.9.9", 1)) == (host, 4001)
+    sim.run(until=sim.now + 59.0)
+    assert box.filter_inbound(ext, ("9.9.9.9", 1)) == (host, 4001)
+    # the inbound datagram refreshed the idle timer (RFC 4787 REQ-6)
+    sim.run(until=sim.now + 59.0)
+    assert box.filter_inbound(ext, ("9.9.9.9", 1)) == (host, 4001)
+    # idle past the ttl: the mapping is reclaimed, inbound goes unmapped
+    sim.run(until=sim.now + 61.0)
+    assert box.filter_inbound(ext, ("9.9.9.9", 1)) is None
+    assert box.stats["expired"] == 1
+    assert box.stats["inbound_unmapped"] == 1
+
+
+def test_expired_mapping_reminted_with_fresh_port_and_filter():
+    sim = Sim(seed=2)
+    net = Network(sim)
+    box = NATBox(net, K.PORT_RESTRICTED, ttl=30.0)
+    host = net.host("h", nat=box)
+    _, ext1 = box.map_outbound(host, 4001, ("9.9.9.9", 1))
+    sim.run(until=sim.now + 31.0)
+    _, ext2 = box.map_outbound(host, 4001, ("8.8.8.8", 2))
+    assert ext2 != ext1, "post-expiry outbound must mint a fresh mapping"
+    assert box.stats["expired"] == 1
+    # the old filter state died with the mapping: the previously contacted
+    # remote cannot reach the new external port
+    assert box.filter_inbound(ext2, ("9.9.9.9", 1)) is None
+    assert box.stats["inbound_filtered"] == 1
+    assert box.filter_inbound(ext2, ("8.8.8.8", 2)) == (host, 4001)
+
+
+def test_outbound_traffic_keeps_mapping_alive():
+    sim = Sim(seed=2)
+    net = Network(sim)
+    box = NATBox(net, K.FULL_CONE, ttl=40.0)
+    host = net.host("h", nat=box)
+    _, ext = box.map_outbound(host, 4001, ("9.9.9.9", 1))
+    for _ in range(4):                 # regular keepalives inside the ttl
+        sim.run(until=sim.now + 35.0)
+        assert box.map_outbound(host, 4001, ("9.9.9.9", 1))[1] == ext
+    assert box.stats["expired"] == 0
+    assert box.stats["mappings"] == 1
+
+
+def test_ttl_none_keeps_mappings_forever():
+    sim = Sim(seed=2)
+    net = Network(sim)
+    box = NATBox(net, K.PORT_RESTRICTED)          # the pre-expiry default
+    host = net.host("h", nat=box)
+    _, ext = box.map_outbound(host, 4001, ("9.9.9.9", 1))
+    sim.run(until=sim.now + 10_000.0)
+    assert box.filter_inbound(ext, ("9.9.9.9", 1)) == (host, 4001)
+    assert box.stats["expired"] == 0
+
+
 def test_natbox_stats_and_network_aggregate():
     sim, a, b, _ = _mesh(K.PORT_RESTRICTED, SYM_SEQ)
 

@@ -1,6 +1,11 @@
-"""Gossip pub/sub: delivery, dedup, topic scoping."""
+"""Gossip pub/sub: delivery, dedup, topic scoping, scored-mesh dynamics
+(graft/prune under score decay, UNSUBSCRIBE propagation, IHAVE/IWANT
+repair, last-resort forwarding hygiene)."""
 
+from repro.core import LatticaNode
 from repro.core.fleet import make_fleet
+from repro.core.pubsub import (HEARTBEAT, MESH_DEGREE,
+                               SCORE_PRUNE_THRESHOLD)
 
 
 def test_publish_reaches_subscribers():
@@ -62,3 +67,122 @@ def test_unsubscribed_topic_not_delivered():
     sim.run_process(run(), until=sim.now + 120)
     sim.run(until=sim.now + 30)
     assert got == []
+
+
+# -- scored-mesh dynamics ----------------------------------------------------
+
+
+def test_prune_on_score_collapse_then_regraft_after_decay():
+    """A mesh member whose deliveries start failing accumulates penalties,
+    crosses SCORE_PRUNE_THRESHOLD at the next heartbeat and is dropped;
+    once the decay drifts its score back to zero it becomes graft-eligible
+    and rejoins an under-degree mesh."""
+    fleet = make_fleet(5, seed=5, same_region="us")
+    sim = fleet.sim
+    for n in fleet.peers:
+        n.pubsub.subscribe("scored", lambda t, d, f: None)
+    sim.run(until=sim.now + 12)         # heartbeats graft the mesh up
+    a = fleet.peers[0].pubsub
+    assert len(a.mesh["scored"]) == len(fleet.peers) - 1
+    victim = sorted(a.mesh["scored"], key=lambda p: p.digest)[0]
+
+    # simulate a churned-out member: its eager pushes started failing
+    a._perf_of(victim)["fail"] = 5.0
+    prunes = a.stats["prunes"]
+    sim.run(until=sim.now + 2 * HEARTBEAT + 0.5)
+    assert victim not in a.mesh["scored"]
+    assert a.scores[victim] < SCORE_PRUNE_THRESHOLD
+    assert a.stats["prunes"] > prunes
+
+    # only the penalized peer can refill the under-degree mesh, but graft
+    # requires a non-negative score — the decay has to run its course
+    sim.run(until=sim.now + 30 * HEARTBEAT)
+    assert a.scores[victim] == 0.0      # snapped, graft-eligible again
+    assert victim in a.mesh["scored"]
+
+
+def test_unsubscribe_propagates_and_late_joiner_sees_current_set():
+    """UNSUBSCRIBE reaches current peers eagerly (pushed topic-set update
+    dissolves their mesh edges) and late joiners lazily: the full-set
+    announce a fresh contact triggers returns the current topics, never
+    the stale subscription."""
+    fleet = make_fleet(6, seed=11, same_region="us")
+    sim = fleet.sim
+    a = fleet.peers[0]
+    a.pubsub.subscribe("models", lambda t, d, f: None)
+    sim.run(until=sim.now + 5)
+    others = fleet.peers[1:]
+    assert all("models" in n.pubsub.peer_topics.get(a.peer_id, set())
+               for n in others)
+
+    a.pubsub.unsubscribe("models")
+    sim.run(until=sim.now + 5)
+    for n in others:
+        assert "models" not in n.pubsub.peer_topics.get(a.peer_id, set())
+        assert a.peer_id not in n.pubsub.mesh.get("models", set())
+
+    # a genuinely late joiner: connects after the unsubscribe, learns the
+    # topic set through the contact-time announce exchange
+    late = LatticaNode(fleet.net, "late-joiner", region="us")
+    sim.run_process(late.connect_info(a.info()), until=sim.now + 60)
+    sim.run_process(late.pubsub.announce_subscriptions(a.peer_id),
+                    until=sim.now + 60)
+    assert "models" not in late.pubsub.peer_topics.get(a.peer_id, set())
+
+
+def test_ihave_iwant_repairs_partitioned_subscriber():
+    """A subscriber severed from every mesh edge misses the eager push but
+    must still converge: off-mesh IHAVE gossip advertises the message id,
+    the IWANT pull fetches it from the advertiser's cache."""
+    fleet = make_fleet(12, seed=3, same_region="us")
+    sim = fleet.sim
+    got = {n.host.name: [] for n in fleet.peers}
+    for n in fleet.peers:
+        n.pubsub.subscribe(
+            "repair", lambda t, d, f, nm=n.host.name: got[nm].append(d))
+    sim.run(until=sim.now + 12)         # mesh forms
+    c = fleet.peers[3]
+    # partition: sever every mesh edge touching c, blind c to who
+    # subscribes (its own heartbeat cannot regraft mid-wave), and erase
+    # c's subscription from every view except one meshed advertiser —
+    # relays and off-mesh publishers would otherwise still push to c
+    # from their interested pool.  Only the advertiser's lazy IHAVE
+    # gossip is left knowing c wants the topic.
+    advertiser = fleet.peers[2]
+    for n in fleet.all_nodes:
+        n.pubsub.mesh.get("repair", set()).discard(c.peer_id)
+        if n is not c and n is not advertiser:
+            n.pubsub.peer_topics.get(c.peer_id, set()).discard("repair")
+    c.pubsub.mesh["repair"].clear()
+    # c loses its peer table outright: it cannot graft back or dial out,
+    # so eager delivery is impossible — only inbound IHAVE (advertiser
+    # dials c, c's ctl response carries the IWANT) can repair it
+    c.peers.clear()
+    # the advertiser must stay at-degree without c, else its heartbeat
+    # grafts c back into the mesh instead of lazily gossiping to it
+    assert len(advertiser.pubsub.mesh["repair"]) >= 4
+
+    sim.run_process(fleet.peers[0].pubsub.publish("repair", ("w", 9)),
+                    until=sim.now + 60)
+    sim.run(until=sim.now + 4 * HEARTBEAT + 1)
+    assert got[c.host.name] == [("w", 9)]
+    assert c.pubsub.stats["iwant_sent"] >= 1
+    assert c.pubsub.stats["repaired"] >= 1
+    assert sum(n.pubsub.stats["ihave_sent"] for n in fleet.peers) >= 1
+
+
+def test_blind_relays_do_not_flood_watcherless_topics():
+    """Regression: a publish on a topic with no subscribers anywhere used
+    to cascade — every receiver re-forwarded to MESH_DEGREE more peers
+    through the last-resort pools, an overlay-wide flood at fleet scale.
+    Blind relays (neither subscribed nor meshed for the topic) may forward
+    only to peers they know are interested, so the wave dies after the
+    publisher's own hop."""
+    fleet = make_fleet(12, seed=7, same_region="us")
+    sim = fleet.sim
+    sim.run(until=sim.now + 5)
+    sim.run_process(fleet.peers[0].pubsub.publish("nobody/watches", "x"),
+                    until=sim.now + 60)
+    sim.run(until=sim.now + 10)
+    total = sum(n.pubsub.stats["forwarded"] for n in fleet.all_nodes)
+    assert total <= MESH_DEGREE

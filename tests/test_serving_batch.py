@@ -305,9 +305,17 @@ def test_mid_generation_kill_migrates_sessions(served_v2):
 
     def run():
         evs = [client.submit(p, 48) for p in prompts]
-        yield sim.timeout(0.6)                  # let admissions land
-        busy = [s for s in servers
-                if s.alive and s.shard_idx == 0 and s.engine.slots_used > 0]
+        # poll for the first moment a shard-0 replica is actually busy —
+        # a fixed sleep races the decode loop, whose virtual-time speed
+        # shifts with background message load
+        busy = []
+        for _ in range(200):
+            yield sim.timeout(0.01)
+            busy = [s for s in servers
+                    if s.alive and s.shard_idx == 0
+                    and s.engine.slots_used > 0]
+            if busy:
+                break
         assert busy, "no busy shard-0 replica to kill"
         busy[0].stop()
         res = []
@@ -334,7 +342,7 @@ def test_pressure_monitor_spawns_replica_on_hot_shard(served_v2):
     client = ShardClient(fleet.peers[-1], cfg, "svc", n_shards=2)
     idle = fleet.peers[5]
     mon = PressureMonitor(idle, cfg, "svc", hot_occupancy=0.5, sustain=2,
-                          interval=0.3, max_replicas=4, n_slots=4)
+                          interval=0.15, max_replicas=4, n_slots=4)
     sim.process(mon.run())
     prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(40 + i),
                                              (1, 8), 0, cfg.vocab), np.int32)
@@ -343,12 +351,19 @@ def test_pressure_monitor_spawns_replica_on_hot_shard(served_v2):
     def run():
         # saturate: far more concurrent sessions than slots, long enough
         # generations that the queue persists across several monitor ticks
-        reqs = [dict(tokens=prompts[i % len(prompts)], n_tokens=16)
+        reqs = [dict(tokens=prompts[i % len(prompts)], n_tokens=48)
                 for i in range(24)]
         out = yield from client.generate_concurrent(reqs)
         return out
 
     outs = sim.run_process(run(), until=sim.now + 3600)
+    # the workload can drain before the spawned replica finishes fetching
+    # its params off the content plane — give the in-flight spawn a bounded
+    # grace period before halting the monitor
+    for _ in range(400):
+        if mon.stats["spawned"] or mon.stats["fetch_failures"]:
+            break
+        sim.run(until=sim.now + 0.25)
     mon.stop()
     assert all(o is not None for o in outs)
     assert mon.stats["observations"] > 0
