@@ -20,6 +20,7 @@ Sections:
     fleet10k    10k-node fleet (DHT + registry anti-entropy planes)
     shards      sharded inference + failover (Fig. 1-4)
     serving     continuous batching: N concurrent clients, kill, pressure
+    collab      DiLoCo-style collaborative rounds: loss vs baseline, bytes
     roofline    kernels executed + arch × shape roofline terms
     decodestep  fused paged-decode vs per-slot loop, int8 vs fp32 KV cache
 
@@ -41,9 +42,9 @@ import sys
 import time
 from typing import Callable, Dict, List, Tuple
 
-from . import (_bench, crdt_sync, decode_step, dht_lookup, fleet_scale,
-               model_sync, nat_traversal, roofline, rpc_throughput,
-               sharded_inference)
+from . import (_bench, collab_train, crdt_sync, decode_step, dht_lookup,
+               fleet_scale, model_sync, nat_traversal, roofline,
+               rpc_throughput, sharded_inference)
 
 #: section -> (BENCH group, runner).  Groups with ONE section emit the
 #: section's dict directly (standalone scripts write the same shape);
@@ -64,6 +65,7 @@ SECTIONS: List[Tuple[str, str, Callable[..., dict]]] = [
     ("fleet10k", "fleet", fleet_scale.main_10k),
     ("shards", "sharded", sharded_inference.main),
     ("serving", "serving", sharded_inference.main_serving),
+    ("collab", "collab_train", collab_train.main),
     ("roofline", "roofline", roofline.main),
     ("decodestep", "decode_step", decode_step.main),
 ]

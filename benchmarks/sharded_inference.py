@@ -148,9 +148,13 @@ def main_serving(report: List[str], smoke: bool = False) -> Dict[str, Any]:
 
     bat_time = sim.run_process(batched(), until=sim.now + 3600)
     # grace: a spawn decision taken on the last hot tick still needs sim
-    # time to fetch the shard params off the content plane and announce
+    # time to fetch the shard params off the content plane and announce;
+    # with the load generators gone this same window is the cold drain —
+    # sustained-cold detection retires the monitor-spawned replica and
+    # the serving plane returns to its deployed baseline
     sim.run(until=sim.now + 30)
     mon.stop()
+    replica_sets = {shard: mon.replica_count(shard) for shard in (0, 1)}
     bat_tps = n_clients * n_tokens / bat_time
     lat = np.asarray(sorted(latencies))
     p50 = float(lat[int(0.50 * (len(lat) - 1))]) if len(lat) else float("nan")
@@ -172,6 +176,12 @@ def main_serving(report: List[str], smoke: bool = False) -> Dict[str, Any]:
         "failovers": client.stats["failovers"],
         "provider_killed": bool(killed),
         "replicas_spawned": mon.stats["spawned"],
+        "replicas_retired": mon.stats["retired"],
+        "monitor_replicas_live": len(mon.spawned),
+        # deployed baseline is 2 replicas per shard; after the cold drain
+        # every monitor-spawned replica must have left the replica set
+        "replica_sets_after_drain": replica_sets,
+        "slots_back_to_baseline": all(c == 2 for c in replica_sets.values()),
         "pressure": mon.stats,
     }
     report.append(f"# Serving: {n_clients} concurrent clients, "
@@ -185,7 +195,8 @@ def main_serving(report: List[str], smoke: bool = False) -> Dict[str, Any]:
                   f"failed={metrics['failed_sessions']} "
                   f"migrated={metrics['sessions_migrated']}")
     report.append(f"pressure: spawned {mon.stats['spawned']} replica(s) "
-                  f"on hot shards")
+                  f"on hot shards, retired {mon.stats['retired']} after "
+                  f"the cold drain (replica sets: {replica_sets})")
     return metrics
 
 
@@ -202,6 +213,13 @@ if __name__ == "__main__":
         assert metrics["failed_sessions"] == 0, \
             f"{metrics['failed_sessions']} sessions failed after provider kill"
         assert metrics["replicas_spawned"] >= 1, "pressure spawned no replica"
+        assert metrics["replicas_retired"] >= 1, \
+            "cold drain retired no replica"
+        assert metrics["monitor_replicas_live"] == 0, \
+            "monitor still holds live replicas after the drain"
+        assert metrics["slots_back_to_baseline"], \
+            f"replica sets never returned to baseline: " \
+            f"{metrics['replica_sets_after_drain']}"
         print("smoke: OK")
     else:
         main(out)

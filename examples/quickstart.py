@@ -19,6 +19,10 @@ Walks through the paper's four scenarios at toy scale:
   8. fleet scale: a 1k-node virtual-clock fleet (Trautwein NAT mix) under
      churn — scored-mesh push delivery, Merkle-summarized anti-entropy,
      summary bytes and mesh relay load on the dashboard
+  9. collaborative training: one DiLoCo-style round across 8 workers in
+     2 regions joined by a thin link — H local steps, then a top-k +
+     int8 compressed pseudo-gradient exchange coordinated entirely
+     through the CRDT store (no coordinator), bytes-on-wire printed
 """
 
 import sys
@@ -402,6 +406,49 @@ def main():
     # are printed for a small sample only
     print("== 8b. dashboard (4-node sample of the 1k fleet) ==")
     print(dashboard([writer, hub] + victims[:2]))
+
+    # -- 9. collaborative training round across 2 regions --------------------
+    # DiLoCo-style: every worker runs H local AdamW steps, publishes its
+    # pseudo-gradient top-k sparsified + int8-quantized as a content DAG,
+    # and the round closes through CRDT quorum — no coordinator anywhere.
+    # The regions= / bandwidth= knobs model two datacenters joined by a
+    # thin transcontinental path; the compressed exchange is what makes
+    # that link survivable.
+    import jax
+
+    from repro.configs import get_config
+    from repro.data import make_batch_iterator
+    from repro.optim import cosine_schedule
+    from repro.train import train_state_init
+    from repro.train.collab import CollabConfig, CollabWorker
+
+    tcfg = get_config("minicpm-2b").reduced(n_layers=2, d_model=64, vocab=128)
+    tfleet = make_scale_fleet(
+        16, seed=21, nat_mix=[(None, 1.0)], regions=["us", "eu"],
+        latency={"inter": 60e-3}, bandwidth={"inter": 1.2e7})
+    tsim = tfleet.sim
+    sched = cosine_schedule(1e-3, 5, 100)
+    workers = []
+    for i in range(8):
+        data = make_batch_iterator(tcfg.vocab, 32, global_batch=8,
+                                   n_shards=8, shard=i, seed=1)
+        workers.append(CollabWorker(
+            tfleet.nodes[i], tcfg,
+            train_state_init(tcfg, jax.random.PRNGKey(0)), sched, data,
+            "quickstart", collab=CollabConfig(inner_steps=6, settle=0.5),
+            step_seconds=0.2))
+    tprocs = [tsim.process(w.run(1)) for w in workers]
+    tsim.run(until=tsim.now + 300)
+    assert all(p.triggered and not p.failed for p in tprocs)
+    wire = sum(w.stats["wire_bytes"] for w in workers)
+    dense = sum(w.stats["dense_bytes"] for w in workers)
+    digests = {w.outer_digest() for w in workers}
+    regions = sorted({w.node.host.region for w in workers})
+    print(f"\n== 9. collaborative round: 8 workers across {regions}, "
+          f"H=6 inner steps ==")
+    print(f"pseudo-gradient on the wire: {wire/1024:.0f} KiB compressed "
+          f"vs {dense/1024:.0f} KiB naive fp32 ({wire/dense:.3f}x); "
+          f"outer digests identical on all 8: {len(digests) == 1}")
 
     print(f"\nsim clock: {sim.now:.2f}s — done.")
 

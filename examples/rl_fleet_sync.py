@@ -1,12 +1,18 @@
-"""End-to-end driver — the paper's RL pipeline (Fig. 1, Scenario 3).
+"""End-to-end driver — the paper's RL pipeline, now with no training
+cluster at all.
 
-A training cluster trains a language model on the synthetic corpus and
-periodically publishes model versions into the Lattica mesh as
-content-addressed chunks; two inference clusters behind NATs discover each
-version via the CRDT registry + pubsub and swarm-fetch it with Bitswap.
+The model is trained *collaboratively*: N workers scattered over the
+NAT-mixed mesh run DiLoCo-style rounds (H local AdamW steps, then one
+compressed pseudo-gradient exchange coordinated through the CRDT store —
+no coordinator, no parameter server).  Because every worker applies the
+identical outer step over the identical contribution set, outer params
+are bit-identical fleet-wide; ANY worker can therefore publish each
+round's outer params into the checkpoint registry, and the two inference
+clusters behind NATs fetch them exactly as they fetched the old
+single-trainer versions.
 
-    PYTHONPATH=src python examples/rl_fleet_sync.py               # ~10M model
-    PYTHONPATH=src python examples/rl_fleet_sync.py --size 100m --steps 300
+    PYTHONPATH=src python examples/rl_fleet_sync.py               # reduced
+    PYTHONPATH=src python examples/rl_fleet_sync.py --size 100m --rounds 6
 
 The default runs a reduced model so CPU wall-time stays in minutes; --size
 100m is the full-scale variant of the same driver (same code path).
@@ -18,24 +24,28 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
+import numpy as np
 
 from repro.checkpoint.lattica_ckpt import (CheckpointRegistry,
-                                           fetch_latest_from)
+                                           fetch_latest_from,
+                                           publish_checkpoint,
+                                           serve_checkpoints)
 from repro.configs import get_config
 from repro.core.fleet import make_fleet
 from repro.data import make_batch_iterator
-from repro.optim import wsd_schedule
+from repro.optim import cosine_schedule
 from repro.train import train_state_init
-from repro.train.trainer import LatticaSyncTrainer, ModelSubscriber
+from repro.train.collab import CollabConfig, CollabWorker
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", choices=["small", "100m"], default="small")
-    ap.add_argument("--steps", type=int, default=60)
-    ap.add_argument("--publish-every", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--inner-steps", type=int, default=10)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=64)
     args = ap.parse_args()
 
     if args.size == "100m":
@@ -48,60 +58,71 @@ def main():
         train_state_init(cfg, jax.random.PRNGKey(0)).params))
     print(f"model: {cfg.name}-family, {n_params/1e6:.1f}M params")
 
-    print("building mesh: 1 trainer cluster + 2 inference clusters "
-          "(NAT-mixed) ...")
-    fleet = make_fleet(8, seed=5)
+    print(f"building mesh: {args.workers} collaborative workers + "
+          "2 inference clusters (NAT-mixed) ...")
+    fleet = make_fleet(args.workers + 4, seed=5)
     sim = fleet.sim
-    trainer_node = fleet.peers[0]
     edge_a, edge_b = fleet.peers[-2], fleet.peers[-1]
 
-    state = train_state_init(cfg, jax.random.PRNGKey(0))
-    data = make_batch_iterator(cfg.vocab, args.seq, args.batch, seed=0)
-    trainer = LatticaSyncTrainer(
-        cfg, state, wsd_schedule(3e-3, 10, args.steps - 30, 20), data,
-        node=trainer_node, fleet="rl-fleet",
-        publish_every=args.publish_every, step_seconds=0.5)
+    sched = cosine_schedule(1e-3, 5, args.rounds * args.inner_steps + 50)
+    eval_batch = next(make_batch_iterator(cfg.vocab, args.seq,
+                                          args.batch, seed=999))
+    ccfg = CollabConfig(inner_steps=args.inner_steps, settle=0.5,
+                        outer_lr=0.4, outer_momentum=0.6)
+    workers = []
+    for i in range(args.workers):
+        data = make_batch_iterator(cfg.vocab, args.seq, args.batch,
+                                   n_shards=args.workers, shard=i, seed=0)
+        workers.append(CollabWorker(
+            fleet.peers[i], cfg, train_state_init(cfg, jax.random.PRNGKey(0)),
+            sched, data, "rl-fleet", collab=ccfg, step_seconds=0.5,
+            eval_batch=eval_batch if i == 0 else None))
 
-    # resolve_from: followers ask the trainer's CheckpointService for the
-    # latest version each poll instead of waiting for CRDT anti-entropy
-    subs = [ModelSubscriber(n, cfg, "rl-fleet", like=state.params,
-                            resolve_from=trainer_node.info())
-            for n in (edge_a, edge_b)]
-    procs = [sim.process(trainer.run_mesh(args.steps))]
-    procs += [sim.process(s.follow(interval=3.0, until_step=args.steps - 1))
-              for s in subs]
+    procs = [sim.process(w.run(args.rounds)) for w in workers]
     sim.run(until=sim.now + 86400)
+    for p, w in zip(procs, workers):
+        assert p.triggered and not p.failed, (w.name, p.value)
 
-    print(f"\ntrainer: loss {trainer.history[0]['loss']:.3f} -> "
-          f"{trainer.history[-1]['loss']:.3f} over {args.steps} steps, "
-          f"{len(trainer.published)} versions published")
-    latest_step, latest_root = CheckpointRegistry(
-        trainer_node, "rl-fleet").latest()
-    for s, name in zip(subs, ("edge_a", "edge_b")):
-        log = s.fetch_log
-        print(f"{name} ({s.node.host.name}, "
-              f"{s.node.transport.reachability}): followed to step "
-              f"{s.current_step}; {len(log)} fetches, last took "
-              f"{log[-1]['t_fetch']:.2f}s (sim)")
-        # converge on 'latest' via the trainer's CheckpointService (one
-        # RPC) rather than waiting for CRDT anti-entropy to gossip the
-        # register here; unchanged-tensor sub-DAGs make this fetch cheap
-        def final_resolve(s=s):
+    digests = {w.outer_digest() for w in workers}
+    assert len(digests) == 1, "outer state forked across the fleet"
+    lead = workers[0]
+    wire = sum(w.stats["wire_bytes"] for w in workers)
+    dense = sum(w.stats["dense_bytes"] for w in workers)
+    curve = " -> ".join(f"{r['eval_loss']:.3f}" for r in lead.round_log)
+    print(f"\n{args.workers} workers x {args.rounds} rounds x "
+          f"H={args.inner_steps}: eval loss {curve}")
+    print(f"outer digests identical fleet-wide: {lead.outer_digest()[:16]}…")
+    print(f"pseudo-gradient wire bytes: {wire/1e6:.2f} MB vs "
+          f"{dense/1e6:.2f} MB naive fp32 ({wire/dense:.3f}x)")
+
+    # any worker publishes the replicated outer params — they are all the
+    # same bytes, so the registry sees one canonical version; serving the
+    # checkpoint plane lets edges resolve "latest" with one RPC instead of
+    # waiting for CRDT anti-entropy
+    serve_checkpoints(lead.node)
+
+    def publish():
+        return (yield from publish_checkpoint(
+            lead.node, lead.outer_params(), step=args.rounds, fleet="rl-fleet"))
+
+    sim.run_process(publish(), until=sim.now + 600)
+    latest_step, _ = CheckpointRegistry(lead.node, "rl-fleet").latest()
+    print(f"published outer params as version step={latest_step}")
+
+    for edge, name in ((edge_a, "edge_a"), (edge_b, "edge_b")):
+        def fetch(edge=edge):
             step, params = yield from fetch_latest_from(
-                s.node, trainer_node.info(), "rl-fleet", like=state.params)
+                edge, lead.node.info(), "rl-fleet", like=lead.outer_params())
             return step, params
-        step, params = sim.run_process(final_resolve(), until=sim.now + 600)
-        assert step == latest_step, (
-            f"{name} resolved step {step} != trainer latest {latest_step}")
-        s.params = params
-        s.current_step = step
-    import numpy as np
-    for s in subs:
-        for a, b in zip(jax.tree.leaves(trainer.state.params),
-                        jax.tree.leaves(s.params)):
+        step, params = sim.run_process(fetch(), until=sim.now + 600)
+        assert step == latest_step
+        for a, b in zip(jax.tree.leaves(lead.outer_params()),
+                        jax.tree.leaves(params)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    print("edge clusters hold bit-identical latest params — "
-          "registry + CDN path verified.")
+        print(f"{name} ({edge.host.name}, {edge.transport.reachability}): "
+              f"fetched step {step}, bit-identical to the fleet's outer "
+              f"params")
+    print("decentralized training + registry + CDN path verified.")
 
 
 if __name__ == "__main__":

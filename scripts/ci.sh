@@ -6,6 +6,7 @@
 #   ./scripts/ci.sh --kernel-smoke   fast-decode + quantization gates only
 #   ./scripts/ci.sh --lint           latlint + simsan determinism gates only
 #   ./scripts/ci.sh --fleet-smoke    MST-efficiency + 1k-node churn gates only
+#   ./scripts/ci.sh --train-smoke    collaborative-training round gates only
 #   SKIP_BENCH=1 ./scripts/ci.sh     tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -36,6 +37,17 @@ fleet_smoke() {
     python benchmarks/fleet_scale.py --fleet-smoke
 }
 
+train_smoke() {
+    # collaborative (DiLoCo-style) rounds over a 2-region heterogeneous
+    # fleet: outer loss within 5% of the single-node baseline at equal
+    # total steps, compressed pseudo-gradient bytes <= 0.10x the fp32
+    # full-exchange, a mid-run churn wave killing >= 2 workers with zero
+    # aborted/lost rounds (rejoiners catch up onto the identical digest),
+    # and a sanitizer double-run with bit-identical traces and zero
+    # leaked contribution pins
+    python benchmarks/collab_train.py --train-smoke
+}
+
 lint_gate() {
     # latlint: every rule (L001-L007) must be clean on the shipped tree —
     # violations are either fixed or carry a reasoned waiver
@@ -59,6 +71,11 @@ fi
 
 if [ "${1:-}" = "--fleet-smoke" ]; then
     fleet_smoke
+    exit 0
+fi
+
+if [ "${1:-}" = "--train-smoke" ]; then
+    train_smoke
     exit 0
 fi
 
@@ -93,6 +110,9 @@ if [ -z "${SKIP_BENCH:-}" ]; then
     # MST probe-efficiency + 1k-node fleet churn gates (also standalone via
     # ./scripts/ci.sh --fleet-smoke)
     fleet_smoke
+    # collaborative-training round gates (also standalone via
+    # ./scripts/ci.sh --train-smoke)
+    train_smoke
 fi
 
 python -m pytest -x -q --ignore=tests/test_kernels.py

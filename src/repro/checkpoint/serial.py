@@ -140,6 +140,72 @@ def _dequant_int8_block(raw: bytes, shape: Tuple[int, ...],
     return out.reshape(-1)[:n].reshape(shape)
 
 
+def encode_sparse_leaf(indices: np.ndarray, values: np.ndarray,
+                       shape: Tuple[int, ...], vals: Optional[str] = None,
+                       ) -> Tuple[bytes, Dict[str, Any]]:
+    """Encode a top-k sparse view of a leaf as an LCK3 part payload.
+
+    Payload layout: ``uint32 flat-indices[k]`` ‖ value payload, where the
+    value payload is raw float32 (``vals=None``) or an
+    :func:`_quant_int8_block` blob over the k kept values
+    (``vals="int8_block"``) — the same per-entry codec machinery dense
+    quantized parts use, so a sparse pseudo-gradient part decodes through
+    :func:`leaf_from_part` like any other entry.  Absent positions decode
+    to zero.  Returns ``(raw, enc)``; pass ``enc`` to
+    :func:`encode_leaf_meta`."""
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    idx = np.ascontiguousarray(indices, dtype=np.uint32).reshape(-1)
+    val = np.ascontiguousarray(values, dtype=np.float32).reshape(-1)
+    if idx.size != val.size:
+        raise ValueError(f"sparse leaf: {idx.size} indices vs "
+                         f"{val.size} values")
+    if idx.size and int(idx.max()) >= n:
+        raise ValueError(f"sparse index {int(idx.max())} out of range "
+                         f"for {n} elements")
+    if vals not in (None, "int8_block"):
+        raise ValueError(f"unknown sparse value codec {vals!r}")
+    enc: Dict[str, Any] = {"codec": "topk", "k": int(idx.size)}
+    if vals == "int8_block":
+        enc["vals"] = "int8_block"
+        enc["block"] = _QUANT_BLOCK
+        payload = _quant_int8_block(val) if idx.size else b""
+    else:
+        payload = val.tobytes()
+    return idx.tobytes() + payload, enc
+
+
+def _decode_sparse_leaf(raw: bytes, shape: Tuple[int, ...],
+                        enc: Dict[str, Any]) -> np.ndarray:
+    """Inverse of :func:`encode_sparse_leaf` (raw is peer-supplied)."""
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    k = enc.get("k")
+    if not isinstance(k, int) or k < 0 or k > n:
+        raise ValueError(f"bad sparse k {k!r} for {n} elements")
+    if len(raw) < 4 * k:
+        raise ValueError(f"truncated sparse payload: {len(raw)} bytes "
+                         f"for k={k}")
+    idx = np.frombuffer(raw, np.uint32, count=k)
+    if k and int(idx.max()) >= n:
+        raise ValueError(f"sparse index {int(idx.max())} out of range "
+                         f"for {n} elements")
+    vals_raw = raw[4 * k:]
+    if enc.get("vals") == "int8_block":
+        val = (_dequant_int8_block(vals_raw, (k,), enc.get("block"))
+               if k else np.zeros(0, np.float32))
+    else:
+        if len(vals_raw) != 4 * k:
+            raise ValueError(f"bad sparse value payload: {len(vals_raw)} "
+                             f"bytes for k={k}")
+        val = np.frombuffer(vals_raw, np.float32, count=k)
+    out = np.zeros(n, np.float32)
+    out[idx] = val
+    return out.reshape(shape)
+
+
+#: per-entry codecs the LCK3 layer understands
+_LEAF_CODECS = ("int8_block", "topk")
+
+
 def _encode_leaf(arr: np.ndarray, quant: Optional[str],
                  ) -> Tuple[bytes, Optional[Dict[str, Any]]]:
     """One leaf's wire payload and its codec descriptor (None = raw)."""
@@ -154,8 +220,10 @@ def _decode_leaf(raw: bytes, dt: np.dtype, shape: Tuple[int, ...],
     if enc is None:
         count = int(np.prod(shape, dtype=np.int64)) if shape else 1
         return np.frombuffer(raw, dtype=dt, count=count).reshape(shape)
-    if not isinstance(enc, dict) or enc.get("codec") != "int8_block":
+    if not isinstance(enc, dict) or enc.get("codec") not in _LEAF_CODECS:
         raise ValueError(f"unknown leaf codec {enc!r}")
+    if enc["codec"] == "topk":
+        return _decode_sparse_leaf(raw, shape, enc).astype(dt)
     return _dequant_int8_block(raw, shape, enc.get("block")).astype(dt)
 
 
@@ -239,7 +307,7 @@ def _decode_leaf_meta_full(meta: bytes,
             raise ValueError(f"bad legacy leaf meta {meta!r}")
         dtype, shape, enc = decoded[0], list(decoded[1]), None
     if enc is not None and (not isinstance(enc, dict)
-                            or enc.get("codec") != "int8_block"):
+                            or enc.get("codec") not in _LEAF_CODECS):
         raise ValueError(f"unknown leaf codec in meta {meta!r}")
     return _checked_dtype(dtype), _checked_shape(shape), enc
 

@@ -151,6 +151,23 @@ class KadService(Service):
         yield ctx.cpu(5e-6)
         return True
 
+    @unary("kad.drop_provider", request=Fixed(96 + PEERINFO_WIRE_SIZE),
+           response=Fixed(64), idempotent=True, timeout=15.0)
+    def drop_provider(self, payload: Any, ctx: RpcContext) -> Generator:
+        """Withdraw one provider record — the planned-retirement inverse of
+        ``add_provider`` (same trust model: records are advisory hints the
+        fetch path verifies by actually fetching, so a lying peer can only
+        re-create the staleness TTLs already tolerate)."""
+        self._observe(ctx)
+        key, peer_id = payload
+        entry = self.dht.providers.get(key)
+        if entry is not None:
+            entry.pop(peer_id, None)
+            if not entry:
+                del self.dht.providers[key]
+        yield ctx.cpu(5e-6)
+        return True
+
     @unary("kad.get_providers", request=Fixed(96),
            response=_GET_PROVIDERS_RESP, idempotent=True, timeout=15.0)
     def get_providers(self, payload: Any, ctx: RpcContext) -> Generator:
@@ -292,6 +309,26 @@ class KademliaDHT:
         _, closest, _, _ = yield from self._lookup(key, "find_node", key)
         sim = self.node.sim
         procs = [sim.process(self._query(i, "add_provider", (key, me)))
+                 for i in closest[: self.k]]
+        if procs:
+            yield sim.all_of(procs)
+        return len(procs)
+
+    def unprovide(self, key: bytes) -> Generator:
+        """Withdraw this node's provider record for ``key`` — locally and
+        at the closest nodes :meth:`provide` targeted.  Used by planned
+        retirement (a replica scaling back down); crashes still rely on
+        record staleness, as ever."""
+        me = self.node.info()
+        entry = self.providers.get(key)
+        if entry is not None:
+            entry.pop(me.peer_id, None)
+            if not entry:
+                self.providers.pop(key, None)
+        _, closest, _, _ = yield from self._lookup(key, "find_node", key)
+        sim = self.node.sim
+        procs = [sim.process(self._query(i, "drop_provider",
+                                         (key, me.peer_id)))
                  for i in closest[: self.k]]
         if procs:
             yield sim.all_of(procs)

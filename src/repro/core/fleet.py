@@ -393,6 +393,9 @@ def make_scale_fleet(n_nodes: int, seed: int = 0,
                      cores: int = 2,
                      crdt_push_window: float = 0.25,
                      nat_ttl: Optional[float] = 90.0,
+                     regions: Optional[Sequence[str]] = None,
+                     latency: Optional[Dict[str, float]] = None,
+                     bandwidth: Optional[Dict[str, float]] = None,
                      sim: Optional[Sim] = None) -> ScaleFleet:
     """Stand up ``n_nodes`` virtual-clock nodes with the Trautwein NAT mix.
 
@@ -402,9 +405,16 @@ def make_scale_fleet(n_nodes: int, seed: int = 0,
     punch probability).  ``crdt_push_window`` defaults to a positive
     coalescing window — at fleet scale, per-instant delta docs are
     exactly the hot-namespace flood the batching window exists to stop.
+
+    ``regions`` round-robins node placement over the given region labels
+    (default: all of :data:`REGIONS`); ``latency``/``bandwidth`` override
+    link-class parameters on the fabric — together they model
+    heterogeneous-bandwidth multi-region fleets (e.g. two regions joined
+    by a thin ``inter`` path for cross-region training rounds).
     """
     sim = Sim(seed=seed) if sim is None else sim
-    net = Network(sim)
+    net = Network(sim, latency=latency, bandwidth=bandwidth)
+    region_cycle = list(regions) if regions else list(REGIONS)
     nat_mix = list(nat_mix if nat_mix is not None else TRAUTWEIN_NAT_MIX)
     alloc_mix = list(sym_alloc_mix if sym_alloc_mix is not None
                      else DEFAULT_SYM_ALLOC_MIX)
@@ -426,7 +436,8 @@ def make_scale_fleet(n_nodes: int, seed: int = 0,
             nat = NATBox(net, kind, ttl=nat_ttl)
         else:
             nat = None
-        node = LatticaNode(net, f"n{i}", region=REGIONS[i % len(REGIONS)],
+        node = LatticaNode(net, f"n{i}",
+                           region=region_cycle[i % len(region_cycle)],
                            zone=sim.rng.choice(["a", "b"]), nat=nat,
                            cores=cores, crdt_push_window=crdt_push_window)
         # reachability is assigned, not probed: the AutoNAT dance is a

@@ -892,6 +892,14 @@ class LatticaNode:
             self.blockstore.unpin(prev)
         self._pinned_latest[tag] = root
 
+    def unpin_latest(self, tag: str) -> None:
+        """Release lineage ``tag`` entirely (a retired replica, a dropped
+        artifact family): its current root becomes evictable.  No-op when
+        the tag holds nothing."""
+        root = self._pinned_latest.pop(tag, None)
+        if root is not None:
+            self.blockstore.unpin(root)
+
     def publish_artifact(self, data: bytes, meta: bytes = b"",
                          announce_topic: Optional[str] = None,
                          pin: bool = True,

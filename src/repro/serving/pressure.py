@@ -147,7 +147,8 @@ class PressureMonitor:
                  hot_occupancy: float = 0.75, sustain: int = 3,
                  interval: float = 0.5, stale_after: float = 3.0,
                  max_replicas: int = 3, n_slots: int = 8,
-                 page_size: int = 32):
+                 page_size: int = 32,
+                 cold_occupancy: float = 0.15, cold_sustain: int = 6):
         self.node = node
         self.cfg = cfg
         self.fleet = fleet
@@ -158,12 +159,19 @@ class PressureMonitor:
         self.max_replicas = max_replicas
         self.n_slots = n_slots
         self.page_size = page_size
+        #: retirement thresholds: a shard whose aggregate occupancy stays
+        #: below ``cold_occupancy`` for ``cold_sustain`` consecutive
+        #: observations gets its monitor-spawned replica retired (once
+        #: drained) — pressure creates replicas AND takes them back
+        self.cold_occupancy = cold_occupancy
+        self.cold_sustain = cold_sustain
         self.running = True
         self.spawned: List[Any] = []
         self._spawned_shards: set = set()
         self._streak: Dict[int, int] = {}
+        self._cold_streak: Dict[int, int] = {}
         self.stats = {"observations": 0, "hot_observations": 0, "spawned": 0,
-                      "fetch_failures": 0}
+                      "fetch_failures": 0, "retired": 0}
         node.join_crdt_push("serving")
 
     def stop(self) -> None:
@@ -214,6 +222,36 @@ class PressureMonitor:
                         and shard not in self._spawned_shards
                         and self.replica_count(shard) < self.max_replicas):
                     yield from self.spawn_replica(shard)
+            # -- retirement: sustained cold + drained → scale back down
+            for server in list(self.spawned):
+                shard = server.shard_idx
+                if pressure.get(shard, 0.0) <= self.cold_occupancy:
+                    self._cold_streak[shard] = \
+                        self._cold_streak.get(shard, 0) + 1
+                else:
+                    self._cold_streak[shard] = 0
+                eng = server.engine
+                if (self._cold_streak.get(shard, 0) >= self.cold_sustain
+                        and eng.slots_used == 0 and eng.queue_depth == 0):
+                    yield from self.retire_replica(server)
+        return None
+
+    def retire_replica(self, server: Any) -> Generator:
+        """Gracefully take a monitor-spawned replica back out of service:
+        withdraw the DHT provider record, leave the replica ORSet, release
+        the pinned shard params.  The load register is *not* touched — the
+        stopped publisher loop lets it age out, the same passive path that
+        covers crashes.  The shard stays eligible for a future respawn."""
+        shard = server.shard_idx
+        server.alive = False              # drained by precondition: no waiters
+        yield from server.unannounce()
+        self.node.store.orset(replicas_key(self.fleet, shard)).remove(
+            self.node.host.name)
+        self.node.unpin_latest(f"ckpt/{_shard_ckpt_fleet(self.fleet, shard)}")
+        self.spawned.remove(server)
+        self._spawned_shards.discard(shard)
+        self._cold_streak[shard] = 0
+        self.stats["retired"] += 1
         return None
 
     def _pull_plane(self) -> Generator:

@@ -290,6 +290,13 @@ class ShardServer:
         yield from self.node.dht.provide(shard_key(self.fleet, self.shard_idx))
         return None
 
+    def unannounce(self) -> Generator:
+        """Withdraw this replica's DHT provider record (planned retirement
+        — the inverse of :meth:`announce`; routers stop finding it)."""
+        yield from self.node.dht.unprovide(
+            shard_key(self.fleet, self.shard_idx))
+        return None
+
     def stop(self) -> None:
         """Simulate a crash: all subsequent calls fail, and admissions
         parked on the slot queue fail *now* rather than at RPC deadline."""

@@ -243,3 +243,107 @@ def test_publish_fetch_over_mesh():
     assert step == 100
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- sparse parts
+def _topk_view(arr, k):
+    """Reference top-|x| selection: sorted uint32 flat indices + values."""
+    flat = np.asarray(arr, np.float32).ravel()
+    idx = np.sort(np.argpartition(-np.abs(flat), k - 1)[:k]).astype(np.uint32)
+    return idx, flat[idx]
+
+
+def test_sparse_topk_part_roundtrip_exact():
+    """vals=None sparse parts carry raw f32 values: kept positions decode
+    exactly, absent positions decode to zero."""
+    from repro.checkpoint.serial import encode_leaf_meta, encode_sparse_leaf
+
+    rng = np.random.default_rng(11)
+    arr = rng.normal(size=(64, 33)).astype(np.float32)
+    idx, val = _topk_view(arr, 100)
+    raw, enc = encode_sparse_leaf(idx, val, arr.shape)
+    assert enc == {"codec": "topk", "k": 100}
+    got = leaf_from_part(raw, encode_leaf_meta("float32", arr.shape, enc))
+    dense = np.zeros(arr.size, np.float32)
+    dense[idx] = val
+    np.testing.assert_array_equal(got, dense.reshape(arr.shape))
+    # wire cost is 8 bytes/kept element (uint32 idx + f32 val)
+    assert len(raw) == 8 * 100
+
+
+def test_sparse_topk_int8_vals_within_bound():
+    """vals="int8_block" quantizes the kept values through the same
+    block codec dense parts use; error bound holds on kept positions and
+    absent positions stay exactly zero."""
+    from repro.checkpoint.serial import encode_leaf_meta, encode_sparse_leaf
+
+    rng = np.random.default_rng(12)
+    arr = (rng.normal(size=(9000,)) * 3.0).astype(np.float32)
+    idx, val = _topk_view(arr, 4500)
+    raw, enc = encode_sparse_leaf(idx, val, arr.shape, vals="int8_block")
+    assert enc["vals"] == "int8_block"
+    got = leaf_from_part(raw, encode_leaf_meta("float32", arr.shape, enc))
+    mask = np.zeros(arr.size, bool)
+    mask[idx] = True
+    assert (got[~mask] == 0).all()
+    assert (np.abs(got[idx] - val) <= _block_bound(val)).all()
+    assert len(raw) < 0.70 * 8 * 4500        # int8 vals beat raw f32 vals
+
+
+def test_sparse_topk_rejects_malformed():
+    """Peer-supplied sparse payloads: every malformation is a ValueError,
+    never a crash or silent mis-decode."""
+    from repro.checkpoint.serial import encode_leaf_meta, encode_sparse_leaf
+
+    arr = np.arange(50, dtype=np.float32)
+    idx, val = _topk_view(arr, 10)
+    raw, enc = encode_sparse_leaf(idx, val, arr.shape)
+    meta = encode_leaf_meta("float32", arr.shape, enc)
+    # encoder-side: index out of range / length mismatch / bad vals codec
+    with pytest.raises(ValueError):
+        encode_sparse_leaf(np.array([50], np.uint32),
+                           np.array([1.0], np.float32), arr.shape)
+    with pytest.raises(ValueError):
+        encode_sparse_leaf(idx, val[:-1], arr.shape)
+    with pytest.raises(ValueError):
+        encode_sparse_leaf(idx, val, arr.shape, vals="fp4")
+    # decoder-side: k out of range for the leaf
+    bad = encode_leaf_meta("float32", arr.shape,
+                           {"codec": "topk", "k": 51})
+    with pytest.raises(ValueError):
+        leaf_from_part(raw, bad)
+    # truncated payload
+    with pytest.raises(ValueError):
+        leaf_from_part(raw[:-3], meta)
+    # out-of-range index smuggled into a well-formed payload
+    evil_idx = idx.copy()
+    evil_idx[0] = 4_000_000_000
+    evil = np.sort(evil_idx).astype(np.uint32).tobytes() + val.tobytes()
+    with pytest.raises(ValueError):
+        leaf_from_part(evil, meta)
+
+
+def test_local_save_cdc_dedup(tmp_path):
+    """Chunked local checkpoints: a near-duplicate save (one leaf nudged)
+    rewrites only the CDC blocks that actually changed."""
+    _, params = _params()
+    spec = ChunkSpec.cdc(avg_size=16 * 1024)
+    p1 = str(tmp_path / "step10.lck")
+    n1 = save_local(p1, params, spec=spec)
+    back = load_local(p1, like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # nudge one leaf and re-save to the SAME path: the shared block dir
+    # already holds every unchanged CDC chunk, so only the chunks covering
+    # the edit (plus the root manifest) hit the disk
+    edited = jax.tree.map(jnp.copy, params)
+    edited["embed"] = edited["embed"].at[0, 0].add(1.0)
+    n2 = save_local(p1, edited, spec=spec)
+    assert 0 < n2 < 0.3 * n1
+    back2 = load_local(p1, like=edited)
+    np.testing.assert_array_equal(np.asarray(edited["embed"]),
+                                  np.asarray(back2["embed"]))
+    # byte-identical re-save: every block present, only the root rewrites
+    n3 = save_local(p1, edited, spec=spec)
+    assert n3 < 0.01 * n1
